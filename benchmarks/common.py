@@ -1,0 +1,61 @@
+"""Shared benchmark substrate: one trained toy Molecular Transformer on the
+synthetic reaction corpus (USPTO is unavailable offline — DESIGN.md §5),
+cached on disk so the table benchmarks can be run independently."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs.mt import tiny_config
+from repro.data import SyntheticReactionDataset, batched_dataset
+from repro.models import seq2seq as s2s
+from repro.training import Trainer, make_seq2seq_train_step
+
+CACHE = os.path.join(os.path.dirname(__file__), ".bench_mt_{}.msgpack")
+MAX_LEN = 96
+N_TRAIN = 512
+N_TEST = 64
+
+
+def datasets(direction: str = "forward"):
+    train = SyntheticReactionDataset(N_TRAIN, seed=0, direction=direction)
+    test = SyntheticReactionDataset(N_TEST, seed=10_000, direction=direction)
+    return train, test
+
+
+def trained_model(epochs: int = 20, verbose: bool = False,
+                  direction: str = "forward"):
+    """(cfg, params, train_ds, test_ds) — cached across benchmark runs.
+
+    direction='forward' = product prediction (paper Tables 1/2);
+    direction='retro'   = single-step retrosynthesis (paper Tables 3/4).
+    """
+    train_ds, test_ds = datasets(direction)
+    cfg = tiny_config(train_ds.tokenizer.vocab_size, depth=2, d_model=128,
+                      max_len=2 * MAX_LEN)
+    cache = CACHE.format(direction)
+    params0 = s2s.init(jax.random.PRNGKey(0), cfg)
+    if os.path.exists(cache):
+        try:
+            params = load_checkpoint(cache, params_like=params0)["params"]
+            return cfg, params, train_ds, test_ds
+        except ValueError:
+            os.remove(cache)  # stale cache from an older config
+    step = make_seq2seq_train_step(cfg, lr=1e-3, label_smoothing=0.0)
+    trainer = Trainer(cfg, params0, step)
+
+    def batches():
+        for _ in range(epochs):
+            yield from batched_dataset(train_ds.tokenizer, train_ds.pairs(),
+                                       24, MAX_LEN, MAX_LEN)
+
+    trainer.fit(batches(), log_every=100, verbose=verbose)
+    save_checkpoint(cache, params=trainer.params)
+    return cfg, trainer.params, train_ds, test_ds
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,80 @@
+"""Roofline report: reads the dry-run JSONL records (produced by
+``repro.launch.dryrun --out``) and prints the per-(arch × shape × mesh)
+three-term roofline table for EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_row
+
+import glob as _glob
+
+DEFAULT_FILES = tuple(
+    ["dryrun_baseline.jsonl", "dryrun_multipod.jsonl", "dryrun_mt.jsonl"]
+    + sorted(_glob.glob("dryrun_perf_*.jsonl")))
+
+
+def load_records(paths=DEFAULT_FILES) -> list[dict]:
+    recs = []
+    for p in paths:
+        if os.path.exists(p):
+            with open(p) as f:
+                for line in f:
+                    recs.append(json.loads(line))
+    return recs
+
+
+def run(paths=DEFAULT_FILES) -> list[str]:
+    rows = []
+    for r in load_records(paths):
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            rows.append(csv_row(name, 0.0, f"skipped:{r['reason'][:40]}"))
+            continue
+        if r["status"] != "ok":
+            rows.append(csv_row(name, 0.0, f"FAILED:{r['error'][:60]}"))
+            continue
+        t = r["roofline"]
+        step_us = max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6
+        rows.append(csv_row(
+            name, step_us,
+            f"compute={t['compute_s']:.3e}s;memory={t['memory_s']:.3e}s;"
+            f"collective={t['collective_s']:.3e}s;"
+            f"bottleneck={t['bottleneck']};"
+            f"useful_flops={r['useful_flops_ratio']:.2f};"
+            f"temp_gb={r['memory']['temp_bytes']/1e9:.1f}"))
+    if not rows:
+        rows.append(csv_row("roofline/missing", 0.0,
+                            "run repro.launch.dryrun --out first"))
+    return rows
+
+
+def markdown_table(paths=DEFAULT_FILES) -> str:
+    """The EXPERIMENTS.md §Roofline table."""
+    recs = [r for r in load_records(paths)]
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s | "
+             "bottleneck | 6ND/HLO | temp GB/chip |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                         f"| — | skipped: {r['reason'][:48]} | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAILED | | | {r['error'][:48]} | | |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+            f"| {t['collective_s']:.3e} | **{t['bottleneck']}** "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['memory']['temp_bytes']/1e9:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

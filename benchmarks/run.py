@@ -1,0 +1,48 @@
+"""Benchmark driver — one function per paper table (+ the acceptance sweep
+and the dry-run roofline report). Prints ``name,us_per_call,derived`` CSV.
+
+  table1  MT top-k accuracy with beam-5        (paper Table 1)
+  table2  greedy vs speculative greedy         (paper Table 2)
+  table3  BS vs SBS wall time, n in {5,10,25}  (paper Table 3)
+  table4  BS vs SBS top-N accuracy             (paper Table 4)
+  acceptance  draft acceptance-rate sweep      (paper Sec 3.1 / Fig. 2)
+  roofline    dry-run roofline terms           (EXPERIMENTS.md Roofline)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (acceptance_sweep, roofline, table1_accuracy,
+                            table2_speculative_greedy, table3_speculative_beam,
+                            table4_beam_accuracy)
+    from benchmarks.common import trained_model
+
+    only = sys.argv[1] if len(sys.argv) > 1 else ""
+    t0 = time.time()
+    trained_model(verbose=True)  # train/load the shared toy MT once
+    print(f"# shared model ready in {time.time()-t0:.0f}s", file=sys.stderr)
+
+    suites = {
+        "table1": table1_accuracy.run,
+        "table2": table2_speculative_greedy.run,
+        "table3": table3_speculative_beam.run,
+        "table4": table4_beam_accuracy.run,
+        "acceptance": acceptance_sweep.run,
+        "roofline": roofline.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and only != name:
+            continue
+        t = time.time()
+        for row in fn():
+            print(row, flush=True)
+        print(f"# {name} done in {time.time()-t:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Table 3: single-step retrosynthesis wall time with standard beam
+search (BS) vs speculative beam search (SBS, DL=10) vs the SBS DL=0 control,
+for beam widths n ∈ {5, 10, 25}, batch size 1."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import csv_row, trained_model
+from repro.serving import EngineConfig, ReactionEngine
+
+
+def _run(params, cfg, tok, queries, mode, n_beams, dl):
+    eng = ReactionEngine(params, cfg, tok,
+                         EngineConfig(mode=mode, n_beams=n_beams,
+                                      draft_len=dl, n_drafts=16, max_new=72,
+                                      max_src=96))
+    eng.predict_topn(queries[0])  # jit warmup
+    t0 = time.time()
+    preds = [eng.predict_topn(q) for q in queries]
+    wall = time.time() - t0
+    calls = sum(p.n_calls for p in preds)
+    return wall, calls, preds
+
+
+def run(n_queries: int = 10) -> list[str]:
+    # retrosynthesis direction: product -> reactants (a model trained on the
+    # retro task, as in the paper's USPTO-50K setup)
+    cfg, params, train_ds, test_ds = trained_model(direction="retro")
+    tok = train_ds.tokenizer
+    queries = [test_ds.pair(i)[0] for i in range(n_queries)]
+    rows = []
+    for n in (5, 10, 25):
+        t_bs, c_bs, _ = _run(params, cfg, tok, queries, "beam", n, 0)
+        t_sbs, c_sbs, _ = _run(params, cfg, tok, queries,
+                               "speculative_beam", n, 10)
+        t_sbs0, c_sbs0, _ = _run(params, cfg, tok, queries,
+                                 "speculative_beam", n, 0)
+        rows.append(csv_row(f"table3/bs_n{n}", t_bs / n_queries * 1e6,
+                            f"calls={c_bs}"))
+        rows.append(csv_row(
+            f"table3/sbs_dl10_n{n}", t_sbs / n_queries * 1e6,
+            f"speedup={t_bs / t_sbs:.2f}x;call_reduction="
+            f"{c_bs / max(c_sbs, 1):.2f}x"))
+        rows.append(csv_row(
+            f"table3/sbs_dl0_n{n}", t_sbs0 / n_queries * 1e6,
+            f"speedup={t_bs / t_sbs0:.2f}x;calls={c_sbs0}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,52 @@
+"""Paper Table 4: top-N accuracy of beam search vs speculative beam search —
+the accuracy-neutrality claim for SBS. The paper reports identical top-1..10
+and a couple-hundredths difference at top-25; we report exact top-k agreement
+between BS and SBS candidate lists on the test set."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, trained_model
+from repro.serving import EngineConfig, ReactionEngine
+
+
+def run(n_queries: int = 16, n_beams: int = 5) -> list[str]:
+    # retrosynthesis, as in the paper's Table 4 (USPTO-50K)
+    cfg, params, train_ds, test_ds = trained_model(direction="retro")
+    tok = train_ds.tokenizer
+    bs = ReactionEngine(params, cfg, tok,
+                        EngineConfig(mode="beam", n_beams=n_beams,
+                                     max_new=72, max_src=96))
+    sbs = ReactionEngine(params, cfg, tok,
+                         EngineConfig(mode="speculative_beam", n_beams=n_beams,
+                                      draft_len=10, n_drafts=16, max_new=72,
+                                      max_src=96))
+    hits_bs = np.zeros(n_beams)
+    hits_sbs = np.zeros(n_beams)
+    top1_agree = 0
+    t0 = time.time()
+    for i in range(n_queries):
+        src, tgt = test_ds.pair(i)
+        p_bs = bs.predict_topn(src)
+        p_sbs = sbs.predict_topn(src)
+        top1_agree += int(p_bs.smiles[0] == p_sbs.smiles[0])
+        for k in range(n_beams):
+            hits_bs[k] += int(tgt in p_bs.smiles[: k + 1])
+            hits_sbs[k] += int(tgt in p_sbs.smiles[: k + 1])
+    wall = time.time() - t0
+    rows = []
+    for k in (1, 3, 5):
+        rows.append(csv_row(
+            f"table4/top{k}", wall / n_queries * 1e6,
+            f"bs={hits_bs[k-1]/n_queries*100:.1f}%;"
+            f"sbs={hits_sbs[k-1]/n_queries*100:.1f}%"))
+    rows.append(csv_row("table4/top1_agreement", wall / n_queries * 1e6,
+                        f"{top1_agree / n_queries * 100:.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,70 @@
+"""Quickstart: train a toy Molecular Transformer on synthetic reactions and
+accelerate its inference with the paper's speculative decoding.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import jax
+
+from repro.configs.mt import tiny_config
+from repro.data import SyntheticReactionDataset, batched_dataset
+from repro.models import seq2seq as s2s
+from repro.serving import EngineConfig, ReactionEngine
+from repro.training import Trainer, make_seq2seq_train_step
+
+
+def main() -> None:
+    # 1. data: synthetic reactions whose products share long substrings with
+    #    the reactants — the property the paper's drafting exploits (Fig. 2)
+    ds = SyntheticReactionDataset(384, seed=0)
+    print(f"dataset: {len(ds)} reactions, vocab={ds.tokenizer.vocab_size}")
+    src, tgt = ds.pair(0)
+    print(f"example:  {src}  >>  {tgt}\n")
+
+    # 2. train the Molecular Transformer (tiny config for CPU)
+    cfg = tiny_config(ds.tokenizer.vocab_size, depth=2, d_model=128,
+                      max_len=192)
+    params = s2s.init(jax.random.PRNGKey(0), cfg)
+    trainer = Trainer(cfg, params,
+                      make_seq2seq_train_step(cfg, lr=1e-3,
+                                              label_smoothing=0.0))
+
+    def batches(epochs=18):
+        for _ in range(epochs):
+            yield from batched_dataset(ds.tokenizer, ds.pairs(), 24, 96, 96)
+
+    print("training ...")
+    trainer.fit(batches(), log_every=96)
+
+    # 3. serve: standard greedy vs the paper's speculative greedy
+    queries = [ds.pair(i)[0] for i in range(8)]
+    greedy = ReactionEngine(trainer.params, cfg, ds.tokenizer,
+                            EngineConfig(mode="greedy", max_new=72))
+    spec = ReactionEngine(trainer.params, cfg, ds.tokenizer,
+                          EngineConfig(mode="speculative", draft_len=10,
+                                       n_drafts=24, max_new=72))
+    for eng in (greedy, spec):  # jit warmup
+        eng.predict(queries[:1])
+    t0 = time.time()
+    p_g = [greedy.predict([q])[0] for q in queries]
+    t_g = time.time() - t0
+    t0 = time.time()
+    p_s = [spec.predict([q])[0] for q in queries]
+    t_s = time.time() - t0
+
+    calls_g = sum(p.n_calls for p in p_g)
+    calls_s = sum(p.n_calls for p in p_s)
+    same = all(a.smiles[0] == b.smiles[0] for a, b in zip(p_g, p_s))
+    acc = sum(p.acceptance_rate for p in p_s) / len(p_s)
+    print(f"\ngreedy      : {t_g:.2f}s, {calls_g} decoder calls")
+    print(f"speculative : {t_s:.2f}s, {calls_s} decoder calls "
+          f"({calls_g/calls_s:.2f}x fewer), acceptance={acc:.2f}")
+    print(f"outputs identical: {same}   <- the paper's accuracy-neutrality")
+    print(f"\nprediction for query 0: {p_s[0].smiles[0]}")
+    print(f"ground truth          : {ds.pair(0)[1]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""repro: a multi-pod JAX framework for speculative decoding of
+string-generation chemical reaction models (Andronov et al., 2024).
+
+Layers:
+  - ``repro.core``      : the paper's contribution — source-copy drafting,
+                          speculative greedy decoding, speculative beam search.
+  - ``repro.models``    : transformer substrates (seq2seq Molecular Transformer,
+                          decoder-only GQA LMs, MoE, Mamba, RWKV6, encoder-only).
+  - ``repro.kernels``   : Pallas TPU kernels for the compute hot spots.
+  - ``repro.data``      : SMILES tokenizer + synthetic reaction pipeline.
+  - ``repro.training``  : loss/optimizer/trainer.
+  - ``repro.serving``   : batched serving engine with speculative decoding.
+  - ``repro.sharding``  : logical-axis sharding rules.
+  - ``repro.configs``   : assigned architecture registry.
+  - ``repro.launch``    : production mesh, multi-pod dry-run, drivers.
+"""
+
+__version__ = "1.0.0"

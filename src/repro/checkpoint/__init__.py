@@ -1,0 +1,3 @@
+from repro.checkpoint.io import load_pytree, save_pytree, load_checkpoint, save_checkpoint
+
+__all__ = ["save_pytree", "load_pytree", "save_checkpoint", "load_checkpoint"]

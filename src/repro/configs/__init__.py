@@ -1,0 +1,30 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_config(arch_id, reduced=True)``.
+
+Importing this package registers the ten assigned architectures plus the
+paper's own Molecular Transformer configs (mt_product, mt_retro).
+"""
+
+from repro.configs.base import (
+    MambaConfig, ModelConfig, MoEConfig, RWKVConfig, get_config, list_archs,
+    register,
+)
+
+# Registration side-effects:
+from repro.configs import (  # noqa: F401
+    command_r_35b,
+    qwen3_8b,
+    llama32_vision_11b,
+    jamba_v01_52b,
+    llama4_maverick_400b,
+    starcoder2_15b,
+    smollm_135m,
+    rwkv6_1p6b,
+    phi35_moe_42b,
+    hubert_xlarge,
+    mt,
+)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MambaConfig", "RWKVConfig",
+    "get_config", "list_archs", "register",
+]

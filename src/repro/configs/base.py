@@ -1,0 +1,123 @@
+"""Model configuration dataclasses + registry.
+
+Every assigned architecture gets one module in ``repro/configs/`` exporting
+``CONFIG`` (the exact full-size spec, cited) and ``reduced()`` (a tiny variant
+of the same family for CPU smoke tests: ≤2 pattern repeats, d_model ≤ 512,
+≤4 experts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden width
+    capacity_factor: float = 1.25
+    shared_expert: bool = False    # Llama-4-style always-on shared expert
+    router_z_loss: float = 1e-3
+    aux_loss_weight: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2                # d_inner = expand * d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64             # RWKV6 head size (Finch uses 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense|moe|ssm|hybrid|vlm|audio|seq2seq
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    qk_norm: bool = False          # Qwen3-style per-head RMSNorm on q/k
+    use_bias: bool = False
+    gated_ffn: bool = True         # SwiGLU (llama family) vs plain GELU
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    pos: str = "rope"              # rope | sinusoidal | none
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    causal: bool = True            # False -> encoder-only (bidirectional)
+
+    # Repeating layer-block pattern, tiled to n_layers. Entries:
+    #   "attn"  self-attention + FFN
+    #   "xattn" cross-attention (to frontend memory) + FFN   [VLM]
+    #   "mamba" Mamba mixer + FFN                            [hybrid/ssm]
+    #   "rwkv"  RWKV6 time-mix + channel-mix                 [ssm]
+    layer_pattern: tuple[str, ...] = ("attn",)
+    # FFN kind per pattern position: "dense" | "moe"; tiled with layer_pattern.
+    ffn_pattern: tuple[str, ...] = ("dense",)
+
+    moe: MoEConfig | None = None
+    mamba: MambaConfig | None = None
+    rwkv: RWKVConfig | None = None
+
+    # long-context: 0 = full attention; >0 = sliding-window length for decode
+    # (the beyond-paper variant that lets dense archs run long_500k).
+    sliding_window: int = 0
+
+    # VLM/audio frontend stub: number of memory tokens + their width.
+    memory_tokens: int = 0
+    memory_dim: int = 0
+
+    # seq2seq (Molecular Transformer): encoder depth (decoder = n_layers).
+    n_encoder_layers: int = 0
+    max_len: int = 1024            # positional table / buffer default
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        assert self.n_layers % len(self.layer_pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not a multiple of "
+            f"pattern length {len(self.layer_pattern)}"
+        )
+        assert len(self.ffn_pattern) == len(self.layer_pattern)
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0
+
+    @property
+    def n_repeats(self) -> int:
+        return self.n_layers // len(self.layer_pattern)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+# ---------------------------------------------------------------------------
+# Registry
+
+_REGISTRY: dict[str, tuple[Callable[[], ModelConfig], Callable[[], ModelConfig]]] = {}
+
+
+def register(arch_id: str, full: Callable[[], ModelConfig], reduced: Callable[[], ModelConfig]):
+    _REGISTRY[arch_id] = (full, reduced)
+
+
+def get_config(arch_id: str, *, reduced: bool = False) -> ModelConfig:
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_REGISTRY)}")
+    full, red = _REGISTRY[arch_id]
+    return red() if reduced else full()
+
+
+def list_archs() -> list[str]:
+    return sorted(_REGISTRY)

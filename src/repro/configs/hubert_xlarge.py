@@ -1,0 +1,34 @@
+"""hubert-xlarge [audio] — 48L d_model=1280 16H (kv=16, MHA) d_ff=5120
+vocab=504 — encoder-only, wav2vec2-style backbone. [arXiv:2106.07447]
+
+Encoder-only (bidirectional, causal=False): no autoregressive decode step
+exists, so decode_32k / long_500k are skipped (DESIGN.md §4) and the paper's
+speculative decoding is inapplicable to this architecture. The mel/conv
+feature-extractor frontend is a stub: ``input_specs()`` supplies precomputed
+frame embeddings (B, T, d_model); vocab 504 is the k-means target codebook.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+
+def CONFIG() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge", family="audio",
+        n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16,
+        d_ff=5120, vocab_size=504,
+        use_bias=True, norm="layernorm", gated_ffn=False,
+        pos="none", causal=False,
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge-reduced", family="audio",
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=4,
+        d_ff=512, vocab_size=504,
+        use_bias=True, norm="layernorm", gated_ffn=False,
+        pos="none", causal=False,
+    )
+
+
+register("hubert-xlarge", CONFIG, reduced)

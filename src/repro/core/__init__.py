@@ -1,0 +1,23 @@
+"""The paper's primary contribution: speculative decoding for SMILES
+generators by copying query substrings into the target (Andronov et al. 2024).
+
+  drafting     — source-copy / prompt-lookup draft extraction (§2.1, Fig. 2)
+  speculative  — speculative greedy decoding (accuracy-neutral, Table 2)
+  spec_beam    — speculative beam search, Algorithm 1 / Appendix B (Table 3)
+  greedy/beam  — the standard decoding baselines the paper compares against
+  handles      — model-agnostic decoder contract (seq2seq MT + decoder-only)
+"""
+
+from repro.core.drafting import batch_drafts, extract_drafts, prompt_lookup_drafts
+from repro.core.handles import DecoderHandle, seq2seq_handle, transformer_handle
+from repro.core.greedy import greedy_decode
+from repro.core.speculative import speculative_greedy_decode
+from repro.core.beam import beam_search
+from repro.core.spec_beam import speculative_beam_search
+
+__all__ = [
+    "batch_drafts", "extract_drafts", "prompt_lookup_drafts",
+    "DecoderHandle", "seq2seq_handle", "transformer_handle",
+    "greedy_decode", "speculative_greedy_decode",
+    "beam_search", "speculative_beam_search",
+]

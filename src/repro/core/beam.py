@@ -1,0 +1,80 @@
+"""Standard beam search — the paper's Table 3/4 baseline.
+
+Single query (B=1 semantics, the paper's serving regime), n beams, fixed
+shapes, EOS as an absorbing state with no length penalty (the paper keeps
+plain sequence probabilities). Returns the n best sequences by cumulative
+log-probability, sorted descending.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.handles import DecoderHandle
+from repro.core.tree_batch import expand_batch, gather_rows
+
+_NEG = -1e30
+
+
+class BeamResult(NamedTuple):
+    tokens: jnp.ndarray     # (n, max_new)
+    lengths: jnp.ndarray    # (n,)
+    logprobs: jnp.ndarray   # (n,)
+    n_calls: jnp.ndarray    # ()
+
+
+def beam_search(handle: DecoderHandle, cache: Any, bos_token: int,
+                start_pos: int, *, n_beams: int, max_new: int, eos_id: int,
+                pad_id: int = 0) -> BeamResult:
+    """``cache`` is a single-row (B=1) cache (e.g. after seq2seq memory
+    precompute); it is expanded to n_beams rows internally."""
+    n = n_beams
+    V = handle.vocab_size
+    cache = expand_batch(cache, n)
+    out = jnp.full((n, max_new), pad_id, jnp.int32)
+    # beam 0 active, others start at -inf so step 1 fans out from BOS
+    logp = jnp.where(jnp.arange(n) == 0, 0.0, _NEG).astype(jnp.float32)
+    last = jnp.full((n,), bos_token, jnp.int32)
+    pos = jnp.full((n,), start_pos, jnp.int32)
+    finished = jnp.zeros((n,), bool)
+
+    def cond(state):
+        i, _, _, _, _, _, finished = state
+        return (i < max_new) & ~jnp.all(finished)
+
+    def body(state):
+        i, out, logp, last, pos, cache, finished = state
+        logits, cache = handle.decode_step(cache, last[:, None], pos[:, None])
+        cache = handle.commit_cache(cache, jnp.ones((n,), jnp.int32))
+        lp = jax.nn.log_softmax(logits[:, 0, :].astype(jnp.float32), axis=-1)
+        lp = lp.at[:, pad_id].set(_NEG)  # pad is never a real emission
+        # absorbing EOS: finished beams may only "emit" pad with logp 0
+        pad_only = jnp.full((V,), _NEG).at[pad_id].set(0.0)
+        lp = jnp.where(finished[:, None], pad_only[None, :], lp)
+        cand = logp[:, None] + lp                              # (n, V)
+        top_lp, flat_idx = jax.lax.top_k(cand.reshape(-1), n)
+        parent = (flat_idx // V).astype(jnp.int32)
+        token = (flat_idx % V).astype(jnp.int32)
+
+        out = jnp.take(out, parent, axis=0)
+        was_finished = jnp.take(finished, parent)
+        write_tok = jnp.where(was_finished, pad_id, token)
+        out = out.at[:, i].set(write_tok)
+        logp = top_lp
+        finished = was_finished | (token == eos_id)
+        last = jnp.where(was_finished, jnp.take(last, parent), token)
+        pos = jnp.where(was_finished, jnp.take(pos, parent),
+                        jnp.take(pos, parent) + 1)
+        cache = gather_rows(cache, parent)
+        return (i + 1, out, logp, last, pos, cache, finished)
+
+    i, out, logp, _, _, _, finished = jax.lax.while_loop(
+        cond, body, (0, out, logp, last, pos, cache, finished))
+    order = jnp.argsort(-logp)
+    out = jnp.take(out, order, axis=0)
+    logp = jnp.take(logp, order)
+    lengths = jnp.sum((out != pad_id).astype(jnp.int32), axis=1)
+    return BeamResult(tokens=out, lengths=lengths, logprobs=logp, n_calls=i)

@@ -1,0 +1,69 @@
+"""Source-copy drafting (the paper's §2.1 / Figure 2).
+
+Draft sequences are substrings of the *query* token sequence, extracted with
+a sliding window of length ``draft_len`` and stride 1, capped at ``n_drafts``
+(the paper's N_d ≈ 25). No draft model, no extra heads: the cost of drafting
+is negligible next to a decoder forward pass.
+
+For decoder-only LMs the same function applied to the prompt is
+"prompt-lookup" drafting — the decoder-only analogue used for the assigned
+architectures (DESIGN.md §4).
+
+``dilations``: the paper (§3.1) suggests adding source subsequences "dilated
+by one token" to raise the acceptance rate; ``dilations=(1, 2)`` adds
+every-other-token windows. This is exposed as an option and measured in
+``benchmarks/acceptance_sweep.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def extract_drafts(
+    tokens: np.ndarray | list[int],
+    draft_len: int,
+    n_drafts: int,
+    *,
+    pad_id: int = 0,
+    dilations: tuple[int, ...] = (1,),
+) -> tuple[np.ndarray, np.ndarray]:
+    """Sliding-window substrings of ``tokens`` (pad tokens excluded).
+
+    Returns (drafts (n_drafts, draft_len) int32, mask (n_drafts,) bool).
+    Short/missing windows are padded with ``pad_id`` and masked out.
+    """
+    toks = np.asarray(tokens, dtype=np.int32)
+    toks = toks[toks != pad_id]
+    windows: list[np.ndarray] = []
+    for d in dilations:
+        span = (draft_len - 1) * d + 1
+        n_win = max(0, len(toks) - span + 1)
+        for s in range(n_win):
+            windows.append(toks[s : s + span : d])
+        if n_win == 0 and len(toks) > 0 and d == 1:
+            w = toks[:draft_len]
+            windows.append(np.pad(w, (0, draft_len - len(w)),
+                                  constant_values=pad_id))
+    drafts = np.full((n_drafts, draft_len), pad_id, dtype=np.int32)
+    mask = np.zeros((n_drafts,), dtype=bool)
+    for i, w in enumerate(windows[:n_drafts]):
+        drafts[i, : len(w)] = w
+        mask[i] = True
+    return drafts, mask
+
+
+def prompt_lookup_drafts(prompt_tokens, draft_len: int, n_drafts: int, *,
+                         pad_id: int = 0,
+                         dilations: tuple[int, ...] = (1,)):
+    """Decoder-only analogue: drafts are substrings of the prompt."""
+    return extract_drafts(prompt_tokens, draft_len, n_drafts, pad_id=pad_id,
+                          dilations=dilations)
+
+
+def batch_drafts(token_rows: np.ndarray, draft_len: int, n_drafts: int, *,
+                 pad_id: int = 0, dilations: tuple[int, ...] = (1,)):
+    """Vectorized over a batch of query rows -> (B, n_drafts, DL), (B, n_drafts)."""
+    ds, ms = zip(*(extract_drafts(r, draft_len, n_drafts, pad_id=pad_id,
+                                  dilations=dilations) for r in token_rows))
+    return np.stack(ds), np.stack(ms)

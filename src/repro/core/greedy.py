@@ -1,0 +1,47 @@
+"""Standard token-by-token greedy decoding (the paper's Table 2 baseline)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.handles import DecoderHandle
+
+
+class GreedyResult(NamedTuple):
+    tokens: jnp.ndarray     # (B, max_new) generated tokens (pad after EOS)
+    lengths: jnp.ndarray    # (B,) generated token counts (incl. EOS)
+    n_calls: jnp.ndarray    # () decoder forward passes
+
+
+def greedy_decode(handle: DecoderHandle, cache: Any, last_token: jnp.ndarray,
+                  start_pos: jnp.ndarray, *, max_new: int, eos_id: int,
+                  pad_id: int = 0) -> GreedyResult:
+    """last_token: (B,) last committed (unprocessed) token; start_pos: (B,)
+    its absolute position. One model call per generated token."""
+    B = last_token.shape[0]
+    out = jnp.full((B, max_new), pad_id, jnp.int32)
+
+    def cond(state):
+        i, _, _, _, _, finished = state
+        return (i < max_new) & ~jnp.all(finished)
+
+    def body(state):
+        i, out, last, pos, cache, finished = state
+        logits, cache = handle.decode_step(cache, last[:, None], pos[:, None])
+        cache = handle.commit_cache(cache, jnp.ones((B,), jnp.int32))
+        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        nxt = jnp.where(finished, pad_id, nxt)
+        out = out.at[:, i].set(nxt)
+        new_finished = finished | (nxt == eos_id)
+        last = jnp.where(finished, last, nxt)
+        pos = jnp.where(finished, pos, pos + 1)
+        return (i + 1, out, last, pos, cache, new_finished)
+
+    i, out, _, _, _, finished = jax.lax.while_loop(
+        cond, body, (0, out, last_token, start_pos, cache,
+                     jnp.zeros((B,), bool)))
+    gen = jnp.sum((out != pad_id).astype(jnp.int32), axis=1)
+    return GreedyResult(tokens=out, lengths=gen, n_calls=i)

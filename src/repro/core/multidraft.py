@@ -1,0 +1,123 @@
+"""Single-pass multi-draft speculative greedy decoding (beyond-paper).
+
+The paper's verify pass inflates the effective batch to B·N_d (its §3.3
+limitation: every draft row re-reads the whole KV cache and params). Here
+all N_d drafts ride ONE row per sequence — T_local = 1 + N_d·DL fed tokens
+under a segmented attention mask — so cache/param reads amortize over all
+drafts (EXPERIMENTS.md §Perf, pair C extension).
+
+Output-equivalence to the expanded-batch speculative decoder (and therefore
+to plain greedy) is property-tested in tests/test_multidraft.py.
+Attention-family architectures only (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.speculative import SpeculativeResult, _accept_lengths
+from repro.models import transformer as tr
+
+
+def build_local_mask(n_drafts: int, draft_len: int) -> np.ndarray:
+    """(T, T) segment mask, T = 1 + n_drafts·draft_len: token 0 (the last
+    committed token) is visible to everyone; draft token (j, i) additionally
+    sees its own segment's prefix."""
+    T = 1 + n_drafts * draft_len
+    m = np.zeros((T, T), dtype=bool)
+    m[:, 0] = True
+    for j in range(n_drafts):
+        s = 1 + j * draft_len
+        for i in range(draft_len):
+            m[s + i, s : s + i + 1] = True
+    return m
+
+
+def multidraft_speculative_decode(
+    params, cfg: ModelConfig, cache, last_token, start_pos, drafts,
+    draft_mask, *, max_new: int, eos_id: int, pad_id: int = 0,
+    memory_mask=None,
+) -> SpeculativeResult:
+    """Same contract as ``speculative_greedy_decode`` but one decoder row
+    per sequence. drafts: (B, N_d, DL)."""
+    B, N_d, DL = drafts.shape
+    T = 1 + N_d * DL
+    local_mask = jnp.asarray(build_local_mask(N_d, DL))
+    out = jnp.full((B, max_new), pad_id, jnp.int32)
+    rel = jnp.arange(DL + 1, dtype=jnp.int32)
+    drafts_flat = drafts.reshape(B, N_d * DL)
+    # logits row layout: index 0 predicts pos+1 from last_tok; index
+    # 1 + j*DL + i predicts the token after draft j's prefix i+1.
+    seg_off = 1 + jnp.arange(N_d, dtype=jnp.int32)[:, None] * DL  # (N_d, 1)
+
+    def cond(state):
+        _, _, _, _, finished, n_out, _ = state
+        return ~jnp.all(finished) & jnp.any(n_out < max_new)
+
+    def body(state):
+        out, last, pos, cache, finished, n_out, stats = state
+        n_calls, n_accepted = stats
+
+        toks = jnp.concatenate([last[:, None], drafts_flat], axis=1)
+        d_pos = jnp.tile(pos[:, None] + 1 + rel[None, :-1], (1, N_d))
+        positions = jnp.concatenate([pos[:, None], d_pos], axis=1)
+        logits, local_kv = tr.multidraft_verify_step(
+            params, cfg, cache, toks, positions, local_mask,
+            memory_mask=memory_mask)
+        greedy_all = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, T)
+
+        # per-draft greedy tokens at prefix lengths 0..DL:
+        # index 0 for length 0, then seg j index i for length i+1
+        idx = jnp.concatenate(
+            [jnp.zeros((N_d, 1), jnp.int32), seg_off + rel[None, :-1]],
+            axis=1)                                                 # (N_d, DL+1)
+        greedy_tok = greedy_all[:, idx]                             # (B,N_d,DL+1)
+        n_acc = _accept_lengths(greedy_tok, drafts, draft_mask)
+        best = jnp.argmax(n_acc, axis=-1).astype(jnp.int32)
+        n_acc_b = jnp.take_along_axis(n_acc, best[:, None], axis=1)[:, 0]
+        new_toks = jnp.take_along_axis(
+            greedy_tok, best[:, None, None], axis=1)[:, 0]          # (B,DL+1)
+
+        within = rel[None, :] <= n_acc_b[:, None]
+        is_eos = (new_toks == eos_id) & within
+        any_eos = jnp.any(is_eos, axis=1)
+        first_eos = jnp.argmax(is_eos, axis=1)
+        n_prop = jnp.where(any_eos, first_eos + 1, n_acc_b + 1)
+        budget = max_new - n_out
+        n_app = jnp.where(finished, 0, jnp.minimum(n_prop, budget))
+        hit_eos = any_eos & (first_eos + 1 <= budget) & ~finished
+
+        write = rel[None, :] < n_app[:, None]
+        w_idx = jnp.where(write, n_out[:, None] + rel[None, :], max_new)
+        out = out.at[jnp.arange(B)[:, None], w_idx].set(new_toks, mode="drop")
+
+        # commit the winner's accepted K/V (n_keep = n_app fed tokens:
+        # last_tok + the n_app-1 accepted draft tokens... n_app tokens total
+        # starting at the fed last_tok position)
+        cache = tr.commit_multidraft(cfg, cache, local_kv, best,
+                                     jnp.maximum(n_app - 1, 0), pos,
+                                     draft_len=DL)
+
+        last_idx = jnp.clip(n_app - 1, 0, DL)
+        new_last = jnp.take_along_axis(new_toks, last_idx[:, None], axis=1)[:, 0]
+        last = jnp.where(n_app > 0, new_last, last)
+        pos = pos + n_app
+        n_out = n_out + n_app
+        finished = finished | hit_eos | (n_out >= max_new)
+        acc_used = jnp.minimum(n_acc_b, n_app)
+        return (out, last, pos, cache, finished, n_out,
+                (n_calls + 1, n_accepted + acc_used))
+
+    init = (out, last_token, start_pos, cache, jnp.zeros((B,), bool),
+            jnp.zeros((B,), jnp.int32),
+            (jnp.int32(0), jnp.zeros((B,), jnp.int32)))
+    out, _, _, _, _, n_out, (n_calls, n_accepted) = jax.lax.while_loop(
+        cond, body, init)
+    rate = n_accepted / jnp.maximum(n_out, 1)
+    return SpeculativeResult(tokens=out, lengths=n_out, n_calls=n_calls,
+                             accepted_tokens=n_accepted, acceptance_rate=rate)

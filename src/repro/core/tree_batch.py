@@ -1,0 +1,46 @@
+"""Pytree helpers for draft-expanded caches.
+
+Model caches store batch on axis 1 (axis 0 is the scan-repeat dim), so the
+draft expansion of the paper's "effective batch" (B -> B*N_d) and the
+post-verification winner sync are pytree maps over axis 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expand_batch(cache, n: int):
+    """Tile batch axis 1: (R, B, ...) -> (R, B*n, ...) with row b repeated n×."""
+
+    def one(a):
+        rep = jnp.repeat(a, n, axis=1)
+        return rep
+
+    return jax.tree_util.tree_map(one, cache)
+
+
+def sync_winner(cache, best_idx: jnp.ndarray, n: int):
+    """After verification: broadcast the winning draft-row's cache to all n
+    rows of each sequence. best_idx: (B,) winner draft index per sequence.
+    Leaves: (R, B*n, ...) viewed as (R, B, n, ...)."""
+
+    def one(a):
+        R, Bn = a.shape[:2]
+        B = Bn // n
+        v = a.reshape(R, B, n, *a.shape[2:])
+        idx = best_idx.reshape(1, B, 1, *((1,) * (a.ndim - 2))).astype(jnp.int32)
+        win = jnp.take_along_axis(v, idx, axis=2)          # (R, B, 1, ...)
+        return jnp.broadcast_to(win, v.shape).reshape(a.shape)
+
+    return jax.tree_util.tree_map(one, cache)
+
+
+def gather_rows(cache, src_rows: jnp.ndarray):
+    """Reorder batch rows: new_row[i] = old_row[src_rows[i]] (axis 1)."""
+
+    def one(a):
+        return jnp.take(a, src_rows.astype(jnp.int32), axis=1)
+
+    return jax.tree_util.tree_map(one, cache)

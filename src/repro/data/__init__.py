@@ -1,0 +1,12 @@
+from repro.data.tokenizer import SmilesTokenizer, ATOMWISE_PATTERN
+from repro.data.synthetic import SyntheticReactionDataset, make_reaction
+from repro.data.pipeline import padded_batch, batched_dataset
+
+__all__ = [
+    "SmilesTokenizer",
+    "ATOMWISE_PATTERN",
+    "SyntheticReactionDataset",
+    "make_reaction",
+    "padded_batch",
+    "batched_dataset",
+]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  flash_attention  — blocked causal/windowed attention (prefill / training)
+  decode_gqa       — GQA decode attention over a long KV cache; the verify
+                     pass of speculative decoding feeds DL+1 query rows
+  draft_verify     — the paper's accept-op fused: blocked vocab argmax +
+                     draft prefix-match, so (B*N_d, DL+1, V) logits reduce
+                     on-chip instead of round-tripping HBM
+
+Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), <name>/ops.py (jit-able wrapper with padding/reshapes), and
+<name>/ref.py (pure-jnp oracle). CPU validation runs interpret=True;
+the TPU tiles are MXU-aligned (128) where shapes allow.
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.decode_gqa.ops import decode_gqa_attention
+
+__all__ = ["decode_gqa_attention"]

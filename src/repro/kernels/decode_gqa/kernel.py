@@ -1,0 +1,102 @@
+"""GQA decode attention over a long KV cache — the speculative-verify
+hot spot (DL+1 query rows per sequence against S cached keys).
+
+TPU adaptation of the paper's GPU verify pass: instead of inflating the
+batch and re-reading the KV cache once per query row, the q-head group of
+each KV head rides the *sublane* dimension — all T*G query rows are scored
+against each streamed (bk, hd) KV tile in one MXU matmul, so every KV byte
+is read exactly once per group, not per head. Grid (B, Kv, S/bk), sequential
+kv dimension with online-softmax scratch, masking on the stored-position
+array (ring-buffer/sliding-window semantics identical to
+models.attention.cached_attention).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, kpos_ref, qpos_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, G: int, bk: int,
+                   kv_blocks: int, window: int, scale: float):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (T*G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    kp = kpos_ref[0]                                      # (bk,)
+    qp = qpos_ref[0]                                      # (T,)
+    TG = q.shape[0]
+    qp_rows = jnp.broadcast_to(jnp.repeat(qp, G)[:, None], (TG, bk))
+    kp_b = jnp.broadcast_to(kp[None, :], (TG, bk))
+    mask = (kp_b >= 0) & (kp_b <= qp_rows)
+    if window > 0:
+        mask &= kp_b > qp_rows - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)  # fully-masked tiles contribute nothing
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        l = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_gqa_kernel(q_r, k_r, v_r, k_pos, q_pos, *, window: int = 0,
+                      bk: int = 128, interpret: bool = True):
+    """q_r: (B, Kv, T*G, hd); k_r/v_r: (B, Kv, S, hd); k_pos: (B, S);
+    q_pos: (B, T). S % bk == 0. Returns (B, Kv, T*G, hd)."""
+    B, Kv, TG, hd = q_r.shape
+    S = k_r.shape[2]
+    T = q_pos.shape[1]
+    G = TG // T
+    kv_blocks = S // bk
+    kernel = functools.partial(_decode_kernel, G=G, bk=bk,
+                               kv_blocks=kv_blocks, window=window,
+                               scale=1.0 / math.sqrt(hd))
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Kv, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, TG, hd), lambda b, g, ki: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, g, ki: (b, g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, g, ki: (b, g, ki, 0)),
+            pl.BlockSpec((1, bk), lambda b, g, ki: (b, ki)),
+            pl.BlockSpec((1, T), lambda b, g, ki: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, TG, hd), lambda b, g, ki: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Kv, TG, hd), q_r.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((TG, 1), jnp.float32),
+            pltpu.VMEM((TG, 1), jnp.float32),
+            pltpu.VMEM((TG, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q_r, k_r, v_r, k_pos, q_pos)

@@ -1,0 +1,37 @@
+"""jit-able wrapper matching the model cache layout (B, S, Kv, hd)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_gqa.kernel import decode_gqa_kernel
+
+
+@partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_gqa_attention(q, k_cache, v_cache, k_pos, q_pos, *,
+                         window: int = 0, bk: int = 128,
+                         interpret: bool = True):
+    """q: (B, T, H, hd); k/v_cache: (B, S, Kv, hd); k_pos: (B, S) stored
+    positions (-1 empty); q_pos: (B, T). Returns (B, T, H, hd)."""
+    B, T, H, hd = q.shape
+    S, Kv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Kv
+    bk = min(bk, max(8, S))
+    Sp = ((S + bk - 1) // bk) * bk
+    if Sp != S:
+        pad = Sp - S
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    # (B, T, Kv, G, hd) -> (B, Kv, T*G, hd): the head group rides sublanes
+    q_r = q.reshape(B, T, Kv, G, hd).transpose(0, 2, 1, 3, 4).reshape(
+        B, Kv, T * G, hd)
+    k_r = k_cache.transpose(0, 2, 1, 3)
+    v_r = v_cache.transpose(0, 2, 1, 3)
+    out = decode_gqa_kernel(q_r, k_r, v_r, k_pos, q_pos, window=window,
+                            bk=bk, interpret=interpret)
+    return out.reshape(B, Kv, T, G, hd).transpose(0, 2, 1, 3, 4).reshape(
+        B, T, H, hd)

@@ -1,0 +1,3 @@
+from repro.kernels.draft_verify.ops import draft_verify
+
+__all__ = ["draft_verify"]

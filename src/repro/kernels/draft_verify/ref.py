@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused verify op: vocab argmax + accepted-prefix
+lengths (exactly ``repro.core.speculative._accept_lengths`` semantics)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def draft_verify_ref(logits, drafts, draft_mask):
+    """logits: (N, T, V); drafts: (N, T-1); draft_mask: (N,).
+
+    Returns (greedy_tokens (N, T) int32, n_acc (N,) int32)."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if drafts.shape[-1] == 0:
+        n_acc = jnp.zeros((logits.shape[0],), jnp.int32)
+    else:
+        match = (drafts == greedy[:, :-1]).astype(jnp.int32)
+        n_acc = jnp.sum(jnp.cumprod(match, axis=-1), axis=-1)
+    return greedy, jnp.where(draft_mask, n_acc, 0).astype(jnp.int32)

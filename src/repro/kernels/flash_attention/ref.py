@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for blocked causal/windowed attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v: (B, H, S, hd). window > 0 => sliding-window causal attention."""
+    B, H, S, hd = q.shape
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+        if window > 0:
+            mask &= ki > qi - window
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)

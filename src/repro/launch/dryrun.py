@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh, with ShapeDtypeStruct inputs (no allocation), and record
+memory/cost/collective analysis for EXPERIMENTS.md §Dry-run / §Roofline.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run (and only the dry-run) needs 512 placeholder devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --multi-pod
+  ... [--seq-shard] [--out results.jsonl]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def _lower_compile(built, shard_ctx, mesh, seq_shard):
+    import jax
+
+    with shard_ctx.activation_rules(
+            mesh, batch=("data",),
+            seq=("model",) if seq_shard else None):
+        jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                         out_shardings=built.out_shardings)
+        lowered = jitted.lower(*built.inputs)
+    return lowered.compile()
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool, seq_shard: bool,
+            fsdp_inference: bool = True, verify_tokens: int = 0,
+            multidraft: int = 0, verbose: bool = True) -> dict:
+    """Lower + compile one (arch × shape × mesh) pair and derive roofline
+    terms.
+
+    Methodology (XLA's HloCostAnalysis counts while-loop bodies ONCE, so a
+    rolled layer-scan underreports FLOPs/bytes/collectives by ~n_repeats):
+      1. The FULL model is compiled with the rolled scan — this is the
+         compile-success proof and the source of memory_analysis()
+         (loop-aware buffer reuse, remat-saved carries included).
+      2. FLOPs / bytes-accessed / collective-bytes are extrapolated exactly
+         from two UNROLLED reduced-depth compiles (1 and 2 pattern repeats):
+         term(R) = t1 + (R-1)·(t2-t1). Everything outside the layer scan
+         (embeddings, logits, loss, optimizer) is depth-independent, so the
+         extrapolation is exact for the repeated-block models used here.
+         (The RWKV/Mamba *time* scans stay rolled; their in-loop FLOPs are
+         rank-1 state updates, orders of magnitude below the projections.)
+    """
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.launch import steps as steps_mod
+    from repro.launch.hlo_analysis import (
+        ICI_BW, HBM_BW, PEAK_FLOPS, collective_bytes, model_flops)
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import transformer as _tr
+    from repro.sharding import ctx as shard_ctx
+
+    rec: dict = {"arch": arch, "shape": shape,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "seq_shard": seq_shard, "fsdp_inference": fsdp_inference,
+                 "verify_tokens": verify_tokens, "multidraft": multidraft}
+    reason = steps_mod.skip_reason(arch, shape)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = steps_mod._dryrun_cfg(arch, shape)
+    t0 = time.time()
+    try:
+        # -- 1. full model, rolled scan: compile proof + memory analysis ----
+        _tr.SCAN_UNROLL = 1
+        kw = dict(fsdp_inference=fsdp_inference, verify_tokens=verify_tokens,
+                  multidraft=multidraft)
+        built = steps_mod.build_step(arch, shape, mesh, **kw)
+        rec["note"] = built.note
+        compiled = _lower_compile(built, shard_ctx, mesh, seq_shard)
+        t_full = time.time() - t0
+
+        # -- 2. reduced-depth unrolled compiles for exact per-repeat terms --
+        def measure(repeats: int) -> dict:
+            if cfg.family == "seq2seq":
+                cfg_r = dataclasses.replace(cfg, n_layers=repeats,
+                                            n_encoder_layers=repeats)
+            else:
+                cfg_r = dataclasses.replace(
+                    cfg, n_layers=repeats * len(cfg.layer_pattern))
+            b = steps_mod.build_step(arch, shape, mesh, cfg_override=cfg_r,
+                                     **kw)
+            _tr.SCAN_UNROLL = True
+            try:
+                c = _lower_compile(b, shard_ctx, mesh, seq_shard)
+            finally:
+                _tr.SCAN_UNROLL = 1
+            cost = c.cost_analysis()
+            return {"flops": float(cost.get("flops", 0.0)),
+                    "bytes": float(cost.get("bytes accessed", 0.0)),
+                    "coll": collective_bytes(c.as_text())["total"]}
+
+        m1 = measure(1)
+        m2 = measure(2)
+        R = cfg.n_repeats
+        extrap = {k: m1[k] + (R - 1) * (m2[k] - m1[k]) for k in m1}
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "FAILED"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        return rec
+
+    mem = compiled.memory_analysis()
+    terms = {
+        "flops_per_device": extrap["flops"],
+        "bytes_per_device": extrap["bytes"],
+        "collective_bytes_per_device": extrap["coll"],
+        "compute_s": extrap["flops"] / PEAK_FLOPS,
+        "memory_s": extrap["bytes"] / HBM_BW,
+        "collective_s": extrap["coll"] / ICI_BW,
+    }
+    terms["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"),
+        key=lambda k: terms[k]).replace("_s", "")
+
+    # MODEL_FLOPS = 6·N·D / 2·N·D with MoE discount, from the param avals
+    if cfg.family == "seq2seq":
+        from repro.models import seq2seq as s2s
+        params = jax.eval_shape(lambda: s2s.init(jax.random.PRNGKey(0), cfg))
+    else:
+        params = steps_mod._params_specs(cfg)
+    total = expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "experts" in names:
+            expert += n
+    meta = steps_mod.SHAPES.get(shape) or steps_mod.MT_SHAPES[shape]
+    per_row = (meta["seq"] if meta["kind"] in ("train", "prefill", "mt_train")
+               else meta.get("verify", 1))
+    tokens = meta["batch"] * per_row
+    mf = model_flops(cfg, total, expert, tokens=tokens,
+                     train=meta["kind"] == "train",
+                     top_k=cfg.moe.top_k if cfg.moe else 0,
+                     n_experts=cfg.moe.n_experts if cfg.moe else 0)
+    chips = float(np.prod(list(mesh.shape.values())))
+    hlo_total_flops = terms["flops_per_device"] * chips
+
+    rec.update({
+        "status": "ok",
+        "compile_s": round(t_full, 2),
+        "params_total": total,
+        "params_expert": expert,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_est_bytes": mem.argument_size_in_bytes
+                              + mem.output_size_in_bytes
+                              + mem.temp_size_in_bytes,
+        },
+        "roofline": terms,
+        "model_flops_total": mf,
+        "hlo_flops_total": hlo_total_flops,
+        "useful_flops_ratio": (mf / hlo_total_flops) if hlo_total_flops else 0.0,
+    })
+    if verbose:
+        print(f"[{arch} × {shape} × {rec['mesh']}] ok "
+              f"compile={t_full:.1f}s "
+              f"compute={terms['compute_s']:.3e}s "
+              f"memory={terms['memory_s']:.3e}s "
+              f"collective={terms['collective_s']:.3e}s "
+              f"bottleneck={terms['bottleneck']} "
+              f"useful={rec['useful_flops_ratio']:.2f}")
+        print("  memory_analysis:", rec["memory"])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True,
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", required=True,
+                    help="input-shape id or 'all'")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2×16×16 (512 chips) instead of 16×16 (256)")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="sequence-parallel residual stream (perf variant)")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="tensor-parallel-only params for prefill/decode "
+                         "(perf variant: no per-step FSDP gather)")
+    ap.add_argument("--verify-tokens", type=int, default=0,
+                    help="lower the speculative verify step with this many "
+                         "fed tokens (DL+1) instead of 1-token serve_step")
+    ap.add_argument("--multidraft", type=int, default=0,
+                    help="with --verify-tokens: single-pass N_d-draft "
+                         "verification (beyond-paper) instead of the "
+                         "expanded-batch form")
+    ap.add_argument("--out", default="",
+                    help="append JSONL records to this file")
+    args = ap.parse_args()
+
+    from repro.configs import list_archs
+    from repro.launch.steps import SHAPES
+
+    archs = ([a for a in list_archs() if not a.startswith("mt-")]
+             if args.arch == "all" else [args.arch])
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                          seq_shard=args.seq_shard,
+                          fsdp_inference=not args.no_fsdp,
+                          verify_tokens=args.verify_tokens,
+                          multidraft=args.multidraft)
+            if rec["status"] == "FAILED":
+                failures += 1
+                print(f"[{arch} × {shape}] FAILED: {rec['error']}")
+            elif rec["status"] == "skipped":
+                print(f"[{arch} × {shape}] skipped: {rec['reason']}")
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

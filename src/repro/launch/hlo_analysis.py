@@ -1,0 +1,114 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+cost_analysis() gives per-device HLO FLOPs and bytes accessed; collective
+bytes are NOT in cost_analysis, so we parse the optimized HLO text and sum
+shape bytes over every collective op. Methodology (recorded here because the
+numbers feed EXPERIMENTS.md §Roofline): per collective line we take the max
+byte-size among all shapes on the line (result and any printed operand
+shapes) as the per-device traffic estimate — exact for all-reduce /
+collective-permute, a lower bound ≈ result for all-gather, ≈ operand for
+reduce-scatter.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per chip).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum per-device traffic of every collective op, by kind."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match op kind in the instruction position: "= <shape> kind("
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in s or f" {kind}-start(" in s:
+                sizes = [_shape_bytes(dt, dims)
+                         for dt, dims in _SHAPE_RE.findall(s)]
+                if sizes:
+                    out[kind] += max(sizes)
+                    counts[kind] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+def roofline_terms(cost: dict, hlo_text: str) -> dict[str, Any]:
+    """Three roofline terms (seconds, per chip) + raw inputs.
+
+    cost_analysis() on the host backend reports PER-DEVICE flops/bytes for
+    SPMD-partitioned modules (verified in tests)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    terms = {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll["total"],
+        "collective_breakdown": {k: coll[k] for k in _COLLECTIVES},
+        "collective_counts": coll["counts"],
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_acc / HBM_BW,
+        "collective_s": coll["total"] / ICI_BW,
+    }
+    dominant = max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: terms[k])
+    terms["bottleneck"] = dominant.replace("_s", "")
+    return terms
+
+
+def count_params(params_tree) -> tuple[int, int]:
+    """(total params, active params) — active discounts routed experts by
+    top_k / n_experts (shared experts stay fully active)."""
+    import jax
+
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree)[0]:
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        active += n  # caller rescales expert leaves via path check below
+    return total, active
+
+
+def model_flops(cfg, total_params: int, expert_params: int, *, tokens: int,
+                train: bool, top_k: int = 0, n_experts: int = 0) -> float:
+    """6·N·D (train) / 2·N·D (inference) with MoE discounting."""
+    n_active = total_params - expert_params
+    if n_experts:
+        n_active += expert_params * top_k / n_experts
+    mult = 6.0 if train else 2.0
+    return mult * n_active * tokens

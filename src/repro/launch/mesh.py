@@ -1,0 +1,36 @@
+"""Production mesh: one TPU v5e pod = (data=16, model=16) = 256 chips;
+multi-pod adds a leading pod axis (2 pods = 512 chips).
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches jax device state. When the host exposes
+more placeholder devices than the mesh needs (the dry-run forces 512), the
+single-pod mesh takes the first 256.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            f"dry-run must set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count=512 before importing jax")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """Data-parallel axes: ('pod','data') on multi-pod, ('data',) otherwise."""
+    return tuple(a for a in mesh.axis_names if a != "model")

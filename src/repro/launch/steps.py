@@ -1,0 +1,308 @@
+"""Per-(arch × input-shape) step builders for the multi-pod dry-run and the
+real launchers. Everything is ShapeDtypeStruct-based: no arrays are ever
+allocated for the full-size configs (the CPU host could not hold them).
+
+Input shapes (assigned):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill (last-token logits)
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token,
+                                                 KV cache of seq_len)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; sub-quadratic
+               attention required: SSM/hybrid run natively, dense/MoE/VLM
+               run the sliding-window variant (window 8192), encoder-only
+               audio is skipped (no decode step exists)   [DESIGN.md §4]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.launch import shardings as sh
+from repro.launch.mesh import dp_axes
+from repro.models import transformer as tr
+from repro.training.optimizer import adam_init
+from repro.training.trainer import make_lm_train_step
+
+SHAPES = {
+    "train_4k":    dict(seq=4096,   batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768,  batch=32,  kind="prefill"),
+    "decode_32k":  dict(seq=32768,  batch=128, kind="decode"),
+    "long_500k":   dict(seq=524288, batch=1,   kind="decode"),
+}
+
+# The paper's own Molecular Transformer at pod scale (industrial serving:
+# one request stream per data slot, model replicated — an 11M-param model
+# does not shard; throughput comes from request parallelism). seq 256 covers
+# USPTO SMILES lengths; mt_verify is the speculative verify pass (DL=10).
+MT_SHAPES = {
+    "mt_train":  dict(seq=256, batch=4096, kind="mt_train"),
+    "mt_verify": dict(seq=256, batch=4096, kind="mt_verify", verify=11),
+}
+
+SLIDING_WINDOW_LONG = 8192  # beyond-paper variant for dense archs @ 500k
+
+
+class BuiltStep(NamedTuple):
+    fn: Any                 # jit-able function
+    inputs: tuple           # ShapeDtypeStruct pytree args
+    in_shardings: tuple
+    out_shardings: Any      # None = let GSPMD choose
+    note: str
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    cfg = get_config(arch)
+    if shape_name in MT_SHAPES:
+        return None if cfg.family == "seq2seq" else \
+            "mt_* shapes apply to the seq2seq Molecular Transformer only"
+    if cfg.family == "seq2seq":
+        return "MT uses its own shapes (mt_train / mt_verify)"
+    kind = SHAPES[shape_name]["kind"]
+    if cfg.family == "audio" and kind == "decode":
+        return "encoder-only: no autoregressive decode step (DESIGN.md §4)"
+    return None
+
+
+def _dryrun_cfg(arch: str, shape_name: str) -> ModelConfig:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+        # sub-quadratic requirement: sliding-window variant for full-attention
+        cfg = dataclasses.replace(cfg, sliding_window=SLIDING_WINDOW_LONG)
+    return cfg
+
+
+def _params_specs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: tr.init(jax.random.PRNGKey(0), cfg,
+                                          dtype=dtype))
+
+
+def input_specs(arch: str, shape_name: str, *, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this pair."""
+    return input_specs_for(_dryrun_cfg(arch, shape_name), shape_name,
+                           dtype=dtype)
+
+
+def input_specs_for(cfg: ModelConfig, shape_name: str, *,
+                    dtype=jnp.bfloat16) -> dict:
+    meta = SHAPES[shape_name]
+    S, B, kind = meta["seq"], meta["batch"], meta["kind"]
+    sds = jax.ShapeDtypeStruct
+    out: dict = {}
+    if kind == "train":
+        if cfg.family == "audio":
+            out["embeddings"] = sds((B, S, cfg.d_model), dtype)
+            out["labels"] = sds((B, S), jnp.int32)
+        else:
+            out["tokens"] = sds((B, S + 1), jnp.int32)
+            out["loss_mask"] = sds((B, S + 1), jnp.float32)
+        if cfg.family == "vlm":
+            out["memory"] = sds((B, cfg.memory_tokens, cfg.memory_dim), dtype)
+    elif kind == "prefill":
+        if cfg.family == "audio":
+            out["embeddings"] = sds((B, S, cfg.d_model), dtype)
+        else:
+            out["tokens"] = sds((B, S), jnp.int32)
+        if cfg.family == "vlm":
+            out["memory"] = sds((B, cfg.memory_tokens, cfg.memory_dim), dtype)
+    else:  # decode
+        out["tokens"] = sds((B, 1), jnp.int32)
+        out["positions"] = sds((B, 1), jnp.int32)
+        out["cache"] = jax.eval_shape(
+            lambda: tr.init_cache(cfg, B, S, dtype=dtype))
+    return out
+
+
+def build_step(arch: str, shape_name: str, mesh: Mesh,
+               *, dtype=jnp.bfloat16, remat: bool = True,
+               cfg_override: ModelConfig | None = None,
+               fsdp_inference: bool = True,
+               verify_tokens: int = 0,
+               multidraft: int = 0) -> BuiltStep:
+    """``fsdp_inference=False``: tensor-parallel-only params for
+    prefill/decode (§Perf pair B). ``verify_tokens=T``: lower the
+    speculative verify step (T = DL+1 fed tokens) instead of the 1-token
+    serve step (§Perf pair C). ``multidraft=N_d`` (with verify_tokens):
+    the beyond-paper single-pass N_d-draft verify (one row per sequence,
+    segmented attention) instead of the paper's B·N_d expanded batch."""
+    if shape_name in MT_SHAPES:
+        return _build_mt_step(arch, shape_name, mesh, dtype=dtype,
+                              cfg_override=cfg_override,
+                              fsdp_inference=fsdp_inference)
+    cfg = cfg_override if cfg_override is not None else _dryrun_cfg(arch, shape_name)
+    meta = SHAPES[shape_name]
+    S, B, kind = meta["seq"], meta["batch"], meta["kind"]
+    params = _params_specs(cfg, dtype)
+    p_sh = sh.param_shardings(params, mesh,
+                              fsdp=fsdp_inference or kind == "train")
+    dp = dp_axes(mesh)
+    specs = input_specs_for(cfg, shape_name, dtype=dtype)
+
+    if kind == "train":
+        step = make_lm_train_step(cfg, remat=remat)
+        opt = jax.eval_shape(adam_init, params)
+        o_sh = sh.opt_shardings(opt, params, mesh)
+        batch = {k: v for k, v in specs.items()}
+        b_sh = sh.batch_shardings(batch, mesh)
+        return BuiltStep(
+            fn=step, inputs=(params, opt, batch),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            note=f"train {arch} B={B} S={S} remat={remat}")
+
+    if kind == "prefill":
+        cache_like = jax.eval_shape(lambda: tr.init_cache(cfg, B, S, dtype=dtype))
+        c_sh = sh.cache_shardings(cache_like, cfg, mesh)
+        logits_sh = NamedSharding(mesh, P(dp if B % sh._axis_size(mesh, dp) == 0
+                                          else None, None))
+
+        if cfg.family == "audio":
+            def fn(params, embeddings):
+                logits, _ = tr.apply(params, cfg, embeddings=embeddings)
+                return logits
+            emb = specs["embeddings"]
+            return BuiltStep(
+                fn=fn, inputs=(params, emb),
+                in_shardings=(p_sh, sh.batch_shardings(emb, mesh)),
+                out_shardings=NamedSharding(mesh, P(dp, None, None)),
+                note=f"encode {arch} B={B} S={S}")
+
+        if cfg.family == "vlm":
+            def fn(params, tokens, memory):
+                cache = tr.init_cache(cfg, B, S, dtype=dtype)
+                return tr.prefill(params, cfg, cache, tokens, memory=memory,
+                                  logits_mode="last")
+            args = (params, specs["tokens"], specs["memory"])
+            in_sh = (p_sh, sh.batch_shardings(specs["tokens"], mesh),
+                     sh.batch_shardings(specs["memory"], mesh))
+        else:
+            def fn(params, tokens):
+                cache = tr.init_cache(cfg, B, S, dtype=dtype)
+                return tr.prefill(params, cfg, cache, tokens,
+                                  logits_mode="last")
+            args = (params, specs["tokens"])
+            in_sh = (p_sh, sh.batch_shardings(specs["tokens"], mesh))
+        return BuiltStep(fn=fn, inputs=args, in_shardings=in_sh,
+                         out_shardings=(logits_sh, c_sh),
+                         note=f"prefill {arch} B={B} S={S}")
+
+    # decode: one new token against a seq_len cache (serve_step), or the
+    # speculative verify pass (T = DL+1 fed tokens) when verify_tokens > 0
+    cache = specs["cache"]
+    c_sh = sh.cache_shardings(cache, cfg, mesh)
+    T = max(1, verify_tokens)
+    if multidraft > 0:
+        DL = T - 1
+        T = 1 + multidraft * DL
+        from repro.core.multidraft import build_local_mask
+        local_mask = jnp.asarray(build_local_mask(multidraft, DL))
+    sds = jax.ShapeDtypeStruct
+    tokens_spec = sds((B, T), jnp.int32)
+    pos_spec = sds((B, T), jnp.int32)
+
+    if multidraft > 0:
+        def fn(params, cache, tokens, positions):
+            logits, kv = tr.multidraft_verify_step(
+                params, cfg, cache, tokens, positions, local_mask)
+            cache = tr.commit_multidraft(
+                cfg, cache, kv, jnp.zeros((B,), jnp.int32),
+                jnp.full((B,), DL, jnp.int32), positions[:, 0],
+                draft_len=DL)
+            return logits, cache
+    else:
+        def fn(params, cache, tokens, positions):
+            logits, cache = tr.decode_step(params, cfg, cache, tokens,
+                                           positions)
+            cache = tr.commit_cache(cfg, cache, jnp.full((B,), T, jnp.int32))
+            return logits, cache
+
+    tok_sh = sh.batch_shardings(tokens_spec, mesh)
+    pos_sh = sh.batch_shardings(pos_spec, mesh)
+    logits_sh = NamedSharding(
+        mesh, P(dp if B % sh._axis_size(mesh, dp) == 0 else None, None,
+                "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None))
+    return BuiltStep(
+        fn=fn, inputs=(params, cache, tokens_spec, pos_spec),
+        in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+        out_shardings=(logits_sh, c_sh),
+        note=f"serve {arch} B={B} T={T} cache={S}"
+             + (f" window={cfg.sliding_window}" if cfg.sliding_window else ""))
+
+
+# ---------------------------------------------------------------------------
+# Molecular Transformer (seq2seq) at pod scale — the paper's model through
+# the same dry-run machinery (shapes: MT_SHAPES).
+
+
+def _build_mt_step(arch: str, shape_name: str, mesh: Mesh, *,
+                   dtype=jnp.bfloat16,
+                   cfg_override: ModelConfig | None = None,
+                   fsdp_inference: bool = True) -> BuiltStep:
+    from repro.models import seq2seq as s2s
+    from repro.training.trainer import make_seq2seq_train_step
+
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    meta = MT_SHAPES[shape_name]
+    S, B, kind = meta["seq"], meta["batch"], meta["kind"]
+    dp = dp_axes(mesh)
+    sds = jax.ShapeDtypeStruct
+    params = jax.eval_shape(
+        lambda: s2s.init(jax.random.PRNGKey(0), cfg, dtype=dtype))
+    if kind != "mt_train" and not fsdp_inference:
+        # pure request-parallel serving: an 11M-param model replicates —
+        # tensor-parallel all-reduces otherwise dominate (EXPERIMENTS §MT)
+        p_sh = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), params)
+    else:
+        p_sh = sh.param_shardings(params, mesh, fsdp=kind == "mt_train")
+
+    if kind == "mt_train":
+        from repro.training.optimizer import adam_init
+
+        step = make_seq2seq_train_step(cfg)
+        opt = jax.eval_shape(adam_init, params)
+        o_sh = sh.opt_shardings(opt, params, mesh)
+        batch = {"src": sds((B, S), jnp.int32),
+                 "tgt_in": sds((B, S), jnp.int32),
+                 "tgt_out": sds((B, S), jnp.int32)}
+        b_sh = sh.batch_shardings(batch, mesh)
+        return BuiltStep(fn=step, inputs=(params, opt, batch),
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         note=f"mt train {arch} B={B} S={S}")
+
+    # mt_verify: the speculative verify pass (T = DL+1 tokens per sequence)
+    T = meta["verify"]
+
+    def mk_cache():
+        c = s2s.init_cache(cfg, B, S, dtype=dtype)
+        R = cfg.n_layers
+        mkv = {"mk": jnp.zeros((R, B, S, cfg.n_heads, cfg.head_dim), dtype),
+               "mv": jnp.zeros((R, B, S, cfg.n_heads, cfg.head_dim), dtype)}
+        return {"self": c["self"], "cross": mkv}
+
+    cache = jax.eval_shape(mk_cache)
+    b_ax = dp if B % sh._axis_size(mesh, dp) == 0 else None
+    c_sh = jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(
+            mesh, P(None, b_ax, *((None,) * (leaf.ndim - 2)))), cache)
+
+    def fn(params, cache, tokens, positions):
+        logits, cache = s2s.decode_step(params, cfg, cache, tokens, positions)
+        return logits, cache
+
+    tokens_spec = sds((B, T), jnp.int32)
+    pos_spec = sds((B, T), jnp.int32)
+    t_sh = sh.batch_shardings(tokens_spec, mesh)
+    logits_sh = NamedSharding(mesh, P(b_ax, None, None))
+    return BuiltStep(fn=fn, inputs=(params, cache, tokens_spec, pos_spec),
+                     in_shardings=(p_sh, c_sh, t_sh, t_sh),
+                     out_shardings=(logits_sh, c_sh),
+                     note=f"mt verify {arch} B={B} T={T} cache={S}")

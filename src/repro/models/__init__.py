@@ -1,0 +1,3 @@
+from repro.models import transformer, seq2seq
+
+__all__ = ["transformer", "seq2seq"]

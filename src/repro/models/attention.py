@@ -1,0 +1,323 @@
+"""Grouped-query attention with a unified KV cache.
+
+One attention implementation serves every mode in the framework:
+
+  - full-sequence causal (training / prefill), optional sliding window
+  - bidirectional (encoder-only: HuBERT, MT encoder)
+  - cross-attention to a memory (MT decoder, VLM image layers)
+  - cached decode with per-row absolute positions — the speculative-decoding
+    verify pass feeds ``DL+1`` tokens per sequence in one call
+
+KV-cache design (TPU-native): pre-allocated ``(B, S, n_kv, head_dim)`` buffers
+plus a ``(B, S)`` int32 ``pos`` array holding the *absolute* position stored in
+each slot (-1 = empty). Writes go to ``slot = position % S``; masking is done
+on stored positions, which makes a ring buffer (sliding window, ``S = window``)
+and a linear cache (``S = max_len``) the same code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm, apply_rope, dense, dense_init
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+
+
+def attn_init(key, cfg: ModelConfig, *, cross: bool = False, dtype=jnp.float32) -> dict:
+    """Attention projections. ``cross=True`` reads K/V from memory_dim."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    kv_src = cfg.memory_dim if (cross and cfg.memory_dim) else d
+    n_kv = cfg.n_heads if cross else cfg.n_kv_heads  # cross-attn: MHA over memory
+    p = {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, use_bias=cfg.use_bias, dtype=dtype),
+        "wk": dense_init(kk, kv_src, n_kv * hd, use_bias=cfg.use_bias, dtype=dtype),
+        "wv": dense_init(kv, kv_src, n_kv * hd, use_bias=cfg.use_bias, dtype=dtype),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, use_bias=cfg.use_bias, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dtype)}
+    return p
+
+
+# ---------------------------------------------------------------------------
+# cache
+
+
+@dataclasses.dataclass
+class KVCache:
+    k: jnp.ndarray    # (B, S, n_kv, head_dim)
+    v: jnp.ndarray    # (B, S, n_kv, head_dim)
+    pos: jnp.ndarray  # (B, S) int32, absolute position stored in slot, -1 empty
+
+
+jax.tree_util.register_dataclass(KVCache, data_fields=["k", "v", "pos"], meta_fields=[])
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, *, cross: bool = False,
+                  dtype=jnp.float32) -> KVCache:
+    n_kv = cfg.n_heads if cross else cfg.n_kv_heads
+    size = max_len if (cfg.sliding_window == 0 or cross) else min(max_len, cfg.sliding_window)
+    return KVCache(
+        k=jnp.zeros((batch, size, n_kv, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, size, n_kv, cfg.head_dim), dtype),
+        pos=jnp.full((batch, size), -1, jnp.int32),
+    )
+
+
+def _write_cache(cache: KVCache, k_new, v_new, positions) -> KVCache:
+    """Scatter new K/V at ``slot = position % S``; positions: (B, T)."""
+    S = cache.k.shape[1]
+    b_idx = jnp.arange(cache.k.shape[0])[:, None]
+    slots = positions % S
+    return KVCache(
+        k=cache.k.at[b_idx, slots].set(k_new.astype(cache.k.dtype)),
+        v=cache.v.at[b_idx, slots].set(v_new.astype(cache.v.dtype)),
+        pos=cache.pos.at[b_idx, slots].set(positions.astype(jnp.int32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# core score/combine
+
+
+def _gqa_attend(q, k, v, mask, *, q_per_kv: int):
+    """q: (B,T,Hq,hd); k,v: (B,S,Kv,hd); mask: broadcastable (B,1,1,T,S)."""
+    B, T, Hq, hd = q.shape
+    Kv = k.shape[2]
+    q = q.reshape(B, T, Kv, q_per_kv, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    scores = jnp.where(mask, scores, _NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", w.astype(v.dtype), v)
+    return out.reshape(B, T, Hq, hd)
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x, kv_input, *, cross: bool):
+    B, T = x.shape[:2]
+    hd = cfg.head_dim
+    n_kv = cfg.n_heads if cross else cfg.n_kv_heads
+    q = dense(p["wq"], x).reshape(B, T, cfg.n_heads, hd)
+    k = dense(p["wk"], kv_input).reshape(B, kv_input.shape[1], n_kv, hd)
+    v = dense(p["wv"], kv_input).reshape(B, kv_input.shape[1], n_kv, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# modes
+
+
+# q-chunk size above which exact blockwise attention kicks in: keeps the
+# (B, H, Tq, S) score tensor off HBM for 32k prompts (flash-style memory
+# behaviour at the XLA level; the Pallas kernel is the TPU fast path).
+_Q_CHUNK = 1024
+
+
+def _masked_attend(q, k, v, qp, kp_valid, kp, *, causal, window, q_per_kv):
+    """Score q rows (positions qp) against keys (positions kp, validity
+    kp_valid); lazy mask construction so callers can chunk the q axis."""
+    B, Tq = q.shape[:2]
+    mask = kp_valid[:, None, :]
+    if causal:
+        mask = mask & (kp[:, None, :] <= qp[:, :, None])
+        if window > 0:
+            mask = mask & (kp[:, None, :] > qp[:, :, None] - window)
+    return _gqa_attend(q, k, v, mask[:, None, None], q_per_kv=q_per_kv)
+
+
+def _attend_maybe_chunked(q, k, v, qp, kp_valid, kp, *, causal, window,
+                          q_per_kv):
+    """Exact attention; scans q chunks when Tq is long so the per-step score
+    tensor is (B, H, chunk, S) instead of (B, H, Tq, S)."""
+    B, Tq = q.shape[:2]
+    if Tq <= _Q_CHUNK or Tq % _Q_CHUNK != 0:
+        return _masked_attend(q, k, v, qp, kp_valid, kp, causal=causal,
+                              window=window, q_per_kv=q_per_kv)
+    n = Tq // _Q_CHUNK
+    q_c = q.reshape(B, n, _Q_CHUNK, *q.shape[2:]).swapaxes(0, 1)
+    qp_c = qp.reshape(B, n, _Q_CHUNK).swapaxes(0, 1)
+
+    def body(_, inp):
+        qi, qpi = inp
+        out = _masked_attend(qi, k, v, qpi, kp_valid, kp, causal=causal,
+                             window=window, q_per_kv=q_per_kv)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (q_c, qp_c))
+    return outs.swapaxes(0, 1).reshape(B, Tq, *q.shape[2:])
+
+
+def attention(p: dict, cfg: ModelConfig, x, *, positions=None, causal: bool = True,
+              padding_mask=None) -> jnp.ndarray:
+    """Full-sequence self-attention (training / prefill, no cache).
+
+    x: (B, T, d); positions: (B, T) absolute; padding_mask: (B, T) True=valid.
+    Sliding window applies when cfg.sliding_window > 0 and causal.
+    """
+    B, T = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    q, k, v = _project_qkv(p, cfg, x, x, cross=False)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    kp_valid = (jnp.ones((B, T), bool) if padding_mask is None
+                else padding_mask)
+    out = _attend_maybe_chunked(q, k, v, positions, kp_valid, positions,
+                                causal=causal, window=cfg.sliding_window,
+                                q_per_kv=cfg.q_per_kv)
+    return dense(p["wo"], out.reshape(B, T, -1))
+
+
+def cross_attention(p: dict, cfg: ModelConfig, x, memory, *, memory_mask=None) -> jnp.ndarray:
+    """x: (B, T, d) queries; memory: (B, M, memory_dim or d)."""
+    B, T = x.shape[:2]
+    q, k, v = _project_qkv(p, cfg, x, memory, cross=True)
+    mask = jnp.ones((B, T, memory.shape[1]), bool)
+    if memory_mask is not None:
+        mask &= memory_mask[:, None, :]
+    out = _gqa_attend(q, k, v, mask[:, None, None], q_per_kv=1)
+    return dense(p["wo"], out.reshape(B, T, -1))
+
+
+def memory_kv(p: dict, cfg: ModelConfig, memory) -> dict:
+    """Precompute cross-attention K/V from frontend memory (prefill-time)."""
+    B, M = memory.shape[:2]
+    hd = cfg.head_dim
+    k = dense(p["wk"], memory).reshape(B, M, cfg.n_heads, hd)
+    v = dense(p["wv"], memory).reshape(B, M, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    return {"mk": k, "mv": v}
+
+
+def cached_cross_attention(p: dict, cfg: ModelConfig, x, cache: dict,
+                           *, memory_mask=None) -> jnp.ndarray:
+    """Cross-attention against precomputed memory K/V (decode-time)."""
+    B, T = x.shape[:2]
+    hd = cfg.head_dim
+    q = dense(p["wq"], x).reshape(B, T, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+    mask = jnp.ones((B, T, cache["mk"].shape[1]), bool)
+    if memory_mask is not None:
+        mask &= memory_mask[:, None, :]
+    out = _gqa_attend(q, cache["mk"], cache["mv"], mask[:, None, None], q_per_kv=1)
+    return dense(p["wo"], out.reshape(B, T, -1))
+
+
+def multidraft_attention(p: dict, cfg: ModelConfig, x, cache: KVCache,
+                         positions, local_mask):
+    """Single-pass multi-draft verification attention (beyond-paper;
+    DESIGN.md §2 / EXPERIMENTS.md §Perf).
+
+    The paper verifies N_d drafts by inflating the batch to B·N_d — every
+    draft row re-reads the whole KV cache. Here ONE row per sequence feeds
+    all drafts: x = (B, T_local, d) with T_local = 1 + N_d·DL (last committed
+    token + the drafts back-to-back); ``local_mask`` (T_local, T_local) is
+    the static segment mask (token (j,i) sees token 0 and its own draft's
+    prefix). Fed tokens attend jointly (one softmax) over:
+      - the committed cache (READ ONCE per sequence — the N_d× saving), and
+      - the local K/V of their own segment.
+    Nothing is written to the cache; the caller commits the winning draft's
+    accepted K/V afterwards (transformer.commit_verified).
+
+    Returns (out (B, T_local, d), (k_new, v_new)) — local K/V for commit.
+    """
+    B, T = x.shape[:2]
+    q, k_new, v_new = _project_qkv(p, cfg, x, x, cross=False)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    # cache part: committed entries only (invariant: cache holds committed
+    # tokens < min(positions); no stale slots in the multidraft flow)
+    kp = cache.pos[:, None, :]
+    qp = positions[:, :, None]
+    cache_mask = (kp >= 0) & (kp <= qp)
+    if cfg.sliding_window > 0:
+        cache_mask &= kp > qp - cfg.sliding_window
+    # Two-part joint softmax (NO concatenation: concatenating (S + T_local)
+    # keys copies the cache every layer and breaks its sequence sharding —
+    # GSPMD then all-gathers the whole cache per layer; observed 126× worse
+    # collective term before this formulation).
+    Kv = cache.k.shape[2]
+    G = cfg.q_per_kv
+    hd = cfg.head_dim
+    qh = q.reshape(B, T, Kv, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s_c = jnp.einsum("btkgh,bskh->bkgts", qh, cache.k).astype(jnp.float32) * scale
+    s_l = jnp.einsum("btkgh,bskh->bkgts", qh, k_new).astype(jnp.float32) * scale
+    s_c = jnp.where(cache_mask[:, None, None], s_c, _NEG_INF)
+    s_l = jnp.where(local_mask[None, None, None], s_l, _NEG_INF)
+    m = jnp.maximum(jnp.max(s_c, axis=-1, keepdims=True),
+                    jnp.max(s_l, axis=-1, keepdims=True))
+    p_c = jnp.exp(s_c - m)
+    p_l = jnp.exp(s_l - m)
+    denom = (jnp.sum(p_c, axis=-1, keepdims=True)
+             + jnp.sum(p_l, axis=-1, keepdims=True))
+    p_c = (p_c / denom).astype(cache.v.dtype)
+    p_l = (p_l / denom).astype(v_new.dtype)
+    out = (jnp.einsum("bkgts,bskh->btkgh", p_c, cache.v)
+           + jnp.einsum("bkgts,bskh->btkgh", p_l, v_new)).reshape(B, T, -1)
+    return dense(p["wo"], out), (k_new, v_new)
+
+
+def commit_verified_kv(cache: KVCache, k_new, v_new, take_idx, positions,
+                       n_keep) -> KVCache:
+    """Write the winning draft's accepted K/V into the cache.
+
+    take_idx: (B, W) local indices of [last_tok, winning draft tokens];
+    positions: (B, W) their absolute positions; n_keep: (B,) how many of the
+    W are committed (the rest are written with stored position -1, i.e.
+    invalid — their slots are re-written by the next commit before any
+    query can see them)."""
+    b = jnp.arange(take_idx.shape[0])[:, None]
+    k_sel = k_new[b, take_idx]
+    v_sel = v_new[b, take_idx]
+    W = take_idx.shape[1]
+    valid = jnp.arange(W)[None, :] < n_keep[:, None]
+    S = cache.k.shape[1]
+    slots = positions % S  # slot from the position; stored pos marks validity
+    return KVCache(
+        k=cache.k.at[b, slots].set(k_sel.astype(cache.k.dtype)),
+        v=cache.v.at[b, slots].set(v_sel.astype(cache.v.dtype)),
+        pos=cache.pos.at[b, slots].set(
+            jnp.where(valid, positions, -1).astype(jnp.int32)),
+    )
+
+
+def cached_attention(p: dict, cfg: ModelConfig, x, cache: KVCache, positions,
+                     ) -> tuple[jnp.ndarray, KVCache]:
+    """Cached causal decode (and prefill-into-cache).
+
+    x: (B, T, d) new tokens; positions: (B, T) absolute positions of those
+    tokens (rows may differ — the speculative decoder relies on this).
+    Pad-token convention: ``positions == -1`` marks invalid tokens; their K/V
+    land in a throwaway slot with stored position -1, which every query masks.
+    Returns output (B, T, d) and the updated cache.
+    """
+    B, T = x.shape[:2]
+    q, k_new, v_new = _project_qkv(p, cfg, x, x, cross=False)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    cache = _write_cache(cache, k_new, v_new, positions)
+    out = _attend_maybe_chunked(
+        q, cache.k, cache.v, positions, cache.pos >= 0, cache.pos,
+        causal=True, window=cfg.sliding_window, q_per_kv=cfg.q_per_kv)
+    return dense(p["wo"], out.reshape(B, T, -1)), cache

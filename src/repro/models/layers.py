@@ -1,0 +1,132 @@
+"""Parameter-init and primitive layers shared by all model families.
+
+Params are plain nested dicts of jnp arrays (pure-functional, no flax).
+Naming conventions are load-bearing: ``repro.sharding.rules`` assigns
+PartitionSpecs from leaf path names (``embed``, ``wq``, ``w_in`` …).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dense_init(key, d_in: int, d_out: int, *, use_bias: bool, dtype=jnp.float32,
+               scale: float | None = None) -> dict:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(d: int, kind: str, dtype=jnp.float32) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jnp.ndarray, kind: str, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# positions
+
+
+def rope_frequencies(head_dim: int, theta: float, dtype=jnp.float32) -> jnp.ndarray:
+    half = head_dim // 2
+    return (1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))).astype(dtype)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., T, H, head_dim); positions: broadcastable to (..., T)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                 # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(angles)[..., None, :]                       # (..., T, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d_model: int, dtype=jnp.float32) -> jnp.ndarray:
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d_model, 2, dtype=jnp.float32)
+                  * (-math.log(10_000.0) / d_model))
+    pe = jnp.zeros((max_len, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+
+
+def ffn_init(key, d_model: int, d_ff: int, *, use_bias: bool, gated: bool = True,
+             dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(k1, d_model, d_ff, use_bias=use_bias, dtype=dtype),
+        "w_out": dense_init(k2, d_ff, d_model, use_bias=use_bias, dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(k3, d_model, d_ff, use_bias=use_bias, dtype=dtype)
+    return p
+
+
+def ffn(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = dense(p["w_in"], x)
+    if "w_gate" in p:
+        h = jax.nn.silu(dense(p["w_gate"], x)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return dense(p["w_out"], h)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32) -> dict:
+    return {"embed": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embed(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return p["embed"][tokens]
+
+
+def unembed(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["embed"].T
+
+
+def logits_init(key, d_model: int, vocab: int, dtype=jnp.float32) -> dict:
+    return {"w_vocab": (jax.random.normal(key, (d_model, vocab))
+                        * (1.0 / math.sqrt(d_model))).astype(dtype)}

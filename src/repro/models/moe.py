@@ -1,0 +1,97 @@
+"""Mixture-of-Experts FFN with capacity-based dense dispatch.
+
+Used by three assigned architectures:
+  - llama4-maverick-400b-a17b : 128 experts, top-1, shared expert
+  - phi3.5-moe-42b-a6.6b      : 16 experts,  top-2
+  - jamba-v0.1-52b            : 16 experts,  top-2, on every other layer
+
+Distribution: the expert dimension ``E`` is sharded over the ``model`` mesh
+axis (expert parallelism); tokens live on ``data``. The einsum-based dispatch
+(one-hot combine (T,E,C) against token states) lowers to all-to-all-shaped
+collectives under GSPMD, which is what the roofline's collective term tracks.
+
+Capacity: C = ceil(top_k * T / E * capacity_factor); tokens over capacity are
+dropped (standard Switch/GShard semantics) and carried by the residual stream
+(+ shared expert when configured). An auxiliary load-balance loss and router
+z-loss are returned for the trainer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, ffn, ffn_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    m = cfg.moe
+    k_router, k_exp, k_shared = jax.random.split(key, 3)
+    d, dff, E = cfg.d_model, m.d_ff, m.n_experts
+    exp_keys = jax.random.split(k_exp, E)
+    # experts: stacked (E, ...) leaves so the E dim shards over 'model'
+    experts = jax.vmap(
+        lambda k: ffn_init(k, d, dff, use_bias=False, gated=True, dtype=dtype)
+    )(exp_keys)
+    p = {
+        "router": dense_init(k_router, d, E, use_bias=False, dtype=dtype),
+        "experts": experts,
+    }
+    if m.shared_expert:
+        p["shared"] = ffn_init(k_shared, d, dff, use_bias=False, gated=True, dtype=dtype)
+    return p
+
+
+def moe_ffn(p: dict, cfg: ModelConfig, x) -> tuple[jnp.ndarray, dict]:
+    """x: (B, T, d) -> (out, aux) with load-balance metrics/losses."""
+    m = cfg.moe
+    B, T, d = x.shape
+    E, k = m.n_experts, m.top_k
+    tokens = x.reshape(B * T, d)
+    n_tok = B * T
+
+    logits = (tokens @ p["router"]["w"]).astype(jnp.float32)       # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                   # (N, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    capacity = max(1, int(k * n_tok / E * m.capacity_factor))
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)           # (N, k, E)
+    flat = onehot.reshape(n_tok * k, E)
+    pos_in_expert = jnp.cumsum(flat, axis=0) * flat - 1             # (N*k, E)
+    pos = jnp.max(pos_in_expert.reshape(n_tok, k, E), axis=-1)      # (N, k)
+    keep = pos < capacity
+
+    # scatter/gather dispatch: O(N·k·d) data movement. (The GShard one-hot
+    # einsum form is O(N·k·E·C·d) — quadratic in tokens since C ∝ N — and
+    # dominated the compute roofline term in the dry-run; see EXPERIMENTS.md
+    # §Perf. The scatter is bit-identical: buffer slots are unique.)
+    kept = keep.astype(tokens.dtype)[..., None]                     # (N, k, 1)
+    slot = jnp.where(keep, pos, capacity)                           # C = drop
+    expert_in = jnp.zeros((E, capacity + 1, d), tokens.dtype)
+    expert_in = expert_in.at[gate_idx, slot].add(tokens[:, None, :] * kept)
+    expert_in = expert_in[:, :capacity, :]                          # (E, C, d)
+
+    expert_out = jax.vmap(lambda pe, xe: ffn(pe, xe))(p["experts"], expert_in)
+
+    gathered = expert_out[gate_idx, jnp.minimum(slot, capacity - 1)]  # (N,k,d)
+    out = jnp.sum(gathered * kept * gate_vals[..., None].astype(tokens.dtype),
+                  axis=1)                                           # (N, d)
+
+    if "shared" in p:
+        out = out + ffn(p["shared"], tokens)
+
+    # GShard aux load-balance loss + router z-loss
+    frac_tokens = jnp.mean(jnp.sum(jax.nn.one_hot(gate_idx[:, 0], E), axis=0)) / max(n_tok, 1)
+    me = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    ce = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(me * ce) * m.aux_loss_weight
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * m.router_z_loss
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    aux = {"moe_aux_loss": aux_loss, "moe_z_loss": z_loss,
+           "moe_dropped_frac": dropped, "moe_top1_frac": frac_tokens}
+    return out.reshape(B, T, d), aux

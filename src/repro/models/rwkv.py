@@ -1,0 +1,144 @@
+"""RWKV6 "Finch" time-mix with data-dependent decay (arXiv:2404.05892).
+
+Per head (size ``hd``), with receptance r, key k, value v, decay w, bonus u:
+
+    S_t = diag(exp(-exp(w_t))) S_{t-1} + k_t^T v_t          (hd × hd state)
+    o_t = r_t ( S_{t-1} + diag(u) k_t^T v_t )               -- "bonus" term
+
+The decay w_t is *data-dependent* (low-rank LoRA on the token-shifted input),
+which is the Finch contribution over RWKV5. Token-shift mixes x_{t-1} into the
+r/k/v/w/g projections with learned per-channel interpolation.
+
+TPU adaptation: a ``lax.scan`` over time in chunks of the head-state update —
+the state is (B, H, hd, hd), so the arithmetic intensity per step is a rank-1
+update; we batch it over (B, H) and let the VPU vectorize over hd×hd. The HLO
+is sequence-length independent (one while loop), which is what makes the
+524k-token shape lower cheaply. Channel-mix is the standard RWKV squared-relu
+FFN and reuses the generic FFN machinery's sharding rules.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm, dense, dense_init, norm_init
+
+
+def _heads(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.rwkv.head_dim
+    assert cfg.d_model % hd == 0
+    return cfg.d_model // hd, hd
+
+
+def rwkv_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    H, hd = _heads(cfg)
+    keys = jax.random.split(key, 10)
+    lora = max(32, d // 16)
+    p = {
+        # token-shift interpolation weights (per projection)
+        "mix": (jax.random.uniform(keys[0], (5, d)) * 0.5 + 0.25).astype(dtype),
+        "wr": dense_init(keys[1], d, d, use_bias=False, dtype=dtype),
+        "wk": dense_init(keys[2], d, d, use_bias=False, dtype=dtype),
+        "wv": dense_init(keys[3], d, d, use_bias=False, dtype=dtype),
+        "wg": dense_init(keys[4], d, d, use_bias=False, dtype=dtype),
+        # data-dependent decay: w_t = w_base + lora
+        "w_base": (jnp.zeros((d,)) - 5.0).astype(dtype),
+        "w_lora_a": dense_init(keys[5], d, lora, use_bias=False, dtype=dtype),
+        "w_lora_b": dense_init(keys[6], lora, d, use_bias=False, dtype=dtype,
+                               scale=1.0 / math.sqrt(lora)),
+        "u": (jax.random.normal(keys[7], (H, hd)) * 0.1).astype(dtype),
+        "wo": dense_init(keys[8], d, d, use_bias=False, dtype=dtype),
+        "ln_x": norm_init(d, "layernorm", dtype),  # group-norm over heads, approx LN
+    }
+    return p
+
+
+def _projections(p, cfg, x, x_prev):
+    """Token-shifted projections. x: (B,T,d); x_prev: (B,T,d) = x shifted by 1."""
+    mix = p["mix"]
+    xr = x * mix[0] + x_prev * (1 - mix[0])
+    xk = x * mix[1] + x_prev * (1 - mix[1])
+    xv = x * mix[2] + x_prev * (1 - mix[2])
+    xw = x * mix[3] + x_prev * (1 - mix[3])
+    xg = x * mix[4] + x_prev * (1 - mix[4])
+    r = dense(p["wr"], xr)
+    k = dense(p["wk"], xk)
+    v = dense(p["wv"], xv)
+    g = jax.nn.silu(dense(p["wg"], xg))
+    w = p["w_base"] + dense(p["w_lora_b"], jnp.tanh(dense(p["w_lora_a"], xw)))
+    decay = jnp.exp(-jnp.exp(w.astype(jnp.float32)))         # (B,T,d) in (0,1)
+    return r, k, v, g, decay
+
+
+def _split_heads(x, H, hd):  # (B,T,d) -> (B,T,H,hd)
+    return x.reshape(*x.shape[:-1], H, hd)
+
+
+def rwkv_mixer(p: dict, cfg: ModelConfig, x, *, state=None, x_last=None,
+               lengths=None):
+    """Time-mix over a full sequence (train/prefill) or continuation (decode).
+
+    x: (B, T, d). ``state``: (B, H, hd, hd) carried WKV state; ``x_last``:
+    (B, d) last token of the previous chunk (token-shift seam). ``lengths``
+    masks right-pad steps to identity state updates (decay=1, kv=0) so the
+    final state equals the state at each row's true end.
+    Returns (out, (state, x_last)).
+    """
+    B, T, d = x.shape
+    H, hd = _heads(cfg)
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    if x_last is None:
+        x_last = jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    r, k, v, g, decay = _projections(p, cfg, x, x_prev)
+    if lengths is not None:
+        valid = (jnp.arange(T) < lengths[:, None])[..., None]
+        decay = jnp.where(valid, decay, 1.0)   # pad steps: S_t = S_{t-1}
+        k = k * valid.astype(k.dtype)          # pad steps: kv increment = 0
+    r = _split_heads(r, H, hd).astype(jnp.float32)
+    k = _split_heads(k, H, hd).astype(jnp.float32)
+    v = _split_heads(v, H, hd).astype(jnp.float32)
+    decay = _split_heads(decay, H, hd)
+    u = p["u"].astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                              # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]            # (B,H,hd,hd)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, o
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, decay))
+    state, o = jax.lax.scan(step, state, inputs)
+    o = jnp.moveaxis(o, 0, 1).reshape(B, T, d)                # (B,T,d)
+    o = apply_norm(p["ln_x"], o.astype(x.dtype), "layernorm")
+    out = dense(p["wo"], o * g)
+    return out, (state, x[:, -1, :])
+
+
+# channel-mix (RWKV FFN): squared-relu with token shift ------------------------
+
+
+def rwkv_channel_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "mix_c": (jax.random.uniform(key, (1, cfg.d_model)) * 0.5 + 0.25).astype(dtype),
+        "w_in": dense_init(k1, cfg.d_model, cfg.d_ff, use_bias=False, dtype=dtype),
+        "w_out": dense_init(k2, cfg.d_ff, cfg.d_model, use_bias=False, dtype=dtype),
+    }
+
+
+def rwkv_channel_mix(p: dict, x, *, x_last=None):
+    B, T, d = x.shape
+    if x_last is None:
+        x_last = jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+    xk = x * p["mix_c"][0] + x_prev * (1 - p["mix_c"][0])
+    h = jnp.square(jax.nn.relu(dense(p["w_in"], xk)))
+    return dense(p["w_out"], h), x[:, -1, :]

@@ -1,0 +1,3 @@
+from repro.serving.engine import ReactionEngine, EngineConfig, Prediction
+
+__all__ = ["ReactionEngine", "EngineConfig", "Prediction"]

@@ -1,0 +1,190 @@
+"""Serving engine: the industrial-application layer the paper targets
+(reaction-prediction assistants, CASP single-step retrosynthesis models).
+
+Pipeline per request batch:
+  tokenize -> encode once -> extract source-copy drafts (host, negligible
+  cost) -> speculative greedy / speculative beam search -> detokenize.
+
+Decoding modes mirror the paper's experiments:
+  greedy               Table 2 baseline
+  speculative          Table 2, DL/N_d configurable
+  beam                 Table 3/4 baseline
+  speculative_beam     Table 3/4, the paper's SBS
+
+The engine jits one function per (mode, shape-bucket) and reuses it across
+requests — queries are padded to the bucket's max source length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import (
+    batch_drafts, beam_search, extract_drafts, greedy_decode, seq2seq_handle,
+    speculative_beam_search, speculative_greedy_decode,
+)
+from repro.data.tokenizer import SmilesTokenizer
+from repro.models import seq2seq as s2s
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    mode: str = "speculative"        # greedy|speculative|beam|speculative_beam
+    draft_len: int = 10              # the paper's best DL
+    n_drafts: int = 25               # the paper's N_d cap
+    n_beams: int = 5
+    max_new: int = 96
+    max_src: int = 128
+    dilations: tuple[int, ...] = (1,)
+
+
+@dataclasses.dataclass
+class Prediction:
+    smiles: list[str]                # candidates, best first
+    logprobs: list[float]
+    n_calls: int
+    acceptance_rate: float
+    wall_s: float
+
+
+class ReactionEngine:
+    def __init__(self, params, cfg: ModelConfig, tokenizer: SmilesTokenizer,
+                 engine_cfg: EngineConfig | None = None):
+        self.params = params
+        self.cfg = cfg
+        self.tok = tokenizer
+        self.ecfg = engine_cfg or EngineConfig()
+        self._jitted: dict = {}
+
+    # -- jitted inner functions (cached per batch-shape) --------------------
+    def _greedy_fn(self, B):
+        ecfg = self.ecfg
+
+        @jax.jit
+        def run(params, src):
+            memory, src_mask = s2s.encode(params, self.cfg, src)
+            handle = seq2seq_handle(params, self.cfg, memory_mask=src_mask)
+            cache = s2s.init_cache(self.cfg, B, ecfg.max_new + 2,
+                                   memory=memory, params=params)
+            last = jnp.full((B,), self.tok.bos_id, jnp.int32)
+            pos = jnp.zeros((B,), jnp.int32)
+            return greedy_decode(handle, cache, last, pos,
+                                 max_new=ecfg.max_new, eos_id=self.tok.eos_id)
+
+        return run
+
+    def _spec_fn(self, B):
+        ecfg = self.ecfg
+
+        @jax.jit
+        def run(params, src, drafts, mask):
+            memory, src_mask = s2s.encode(params, self.cfg, src)
+            handle = seq2seq_handle(params, self.cfg, memory_mask=src_mask)
+            cache = s2s.init_cache(self.cfg, B,
+                                   ecfg.max_new + ecfg.draft_len + 2,
+                                   memory=memory, params=params)
+            last = jnp.full((B,), self.tok.bos_id, jnp.int32)
+            pos = jnp.zeros((B,), jnp.int32)
+            return speculative_greedy_decode(
+                handle, cache, last, pos, drafts, mask,
+                max_new=ecfg.max_new, eos_id=self.tok.eos_id)
+
+        return run
+
+    def _beam_fn(self, spec: bool):
+        ecfg = self.ecfg
+
+        @jax.jit
+        def run(params, src, drafts, mask):
+            memory, src_mask = s2s.encode(params, self.cfg, src)
+            handle = seq2seq_handle(params, self.cfg, memory_mask=src_mask)
+            size = ecfg.max_new + (ecfg.draft_len if spec else 0) + 2
+            cache = s2s.init_cache(self.cfg, 1, size, memory=memory,
+                                   params=params)
+            if spec:
+                return speculative_beam_search(
+                    handle, cache, self.tok.bos_id, 0, drafts, mask,
+                    n_beams=ecfg.n_beams, max_new=ecfg.max_new,
+                    eos_id=self.tok.eos_id)
+            return beam_search(handle, cache, self.tok.bos_id, 0,
+                               n_beams=ecfg.n_beams, max_new=ecfg.max_new,
+                               eos_id=self.tok.eos_id)
+
+        return run
+
+    def _get(self, kind, *args):
+        key = (kind,) + args
+        if key not in self._jitted:
+            maker = {"greedy": self._greedy_fn, "spec": self._spec_fn,
+                     "beam": self._beam_fn}[kind]
+            self._jitted[key] = maker(*args)
+        return self._jitted[key]
+
+    # -- public API ----------------------------------------------------------
+    def _encode_src(self, queries: Sequence[str]) -> np.ndarray:
+        rows = [self.tok.encode_padded(q, self.ecfg.max_src, add_eos=True)
+                for q in queries]
+        return np.stack(rows)
+
+    def predict(self, queries: Sequence[str]) -> list[Prediction]:
+        """Batched greedy / speculative-greedy prediction (one best output)."""
+        ecfg = self.ecfg
+        src = jnp.asarray(self._encode_src(queries))
+        B = src.shape[0]
+        t0 = time.time()
+        if ecfg.mode == "greedy":
+            res = self._get("greedy", B)(self.params, src)
+            rate = jnp.zeros((B,))
+        elif ecfg.mode == "speculative":
+            drafts, mask = batch_drafts(np.asarray(src), ecfg.draft_len,
+                                        ecfg.n_drafts,
+                                        dilations=ecfg.dilations)
+            res = self._get("spec", B)(self.params, src, jnp.asarray(drafts),
+                                       jnp.asarray(mask))
+            rate = res.acceptance_rate
+        else:
+            raise ValueError(f"predict() supports greedy/speculative, "
+                             f"got {ecfg.mode}")
+        jax.block_until_ready(res.tokens)
+        wall = time.time() - t0
+        out = []
+        for b in range(B):
+            smi = self.tok.decode(np.asarray(res.tokens[b]))
+            out.append(Prediction(smiles=[smi], logprobs=[0.0],
+                                  n_calls=int(res.n_calls),
+                                  acceptance_rate=float(rate[b]),
+                                  wall_s=wall / B))
+        return out
+
+    def predict_topn(self, query: str) -> Prediction:
+        """Beam / speculative-beam search for one query (the paper's B=1
+        retrosynthesis serving regime)."""
+        ecfg = self.ecfg
+        src = jnp.asarray(self._encode_src([query]))
+        spec = ecfg.mode == "speculative_beam"
+        dl = ecfg.draft_len if spec else 0
+        drafts, mask = extract_drafts(np.asarray(src[0]), max(dl, 1),
+                                      ecfg.n_drafts, dilations=ecfg.dilations)
+        if dl == 0:
+            drafts = drafts[:1, :0]
+            mask = mask[:1]
+        t0 = time.time()
+        res = self._get("beam", spec)(self.params, src, jnp.asarray(drafts),
+                                      jnp.asarray(mask))
+        jax.block_until_ready(res.tokens)
+        wall = time.time() - t0
+        smiles = [self.tok.decode(np.asarray(res.tokens[i]))
+                  for i in range(res.tokens.shape[0])]
+        acc = float(getattr(res, "accepted_tokens", 0.0))
+        return Prediction(smiles=smiles,
+                          logprobs=[float(x) for x in res.logprobs],
+                          n_calls=int(res.n_calls),
+                          acceptance_rate=acc, wall_s=wall)

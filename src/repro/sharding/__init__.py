@@ -1,0 +1,3 @@
+from repro.sharding import ctx, rules
+
+__all__ = ["ctx", "rules"]

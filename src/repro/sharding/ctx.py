@@ -1,0 +1,64 @@
+"""Activation-sharding context.
+
+Model code calls ``constrain_activation(x)`` at layer boundaries; outside a
+distributed launch this is the identity (CPU unit tests see no mesh, no
+constraint). The launcher installs rules before tracing:
+
+    with shard_ctx.activation_rules(mesh, batch=("data",), seq=None):
+        lowered = jax.jit(step).lower(...)
+
+Pinning the residual stream's batch axis is what keeps remat-saved scan
+carries data-sharded (without it GSPMD let 86 GB/device of saved activations
+go batch-replicated in the command-r train_4k dry-run). ``seq=("model",)``
+additionally enables sequence parallelism — a §Perf hillclimb variant.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current():
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def activation_rules(mesh, *, batch=("data",), seq=None):
+    prev = _current()
+    _state.rules = {"mesh": mesh, "batch": batch, "seq": seq}
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain_activation(x):
+    """Apply a (batch, seq, d_model) sharding constraint when rules are set."""
+    rules = _current()
+    if rules is None or x.ndim < 3:
+        return x
+    batch = rules["batch"]
+    if x.shape[0] % _size(rules["mesh"], batch) != 0:
+        batch = None
+    seq = rules["seq"]
+    if seq is not None and x.shape[1] % _size(rules["mesh"], seq) != 0:
+        seq = None
+    spec = P(batch, seq, *((None,) * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules["mesh"], spec))
+
+
+def _size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = axes if isinstance(axes, tuple) else (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,132 @@
+"""Name-based parameter sharding rules.
+
+Parameter leaf names are a deliberate contract with the model code
+(``repro.models.layers`` docstring): the rules below map each leaf to a
+PartitionSpec over the production mesh axes, then drop any axis assignment
+whose dimension is not divisible by the mesh axis size (e.g. GQA KV
+projections with 8 heads on a 16-way model axis are replicated — DESIGN §6).
+
+Under ``blocks`` every leaf carries a leading scan-repeat dim, which gets a
+``None`` prepended.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL = "model"
+
+# last-name -> spec on the *trailing* dims of the leaf (biases handled by len)
+_RULES_2D: dict[str, tuple] = {
+    # embeddings / heads
+    "embed":    (MODEL, None),       # (vocab, d): shard vocab
+    "w_vocab":  (None, MODEL),       # (d, vocab)
+    # attention/ffn dense leaves live under a parent key
+}
+
+# parent-qualified rules: (parent, leaf) -> trailing spec
+_PARENT_RULES: dict[tuple, tuple] = {
+    ("wq", "w"): (None, MODEL), ("wq", "b"): (MODEL,),
+    ("wk", "w"): (None, MODEL), ("wk", "b"): (MODEL,),
+    ("wv", "w"): (None, MODEL), ("wv", "b"): (MODEL,),
+    ("wg", "w"): (None, MODEL), ("wg", "b"): (MODEL,),
+    ("wr", "w"): (None, MODEL), ("wr", "b"): (MODEL,),
+    ("wo", "w"): (MODEL, None), ("wo", "b"): (None,),
+    ("w_in", "w"): (None, MODEL), ("w_in", "b"): (MODEL,),
+    ("w_gate", "w"): (None, MODEL), ("w_gate", "b"): (MODEL,),
+    ("w_out", "w"): (MODEL, None), ("w_out", "b"): (None,),
+    ("w_xdbc", "w"): (MODEL, None),
+    ("w_dt", "w"): (None, MODEL), ("w_dt", "b"): (MODEL,),
+    ("w_lora_a", "w"): (None, None),
+    ("w_lora_b", "w"): (None, None),
+    ("router", "w"): (None, None),   # router is tiny; replicate
+}
+
+_NAME_RULES: dict[str, tuple] = {
+    "conv_w": (None, MODEL),
+    "conv_b": (MODEL,),
+    "A_log": (MODEL, None),
+    "D": (MODEL,),
+    "u": (MODEL, None),
+}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            names.append(k.name)
+        else:
+            names.append(str(k))
+    return names
+
+
+def _base_spec(names: list[str], ndim: int) -> tuple:
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    if (parent, leaf) in _PARENT_RULES:
+        spec = _PARENT_RULES[(parent, leaf)]
+    elif leaf in _NAME_RULES:
+        spec = _NAME_RULES[leaf]
+    elif leaf in _RULES_2D:
+        spec = _RULES_2D[leaf]
+    else:
+        spec = ()  # norms, gates, mixes: replicate
+    # pad leading dims with None (scan-repeat dim, expert dim handled below)
+    spec = (None,) * (ndim - len(spec)) + tuple(spec)
+    # expert-parallel: leaves under "experts" shard their expert dim (the dim
+    # right after the scan-repeat dim) over MODEL and replicate internals.
+    if "experts" in names:
+        in_blocks = "blocks" in names
+        e_axis = 1 if in_blocks else 0
+        spec = tuple(
+            MODEL if i == e_axis else None for i in range(ndim)
+        )
+    return spec
+
+
+def _fit_to_shape(spec: tuple, shape: tuple, mesh: Mesh) -> P:
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            fixed.append(None)
+        else:
+            size = int(np.prod([mesh.shape[a] for a in (ax if isinstance(ax, tuple) else (ax,))]))
+            fixed.append(ax if dim % size == 0 else None)
+    return P(*fixed)
+
+
+def param_pspecs(params, mesh: Mesh, *, fsdp_axes: tuple = ()):
+    """PartitionSpec pytree mirroring ``params`` (works on avals too).
+
+    ``fsdp_axes``: additionally shard the largest still-replicated dim of
+    every >=2D leaf over these axes (ZeRO-3-style fully-sharded params) —
+    required for the 35B+ configs to fit per-chip HBM in the dry-run.
+    """
+
+    def one(path, leaf):
+        names = _path_names(path)
+        spec = list(_fit_to_shape(_base_spec(names, leaf.ndim), leaf.shape, mesh))
+        if fsdp_axes and leaf.ndim >= 2:
+            size = int(np.prod([mesh.shape[a] for a in fsdp_axes]))
+            # largest unsharded trailing dim (skip the scan-repeat dim 0
+            # when the leaf sits under "blocks")
+            start = 1 if "blocks" in names or leaf.ndim >= 3 else 0
+            cands = [(leaf.shape[i], i) for i in range(start, leaf.ndim)
+                     if spec[i] is None and leaf.shape[i] % size == 0]
+            if cands:
+                _, i = max(cands)
+                spec[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, mesh: Mesh, *, fsdp_axes: tuple = ()):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_pspecs(params, mesh, fsdp_axes=fsdp_axes))

@@ -1,0 +1,8 @@
+from repro.training.loss import cross_entropy_loss
+from repro.training.optimizer import adam_init, adam_update, noam_schedule
+from repro.training.trainer import Trainer, make_seq2seq_train_step, make_lm_train_step
+
+__all__ = [
+    "cross_entropy_loss", "adam_init", "adam_update", "noam_schedule",
+    "Trainer", "make_seq2seq_train_step", "make_lm_train_step",
+]

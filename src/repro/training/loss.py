@@ -1,0 +1,27 @@
+"""Cross-entropy with label smoothing (Molecular Transformer training setup)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy_loss(logits, labels, *, mask=None, label_smoothing: float = 0.0):
+    """logits: (..., V); labels: (...) int; mask: (...) 1.0 = count.
+
+    Returns (mean loss over masked tokens, metrics dict).
+    """
+    V = logits.shape[-1]
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    if label_smoothing > 0.0:
+        smooth = -jnp.mean(lp, axis=-1)
+        nll = (1.0 - label_smoothing) * nll + label_smoothing * smooth
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    acc = jnp.sum((jnp.argmax(lp, -1) == labels) * mask) / denom
+    return loss, {"loss": loss, "token_accuracy": acc, "tokens": denom}

@@ -1,0 +1,78 @@
+"""Adam (+ Noam warmup schedule) as pure pytree functions — no optax
+dependency; states shard exactly like their parameters under pjit."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+def adam_init(params) -> AdamState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)  # moments kept in f32
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     mu=jax.tree_util.tree_map(z, params),
+                     nu=jax.tree_util.tree_map(z, params))
+
+
+def adam_update(grads, state: AdamState, params, *, lr, b1=0.9, b2=0.998,
+                eps=1e-9, weight_decay: float = 0.0):
+    """lr may be a scalar or a callable(step) (e.g. noam_schedule)."""
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    b1t = 1.0 - b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / b1t
+        vhat = v / b2t
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+    # flatten/unflatten (params trees contain tuples, so tuple-leaf tricks
+    # are unsafe; explicit leaf lists are)
+    leaves_p, treedef = jax.tree_util.tree_flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(state.mu)
+    leaves_v = treedef.flatten_up_to(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(leaves_g, leaves_m, leaves_v, leaves_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, mu=new_m, nu=new_v)
+
+
+def noam_schedule(d_model: int, warmup: int = 8000, factor: float = 2.0):
+    """The Molecular Transformer's LR schedule (Vaswani 2017 / Schwaller 2019)."""
+
+    def lr(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return factor * d_model ** -0.5 * jnp.minimum(s ** -0.5,
+                                                      s * warmup ** -1.5)
+
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm

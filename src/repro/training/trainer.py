@@ -1,0 +1,109 @@
+"""Train-step builders + a host-side Trainer loop.
+
+``make_seq2seq_train_step`` (Molecular Transformer) and ``make_lm_train_step``
+(decoder-only architectures) return pure jit-able functions
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` that the
+launcher can wrap in ``jax.jit`` with shardings for the production mesh —
+the same functions the multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import seq2seq as s2s
+from repro.models import transformer as tr
+from repro.training.loss import cross_entropy_loss
+from repro.training.optimizer import (
+    AdamState, adam_init, adam_update, clip_by_global_norm, noam_schedule,
+)
+
+
+def make_seq2seq_train_step(cfg: ModelConfig, *, label_smoothing: float = 0.1,
+                            lr=None, max_grad_norm: float = 1.0) -> Callable:
+    lr = lr if lr is not None else noam_schedule(cfg.d_model)
+
+    def train_step(params, opt_state: AdamState, batch):
+        def loss_fn(p):
+            logits, aux = s2s.apply(p, cfg, batch["src"], batch["tgt_in"])
+            mask = (batch["tgt_out"] != 0).astype(jnp.float32)
+            loss, metrics = cross_entropy_loss(
+                logits, batch["tgt_out"], mask=mask,
+                label_smoothing=label_smoothing)
+            return loss, metrics
+
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt_state = adam_update(grads, opt_state, params, lr=lr)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_lm_train_step(cfg: ModelConfig, *, label_smoothing: float = 0.0,
+                       lr=3e-4, max_grad_norm: float = 1.0,
+                       remat: bool = False) -> Callable:
+    """Decoder-only LM step (all assigned archs). Batch keys:
+    tokens (B, T) and loss_mask (B, T); audio: embeddings + labels."""
+
+    def train_step(params, opt_state: AdamState, batch):
+        def loss_fn(p):
+            if cfg.family == "audio":
+                logits, aux = tr.apply(p, cfg, embeddings=batch["embeddings"],
+                                       remat=remat)
+                labels, mask = batch["labels"], None
+            else:
+                tokens = batch["tokens"]
+                memory = batch.get("memory")
+                logits, aux = tr.apply(p, cfg, tokens[:, :-1], memory=memory,
+                                       remat=remat)
+                labels = tokens[:, 1:]
+                mask = batch["loss_mask"][:, 1:]
+            loss, metrics = cross_entropy_loss(
+                logits, labels, mask=mask, label_smoothing=label_smoothing)
+            for k, v in aux.items():
+                loss = loss + v
+                metrics[k] = v
+            return loss, metrics
+
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt_state = adam_update(grads, opt_state, params, lr=lr)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    """Host loop: jit once, iterate batches, collect metrics."""
+
+    def __init__(self, cfg: ModelConfig, params, train_step: Callable):
+        self.cfg = cfg
+        self.params = params
+        self.opt_state = adam_init(params)
+        self._step = jax.jit(train_step, donate_argnums=(0, 1))
+        self.history: list[dict] = []
+
+    def fit(self, batches: Iterable[dict], *, log_every: int = 50,
+            verbose: bool = True) -> list[dict]:
+        t0 = time.time()
+        for i, batch in enumerate(batches):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, batch)
+            if i % log_every == 0:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = i
+                m["wall_s"] = time.time() - t0
+                self.history.append(m)
+                if verbose:
+                    print(f"step {i:5d} loss {m['loss']:.4f} "
+                          f"acc {m['token_accuracy']:.3f} ({m['wall_s']:.1f}s)")
+        return self.history

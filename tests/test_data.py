@@ -1,0 +1,91 @@
+"""Data layer + drafting invariants (hypothesis property tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.drafting import extract_drafts
+from repro.data.synthetic import SyntheticReactionDataset, make_reaction
+from repro.data.tokenizer import SmilesTokenizer, tokenize_smiles
+from repro.data.pipeline import lm_batch, padded_batch
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10_000))
+def test_synthetic_reactions_tokenize_and_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    r = make_reaction(rng)
+    tok = SmilesTokenizer.from_corpus([r.reactants, r.product])
+    for s in (r.reactants, r.product):
+        ids = tok.encode(s)
+        assert tok.decode(ids) == s
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10_000))
+def test_products_share_substrings_with_reactants(seed):
+    """The property the paper exploits (Fig. 2): long common token substrings."""
+    rng = np.random.default_rng(seed)
+    r = make_reaction(rng)
+    rt, pt = tokenize_smiles(r.reactants), tokenize_smiles(r.product)
+    # longest common substring at token level
+    best = 0
+    for i in range(len(pt)):
+        for j in range(len(rt)):
+            k = 0
+            while (i + k < len(pt) and j + k < len(rt)
+                   and pt[i + k] == rt[j + k]):
+                k += 1
+            best = max(best, k)
+    assert best >= min(8, len(pt)), (r.reactants, r.product, best)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(4, 60), min_size=0, max_size=40),
+       st.integers(1, 8), st.integers(1, 30))
+def test_extract_drafts_are_substrings(tokens, dl, nd):
+    drafts, mask = extract_drafts(tokens, dl, nd)
+    assert drafts.shape == (nd, dl)
+    toks = [t for t in tokens if t != 0]
+    s = ",".join(map(str, toks))
+    for i in range(nd):
+        if not mask[i]:
+            continue
+        w = [t for t in drafts[i] if t != 0]
+        assert ",".join(map(str, w)) in s
+
+
+def test_extract_drafts_sliding_window_count():
+    toks = list(range(4, 24))  # 20 tokens
+    drafts, mask = extract_drafts(toks, 4, 100)
+    assert int(mask.sum()) == 17  # 20 - 4 + 1
+    np.testing.assert_array_equal(drafts[0], toks[:4])
+    np.testing.assert_array_equal(drafts[16], toks[16:20])
+
+
+def test_extract_drafts_dilated():
+    toks = list(range(4, 24))
+    drafts, mask = extract_drafts(toks, 4, 100, dilations=(1, 2))
+    assert int(mask.sum()) == 17 + 14  # stride-1 + dilation-2 windows
+    np.testing.assert_array_equal(drafts[17], toks[0:7:2])
+
+
+def test_padded_batch_layout():
+    ds = SyntheticReactionDataset(4, seed=1)
+    b = padded_batch(ds.tokenizer, [ds.pair(i) for i in range(4)], 64, 64)
+    tok = ds.tokenizer
+    assert (b["tgt_in"][:, 0] == tok.bos_id).all()
+    # tgt_out is tgt_in shifted left by one (teacher forcing), ending in EOS
+    for i in range(4):
+        L = int((b["tgt_out"][i] != tok.pad_id).sum())
+        assert b["tgt_out"][i, L - 1] == tok.eos_id
+        np.testing.assert_array_equal(b["tgt_in"][i, 1:L],
+                                      b["tgt_out"][i, : L - 1])
+
+
+def test_lm_batch_loss_mask_covers_target_only():
+    ds = SyntheticReactionDataset(2, seed=2)
+    b = lm_batch(ds.tokenizer, [ds.pair(0)], 96)
+    src_len = len(ds.tokenizer.encode(ds.pair(0)[0])) + 2  # bos + sep
+    assert b["loss_mask"][0, :src_len].sum() == 0
+    assert b["loss_mask"][0].sum() > 0

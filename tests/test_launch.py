@@ -1,0 +1,128 @@
+"""Launch layer: sharding rules, input specs, HLO collective parsing, and a
+single-device lower+compile of the step builders (the production-mesh
+equivalent runs in repro.launch.dryrun with 512 host devices)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.launch import steps as steps_mod
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+from repro.models import transformer as tr
+from repro.sharding import rules
+
+ARCHS = [a for a in list_archs() if not a.startswith("mt-")]
+
+
+def tiny_mesh():
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+def test_input_specs_shapes():
+    for arch in ARCHS:
+        for shape in steps_mod.SHAPES:
+            if steps_mod.skip_reason(arch, shape):
+                continue
+            specs = steps_mod.input_specs(arch, shape)
+            assert specs, (arch, shape)
+            meta = steps_mod.SHAPES[shape]
+            if meta["kind"] == "decode":
+                assert specs["tokens"].shape == (meta["batch"], 1)
+                assert "cache" in specs
+
+
+def test_skip_reasons():
+    assert steps_mod.skip_reason("hubert-xlarge", "decode_32k")
+    assert steps_mod.skip_reason("hubert-xlarge", "long_500k")
+    assert steps_mod.skip_reason("hubert-xlarge", "train_4k") is None
+    assert steps_mod.skip_reason("rwkv6-1.6b", "long_500k") is None
+
+
+def test_long_500k_subquadratic_variants():
+    """Dense archs get the sliding-window variant; SSM/hybrid run natively."""
+    assert steps_mod._dryrun_cfg("qwen3-8b", "long_500k").sliding_window > 0
+    assert steps_mod._dryrun_cfg("rwkv6-1.6b", "long_500k").sliding_window == 0
+    assert steps_mod._dryrun_cfg("jamba-v0.1-52b", "long_500k").sliding_window == 0
+    assert steps_mod._dryrun_cfg("qwen3-8b", "train_4k").sliding_window == 0
+
+
+def test_param_pspecs_rules():
+    cfg = get_config("qwen3-8b", reduced=True)
+    params = tr.init(jax.random.PRNGKey(0), cfg)
+    mesh = tiny_mesh()
+    specs = rules.param_pspecs(params, mesh)
+    blocks = specs["blocks"][0]
+    # stacked leaves get a leading None for the scan-repeat dim
+    assert blocks["attn"]["wq"]["w"] == P(None, None, "model")
+    assert blocks["attn"]["wo"]["w"] == P(None, "model", None)
+    assert blocks["ffn"]["w_in"]["w"] == P(None, None, "model")
+    assert blocks["ffn"]["w_out"]["w"] == P(None, "model", None)
+    assert specs["tok"]["embed"] == P("model", None)
+
+
+def test_param_pspecs_divisibility_fallback():
+    """Dims not divisible by the axis size must fall back to replication
+    (GQA kv heads = 8 on a 16-way model axis; hubert vocab 504)."""
+    cfg = get_config("hubert-xlarge")
+    params = jax.eval_shape(lambda: tr.init(jax.random.PRNGKey(0), cfg))
+    mesh = Mesh(np.asarray(jax.devices() * 16)[:16].reshape(1, 16),
+                ("data", "model"))
+    specs = rules.param_pspecs(params, mesh)
+    # vocab 504 % 16 != 0 -> lm_head replicated on vocab dim
+    assert specs["lm_head"]["w_vocab"][-1] is None
+
+
+def test_collective_parse():
+    hlo = """
+  %ag = bf16[16,512]{1,0} all-gather(bf16[1,512]{1,0} %x), dimensions={0}
+  %ar.1 = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%sum
+  %rs = f32[32,8]{1,0} reduce-scatter(f32[32,128]{1,0} %z), dimensions={1}
+  %cp = u32[4]{0} collective-permute(u32[4]{0} %w)
+  %notacoll = f32[9999]{0} add(f32[9999]{0} %a, f32[9999]{0} %b)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 16 * 512 * 2
+    assert got["all-reduce"] == 256 * 4
+    assert got["reduce-scatter"] == 32 * 128 * 4  # max shape on the line
+    assert got["collective-permute"] == 16
+    assert got["total"] == sum(got[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_roofline_terms_bottleneck():
+    cost = {"flops": 197e12 * 2.0, "bytes accessed": 819e9 * 0.5}
+    t = roofline_terms(cost, "")
+    assert abs(t["compute_s"] - 2.0) < 1e-9
+    assert t["bottleneck"] == "compute"
+
+
+@pytest.mark.parametrize("shape", ["decode_32k", "train_4k"])
+def test_build_step_compiles_single_device(shape):
+    """The step builders lower+compile on a 1×1 mesh with a reduced config
+    (the 256/512-device production meshes are exercised by the dry-run)."""
+    mesh = tiny_mesh()
+    arch = "smollm-135m"
+    cfg = get_config(arch, reduced=True)
+    built = steps_mod.build_step(arch, shape, mesh, cfg_override=cfg)
+    compiled = jax.jit(built.fn, in_shardings=built.in_shardings,
+                       out_shardings=built.out_shardings).lower(
+        *built.inputs).compile()
+    assert compiled.cost_analysis().get("flops", 0) > 0
+
+
+def test_verify_step_variant():
+    """verify_tokens=11 lowers the DL+1-token speculative verify pass."""
+    mesh = tiny_mesh()
+    cfg = get_config("smollm-135m", reduced=True)
+    built = steps_mod.build_step("smollm-135m", "decode_32k", mesh,
+                                 cfg_override=cfg, verify_tokens=11)
+    assert built.inputs[2].shape == (128, 11)
+    compiled = jax.jit(built.fn, in_shardings=built.in_shardings,
+                       out_shardings=built.out_shardings).lower(
+        *built.inputs).compile()
+    assert compiled is not None

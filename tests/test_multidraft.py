@@ -1,0 +1,69 @@
+"""Single-pass multi-draft verification (beyond-paper) — must be output-
+identical to the expanded-batch speculative decoder, hence to plain greedy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (extract_drafts, greedy_decode,
+                        speculative_greedy_decode, transformer_handle)
+from repro.core.multidraft import build_local_mask, multidraft_speculative_decode
+from repro.models import transformer as tr
+
+MAX_NEW, DL, N_D = 20, 4, 5
+
+
+def test_local_mask_structure():
+    m = build_local_mask(2, 3)
+    assert m.shape == (7, 7)
+    assert m[:, 0].all()                    # last_tok visible to all
+    assert m[1, 1] and not m[1, 2]          # own-prefix causality
+    assert m[4:7, 1:4].sum() == 0           # segments isolated
+    assert (np.tril(m[4:7, 4:7]) == m[4:7, 4:7]).all()
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "qwen3-8b",
+                                  "llama-3.2-vision-11b"])
+def test_multidraft_equals_expanded_batch(arch):
+    cfg = get_config(arch, reduced=True)
+    key = jax.random.PRNGKey(11)
+    params = tr.init(key, cfg)
+    B, P = 2, 12
+    prompt = jax.random.randint(key, (B, P), 4, cfg.vocab_size)
+    memory = (jax.random.normal(key, (B, cfg.memory_tokens, cfg.memory_dim))
+              * 0.1 if cfg.family == "vlm" else None)
+    handle = transformer_handle(params, cfg)
+
+    def fresh():
+        c = tr.init_cache(cfg, B, P + MAX_NEW + DL + 4)
+        _, c = tr.prefill(params, cfg, c, prompt[:, : P - 1], memory=memory)
+        return c
+
+    last = prompt[:, P - 1]
+    pos = jnp.full((B,), P - 1, jnp.int32)
+    ds, ms = zip(*(extract_drafts(np.asarray(r), DL, N_D) for r in prompt))
+    drafts = jnp.stack([jnp.asarray(d) for d in ds])
+    mask = jnp.stack([jnp.asarray(m) for m in ms])
+
+    g = greedy_decode(handle, fresh(), last, pos, max_new=MAX_NEW, eos_id=2)
+    s = speculative_greedy_decode(handle, fresh(), last, pos, drafts, mask,
+                                  max_new=MAX_NEW, eos_id=2)
+    md = multidraft_speculative_decode(params, cfg, fresh(), last, pos,
+                                       drafts, mask, max_new=MAX_NEW,
+                                       eos_id=2)
+    np.testing.assert_array_equal(np.asarray(g.tokens), np.asarray(md.tokens))
+    np.testing.assert_array_equal(np.asarray(s.tokens), np.asarray(md.tokens))
+    assert int(md.n_calls) == int(s.n_calls)  # same acceptance, same schedule
+
+
+def test_multidraft_rejects_recurrent():
+    cfg = get_config("rwkv6-1.6b", reduced=True)
+    params = tr.init(jax.random.PRNGKey(0), cfg)
+    cache = tr.init_cache(cfg, 1, 32)
+    with pytest.raises(NotImplementedError):
+        tr.multidraft_verify_step(params, cfg, cache,
+                                  jnp.zeros((1, 5), jnp.int32),
+                                  jnp.zeros((1, 5), jnp.int32),
+                                  jnp.ones((5, 5), bool))
