@@ -1,9 +1,14 @@
 """End-to-end serving driver (the paper's industrial target): single-step
-retrosynthesis with speculative beam search, batched requests.
+retrosynthesis with speculative beam search, streamed requests.
 
 Serves the shared benchmark model (trains + caches it on first run):
 
     PYTHONPATH=src python examples/serve_retrosynthesis.py [n_queries]
+
+Compares the per-request reference engine (one closed decode loop per
+query, the paper's B=1 regime) against the continuous-batching
+StreamingEngine (fixed decode slots, queued requests admitted as slots
+free up) for both beam search and speculative beam search.
 """
 
 import os
@@ -12,7 +17,7 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks/
 from benchmarks.common import trained_model
-from repro.serving import EngineConfig, ReactionEngine
+from repro.serving import EngineConfig, ReactionEngine, StreamingEngine
 
 
 def main() -> None:
@@ -20,29 +25,41 @@ def main() -> None:
     cfg, params, train_ds, test_ds = trained_model(verbose=True,
                                                    direction="retro")
     tok = train_ds.tokenizer
-
-    bs = ReactionEngine(params, cfg, tok,
-                        EngineConfig(mode="beam", n_beams=5, max_new=72))
-    sbs = ReactionEngine(params, cfg, tok,
-                         EngineConfig(mode="speculative_beam", n_beams=5,
-                                      draft_len=10, n_drafts=16, max_new=72))
     # retro direction: query = product, predictions = reactant sets
     requests = [test_ds.pair(i)[0] for i in range(n)]
-    bs.predict_topn(requests[0])
-    sbs.predict_topn(requests[0])  # jit warmup
 
-    for name, eng in (("beam search", bs), ("speculative beam search", sbs)):
+    def cfg_for(mode):
+        return EngineConfig(mode=mode, n_beams=5, draft_len=10, n_drafts=16,
+                            max_new=72, n_slots=2)
+
+    engines = []
+    for mode in ("beam", "speculative_beam"):
+        ref = ReactionEngine(params, cfg, tok, cfg_for(mode))
+        stream = StreamingEngine(params, cfg, tok, cfg_for(mode))
+        ref.predict_topn(requests[0])          # jit warmup
+        stream.predict_topn(requests[0])
+        stream.reset()                         # drop warmup's step count
+        engines.append((mode, ref, stream))
+
+    for mode, ref, stream in engines:
         t0 = time.time()
         calls = 0
         for q in requests:
-            pred = eng.predict_topn(q)
-            calls += pred.n_calls
-        dt = time.time() - t0
-        print(f"{name:26s}: {dt:6.2f}s for {n} queries "
-              f"({calls} decoder calls)")
+            calls += ref.predict_topn(q).n_calls
+        t_ref = time.time() - t0
 
-    print("\ntop-5 reactant sets for the last query:")
-    pred = sbs.predict_topn(requests[-1])
+        t0 = time.time()
+        for q in requests:
+            stream.submit(q)
+        done = stream.serve()
+        t_stream = time.time() - t0
+        s_calls = sum(r.n_calls for r in done.values())
+        print(f"{mode:18s}: per-request {t_ref:6.2f}s ({calls} calls) | "
+              f"continuous {t_stream:6.2f}s ({s_calls} resident calls, "
+              f"{stream.scheduler.n_steps} shared steps)")
+
+    print("\ntop-5 reactant sets for the last query (speculative beam):")
+    pred = engines[-1][2].predict_topn(requests[-1])
     for smi, lp in zip(pred.smiles, pred.logprobs):
         print(f"  {lp:8.3f}  {smi}")
 

@@ -2,6 +2,8 @@
 generators by copying query substrings into the target (Andronov et al. 2024).
 
   drafting     — source-copy / prompt-lookup draft extraction (§2.1, Fig. 2)
+  session      — DecodeSession: the fixed-slot prefill/step/commit core all
+                 four modes share (enables continuous-batching serving)
   speculative  — speculative greedy decoding (accuracy-neutral, Table 2)
   spec_beam    — speculative beam search, Algorithm 1 / Appendix B (Table 3)
   greedy/beam  — the standard decoding baselines the paper compares against
@@ -10,14 +12,21 @@ generators by copying query substrings into the target (Andronov et al. 2024).
 
 from repro.core.drafting import batch_drafts, extract_drafts, prompt_lookup_drafts
 from repro.core.handles import DecoderHandle, seq2seq_handle, transformer_handle
+from repro.core.session import (SessionSpec, SessionState, init_state,
+                                release_slot, reset_slot, run_session,
+                                session_step)
 from repro.core.greedy import greedy_decode
 from repro.core.speculative import speculative_greedy_decode
-from repro.core.beam import beam_search
-from repro.core.spec_beam import speculative_beam_search
+from repro.core.beam import batched_beam_search, beam_search
+from repro.core.spec_beam import (batched_speculative_beam_search,
+                                  speculative_beam_search)
 
 __all__ = [
     "batch_drafts", "extract_drafts", "prompt_lookup_drafts",
     "DecoderHandle", "seq2seq_handle", "transformer_handle",
+    "SessionSpec", "SessionState", "init_state", "reset_slot",
+    "release_slot", "session_step", "run_session",
     "greedy_decode", "speculative_greedy_decode",
-    "beam_search", "speculative_beam_search",
+    "beam_search", "batched_beam_search",
+    "speculative_beam_search", "batched_speculative_beam_search",
 ]

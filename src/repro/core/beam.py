@@ -1,20 +1,22 @@
 """Standard beam search — the paper's Table 3/4 baseline.
 
-Single query (B=1 semantics, the paper's serving regime), n beams, fixed
-shapes, EOS as an absorbing state with no length penalty (the paper keeps
-plain sequence probabilities). Returns the n best sequences by cumulative
-log-probability, sorted descending.
+n beams, fixed shapes, EOS as an absorbing state with no length penalty
+(the paper keeps plain sequence probabilities). Implemented as the DL=0
+special case of the shared DecodeSession beam-family step
+(``repro.core.session``), which also lifts the paper's B=1 serving
+restriction: ``batched_beam_search`` runs B independent queries' beams in
+one fixed-shape loop. ``beam_search`` keeps the single-query interface.
 """
 
 from __future__ import annotations
 
 from typing import Any, NamedTuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.handles import DecoderHandle
-from repro.core.tree_batch import expand_batch, gather_rows
+from repro.core.session import SessionSpec, init_state, run_session
+from repro.core.tree_batch import expand_batch
 
 _NEG = -1e30
 
@@ -26,55 +28,60 @@ class BeamResult(NamedTuple):
     n_calls: jnp.ndarray    # ()
 
 
+class BatchedBeamResult(NamedTuple):
+    tokens: jnp.ndarray     # (B, n, max_new) — per query, best first
+    lengths: jnp.ndarray    # (B, n)
+    logprobs: jnp.ndarray   # (B, n)
+    n_calls: jnp.ndarray    # ()
+
+
+def _beam_state(spec: SessionSpec, cache, bos_token, start_pos):
+    B, K = spec.n_slots, spec.n_beams
+    logp0 = jnp.where(jnp.arange(K) == 0, 0.0, _NEG).astype(jnp.float32)
+    return init_state(spec, cache)._replace(
+        logp=jnp.broadcast_to(logp0, (B, K)),
+        last=jnp.full((B, K), bos_token, jnp.int32),
+        pos=jnp.broadcast_to(jnp.asarray(start_pos, jnp.int32)[..., None],
+                             (B, K)).astype(jnp.int32),
+        finished=jnp.zeros((B, K), bool),
+        active=jnp.ones((B,), bool),
+        draft_mask=jnp.ones((B, spec.n_drafts), bool),
+    )
+
+
+def _sorted_beams(state):
+    order = jnp.argsort(-state.logp, axis=1)                    # (B, K)
+    tokens = jnp.take_along_axis(state.tokens, order[..., None], axis=1)
+    return (tokens, jnp.take_along_axis(state.n_out, order, axis=1),
+            jnp.take_along_axis(state.logp, order, axis=1))
+
+
+def batched_beam_search(handle: DecoderHandle, cache: Any, bos_token: int,
+                        start_pos: jnp.ndarray, *, n_beams: int, max_new: int,
+                        eos_id: int, pad_id: int = 0) -> BatchedBeamResult:
+    """B independent queries, n beams each, one fixed-shape decode loop.
+
+    ``cache``: B-row cache (e.g. after batched seq2seq memory precompute);
+    expanded to B*n rows internally. ``start_pos``: (B,)."""
+    B = start_pos.shape[0]
+    spec = SessionSpec(n_slots=B, n_beams=n_beams, n_drafts=1, draft_len=0,
+                       max_new=max_new, eos_id=eos_id, pad_id=pad_id,
+                       kind="beam")
+    state = _beam_state(spec, expand_batch(cache, n_beams), bos_token,
+                        start_pos)
+    state, i = run_session(spec, handle, state)
+    tokens, lengths, logp = _sorted_beams(state)
+    return BatchedBeamResult(tokens=tokens, lengths=lengths, logprobs=logp,
+                             n_calls=i)
+
+
 def beam_search(handle: DecoderHandle, cache: Any, bos_token: int,
                 start_pos: int, *, n_beams: int, max_new: int, eos_id: int,
                 pad_id: int = 0) -> BeamResult:
     """``cache`` is a single-row (B=1) cache (e.g. after seq2seq memory
     precompute); it is expanded to n_beams rows internally."""
-    n = n_beams
-    V = handle.vocab_size
-    cache = expand_batch(cache, n)
-    out = jnp.full((n, max_new), pad_id, jnp.int32)
-    # beam 0 active, others start at -inf so step 1 fans out from BOS
-    logp = jnp.where(jnp.arange(n) == 0, 0.0, _NEG).astype(jnp.float32)
-    last = jnp.full((n,), bos_token, jnp.int32)
-    pos = jnp.full((n,), start_pos, jnp.int32)
-    finished = jnp.zeros((n,), bool)
-
-    def cond(state):
-        i, _, _, _, _, _, finished = state
-        return (i < max_new) & ~jnp.all(finished)
-
-    def body(state):
-        i, out, logp, last, pos, cache, finished = state
-        logits, cache = handle.decode_step(cache, last[:, None], pos[:, None])
-        cache = handle.commit_cache(cache, jnp.ones((n,), jnp.int32))
-        lp = jax.nn.log_softmax(logits[:, 0, :].astype(jnp.float32), axis=-1)
-        lp = lp.at[:, pad_id].set(_NEG)  # pad is never a real emission
-        # absorbing EOS: finished beams may only "emit" pad with logp 0
-        pad_only = jnp.full((V,), _NEG).at[pad_id].set(0.0)
-        lp = jnp.where(finished[:, None], pad_only[None, :], lp)
-        cand = logp[:, None] + lp                              # (n, V)
-        top_lp, flat_idx = jax.lax.top_k(cand.reshape(-1), n)
-        parent = (flat_idx // V).astype(jnp.int32)
-        token = (flat_idx % V).astype(jnp.int32)
-
-        out = jnp.take(out, parent, axis=0)
-        was_finished = jnp.take(finished, parent)
-        write_tok = jnp.where(was_finished, pad_id, token)
-        out = out.at[:, i].set(write_tok)
-        logp = top_lp
-        finished = was_finished | (token == eos_id)
-        last = jnp.where(was_finished, jnp.take(last, parent), token)
-        pos = jnp.where(was_finished, jnp.take(pos, parent),
-                        jnp.take(pos, parent) + 1)
-        cache = gather_rows(cache, parent)
-        return (i + 1, out, logp, last, pos, cache, finished)
-
-    i, out, logp, _, _, _, finished = jax.lax.while_loop(
-        cond, body, (0, out, logp, last, pos, cache, finished))
-    order = jnp.argsort(-logp)
-    out = jnp.take(out, order, axis=0)
-    logp = jnp.take(logp, order)
-    lengths = jnp.sum((out != pad_id).astype(jnp.int32), axis=1)
-    return BeamResult(tokens=out, lengths=lengths, logprobs=logp, n_calls=i)
+    res = batched_beam_search(
+        handle, cache, bos_token, jnp.full((1,), start_pos, jnp.int32),
+        n_beams=n_beams, max_new=max_new, eos_id=eos_id, pad_id=pad_id)
+    return BeamResult(tokens=res.tokens[0], lengths=res.lengths[0],
+                      logprobs=res.logprobs[0], n_calls=res.n_calls)

@@ -1,13 +1,18 @@
-"""Standard token-by-token greedy decoding (the paper's Table 2 baseline)."""
+"""Standard token-by-token greedy decoding (the paper's Table 2 baseline).
+
+Implemented as the DL=0, N_d=1 special case of the shared DecodeSession
+greedy-family step (``repro.core.session``): each iteration feeds one token
+per sequence and commits its argmax — byte-identical to the classic loop.
+"""
 
 from __future__ import annotations
 
 from typing import Any, NamedTuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.handles import DecoderHandle
+from repro.core.session import SessionSpec, init_state, run_session
 
 
 class GreedyResult(NamedTuple):
@@ -22,26 +27,16 @@ def greedy_decode(handle: DecoderHandle, cache: Any, last_token: jnp.ndarray,
     """last_token: (B,) last committed (unprocessed) token; start_pos: (B,)
     its absolute position. One model call per generated token."""
     B = last_token.shape[0]
-    out = jnp.full((B, max_new), pad_id, jnp.int32)
-
-    def cond(state):
-        i, _, _, _, _, finished = state
-        return (i < max_new) & ~jnp.all(finished)
-
-    def body(state):
-        i, out, last, pos, cache, finished = state
-        logits, cache = handle.decode_step(cache, last[:, None], pos[:, None])
-        cache = handle.commit_cache(cache, jnp.ones((B,), jnp.int32))
-        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
-        nxt = jnp.where(finished, pad_id, nxt)
-        out = out.at[:, i].set(nxt)
-        new_finished = finished | (nxt == eos_id)
-        last = jnp.where(finished, last, nxt)
-        pos = jnp.where(finished, pos, pos + 1)
-        return (i + 1, out, last, pos, cache, new_finished)
-
-    i, out, _, _, _, finished = jax.lax.while_loop(
-        cond, body, (0, out, last_token, start_pos, cache,
-                     jnp.zeros((B,), bool)))
-    gen = jnp.sum((out != pad_id).astype(jnp.int32), axis=1)
-    return GreedyResult(tokens=out, lengths=gen, n_calls=i)
+    spec = SessionSpec(n_slots=B, n_beams=1, n_drafts=1, draft_len=0,
+                       max_new=max_new, eos_id=eos_id, pad_id=pad_id,
+                       kind="greedy")
+    state = init_state(spec, cache)._replace(
+        last=last_token.astype(jnp.int32)[:, None],
+        pos=start_pos.astype(jnp.int32)[:, None],
+        finished=jnp.zeros((B, 1), bool),
+        active=jnp.ones((B,), bool),
+        draft_mask=jnp.ones((B, 1), bool),
+    )
+    state, i = run_session(spec, handle, state)
+    return GreedyResult(tokens=state.tokens[:, 0], lengths=state.n_out[:, 0],
+                        n_calls=i)

@@ -1,0 +1,368 @@
+"""DecodeSession — the resumable fixed-slot decoding core.
+
+Every decoding mode in this repo (greedy, speculative greedy, beam,
+speculative beam) is one *pure step function* over the same fixed-slot
+state instead of a bespoke closed-over ``lax.while_loop``:
+
+  prefill   reset_slot() writes a request into a free slot (algorithm
+            state here; the caller populates the model-cache rows)
+  step      session_step() runs ONE verify/commit iteration for every
+            slot simultaneously — shapes are fixed by the SessionSpec,
+            so a single jitted step is reused across requests forever
+  commit    the step itself commits accepted tokens and rolls the cache
+
+This is what makes continuous batching possible: a scheduler
+(``repro.serving.scheduler``) calls the step from the host, evicts slots
+whose sequences finished, and admits queued requests into the freed rows
+*without recompilation*. The one-shot decode functions
+(``greedy_decode`` & co.) are thin ``lax.while_loop`` wrappers over the
+same step, so batch-mode and streaming-mode outputs are token-identical
+by construction.
+
+Slot layout: ``n_slots`` (S) independent requests, each owning
+``n_beams`` (K) beam rows × ``n_drafts`` (N_d) draft rows of the model
+cache — cache row ``(s*K + k)*N_d + d``. Greedy-family modes are K=1;
+non-speculative modes are N_d=1, DL=0. Inactive slots keep stepping on
+garbage rows (fixed shapes); all math is row-independent, so resident
+requests are unaffected — the invariant ``tests/test_session.py`` checks.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.handles import DecoderHandle
+from repro.core.tree_batch import gather_rows, sync_winner
+
+_NEG = -1e30
+
+
+class SessionSpec(NamedTuple):
+    """Static shape/mode bundle; hashable, so one jit per spec."""
+
+    n_slots: int                 # S — concurrent requests
+    n_beams: int                 # K — rows per request (1 = greedy family)
+    n_drafts: int                # N_d — drafts verified per row per step
+    draft_len: int               # DL — tokens per draft
+    max_new: int
+    eos_id: int
+    pad_id: int = 0
+    kind: str = "greedy"         # "greedy" (argmax accept) | "beam" (top-k)
+
+    @property
+    def rows_per_slot(self) -> int:
+        return self.n_beams * self.n_drafts
+
+    @property
+    def n_rows(self) -> int:
+        return self.n_slots * self.rows_per_slot
+
+    @property
+    def cache_len(self) -> int:
+        """Minimum cache length: every step writes at pos .. pos+DL."""
+        return self.max_new + self.draft_len + 2
+
+
+class SessionState(NamedTuple):
+    """Per-slot decode state. Leading dims: (S, K) unless noted."""
+
+    tokens: jnp.ndarray      # (S, K, max_new) committed output, pad after EOS
+    logp: jnp.ndarray        # (S, K) cumulative log-prob (beam family)
+    last: jnp.ndarray        # (S, K) last committed, not-yet-fed token
+    pos: jnp.ndarray         # (S, K) absolute position of `last`
+    n_out: jnp.ndarray       # (S, K) committed token count
+    finished: jnp.ndarray    # (S, K) bool
+    active: jnp.ndarray      # (S,) bool — slot holds a live request
+    drafts: jnp.ndarray      # (S, N_d, DL) per-request source-copy drafts
+    draft_mask: jnp.ndarray  # (S, N_d) bool
+    n_calls: jnp.ndarray     # (S,) decoder forward passes while resident
+    accepted: jnp.ndarray    # (S,) committed draft tokens (beam-0 path)
+    cache: Any               # model cache, batch rows = S*K*N_d
+
+
+def init_state(spec: SessionSpec, cache: Any) -> SessionState:
+    """All slots free. ``cache`` must have ``spec.n_rows`` batch rows and
+    length >= ``spec.cache_len``."""
+    S, K = spec.n_slots, spec.n_beams
+    return SessionState(
+        tokens=jnp.full((S, K, spec.max_new), spec.pad_id, jnp.int32),
+        logp=jnp.full((S, K), _NEG, jnp.float32),
+        last=jnp.zeros((S, K), jnp.int32),
+        pos=jnp.zeros((S, K), jnp.int32),
+        n_out=jnp.zeros((S, K), jnp.int32),
+        finished=jnp.ones((S, K), bool),
+        active=jnp.zeros((S,), bool),
+        drafts=jnp.zeros((S, spec.n_drafts, spec.draft_len), jnp.int32),
+        draft_mask=jnp.zeros((S, spec.n_drafts), bool),
+        n_calls=jnp.zeros((S,), jnp.int32),
+        accepted=jnp.zeros((S,), jnp.int32),
+        cache=cache,
+    )
+
+
+def reset_slot(spec: SessionSpec, state: SessionState, slot,
+               last_token, start_pos, drafts, draft_mask) -> SessionState:
+    """Prefill a slot's algorithm state (the caller populates the model
+    cache rows). ``slot`` may be a traced scalar — no recompilation per
+    admission. ``last_token``/``start_pos`` are scalars; ``drafts`` is
+    (N_d, DL), ``draft_mask`` (N_d,)."""
+    K = spec.n_beams
+    beam0 = jnp.where(jnp.arange(K) == 0, 0.0, _NEG).astype(jnp.float32)
+    return state._replace(
+        tokens=state.tokens.at[slot].set(spec.pad_id),
+        logp=state.logp.at[slot].set(beam0),
+        last=state.last.at[slot].set(jnp.int32(last_token)),
+        pos=state.pos.at[slot].set(jnp.int32(start_pos)),
+        n_out=state.n_out.at[slot].set(0),
+        finished=state.finished.at[slot].set(False),
+        active=state.active.at[slot].set(True),
+        drafts=state.drafts.at[slot].set(drafts.astype(jnp.int32)),
+        draft_mask=state.draft_mask.at[slot].set(draft_mask),
+        n_calls=state.n_calls.at[slot].set(0),
+        accepted=state.accepted.at[slot].set(0),
+    )
+
+
+def release_slot(state: SessionState, slot) -> SessionState:
+    """Evict a finished request; the slot's cache rows become garbage that
+    the next ``reset_slot`` + cache prefill overwrite."""
+    return state._replace(active=state.active.at[slot].set(False))
+
+
+def _accept_lengths(greedy_tok: jnp.ndarray, drafts: jnp.ndarray,
+                    draft_mask: jnp.ndarray) -> jnp.ndarray:
+    """greedy_tok: (..., N_d, DL+1) argmax predictions; drafts:
+    (..., N_d, DL). Returns (..., N_d): longest prefix where draft token i
+    equals the model's argmax prediction for that position."""
+    if drafts.shape[-1] == 0:
+        return jnp.zeros(drafts.shape[:-1], jnp.int32)
+    match = (drafts == greedy_tok[..., :-1]).astype(jnp.int32)
+    n_acc = jnp.sum(jnp.cumprod(match, axis=-1), axis=-1)
+    return jnp.where(draft_mask, n_acc, 0)
+
+
+def _forward(spec: SessionSpec, handle: DecoderHandle, state: SessionState):
+    """One verify pass over all slots × beams × drafts (the paper's
+    effective-batch inflation, applied session-wide)."""
+    S, K, N_d, DL = (spec.n_slots, spec.n_beams, spec.n_drafts,
+                     spec.draft_len)
+    rel = jnp.arange(DL + 1, dtype=jnp.int32)
+    last_e = jnp.repeat(state.last.reshape(S * K), N_d)
+    drafts_rows = jnp.broadcast_to(
+        state.drafts[:, None], (S, K, N_d, DL)).reshape(S * K * N_d, DL)
+    toks = jnp.concatenate([last_e[:, None], drafts_rows], axis=1)
+    pos_e = jnp.repeat(state.pos.reshape(S * K), N_d)[:, None] + rel[None, :]
+    logits, cache = handle.decode_step(state.cache, toks, pos_e)
+    return logits, cache, drafts_rows, rel
+
+
+def _greedy_family_step(spec: SessionSpec, handle: DecoderHandle,
+                        state: SessionState) -> SessionState:
+    """Speculative greedy (and with DL=0, plain greedy): accept the longest
+    argmax-matching draft prefix + one bonus token per slot. K == 1."""
+    S, N_d, DL = spec.n_slots, spec.n_drafts, spec.draft_len
+    max_new, eos_id, pad_id = spec.max_new, spec.eos_id, spec.pad_id
+    logits, cache, _, rel = _forward(spec, handle, state)
+
+    finished = state.finished[:, 0] | ~state.active
+    last, pos = state.last[:, 0], state.pos[:, 0]
+    n_out, out = state.n_out[:, 0], state.tokens[:, 0]
+
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    greedy_tok = greedy_tok.reshape(S, N_d, DL + 1)
+
+    # --- accept / select best draft --------------------------------------
+    n_acc = _accept_lengths(greedy_tok, state.drafts, state.draft_mask)
+    best = jnp.argmax(n_acc, axis=-1).astype(jnp.int32)          # (S,)
+    n_acc_b = jnp.take_along_axis(n_acc, best[:, None], axis=1)[:, 0]
+    new_toks = jnp.take_along_axis(
+        greedy_tok, best[:, None, None], axis=1)[:, 0]           # (S, DL+1)
+
+    # --- EOS + budget truncation ------------------------------------------
+    within = rel[None, :] <= n_acc_b[:, None]
+    is_eos = (new_toks == eos_id) & within
+    any_eos = jnp.any(is_eos, axis=1)
+    first_eos = jnp.argmax(is_eos, axis=1)
+    n_prop = jnp.where(any_eos, first_eos + 1, n_acc_b + 1)
+    budget = max_new - n_out
+    n_app = jnp.minimum(n_prop, budget)
+    n_app = jnp.where(finished, 0, n_app)
+    hit_eos = any_eos & (first_eos + 1 <= budget) & ~finished
+
+    # --- write accepted tokens --------------------------------------------
+    write = rel[None, :] < n_app[:, None]
+    idx = n_out[:, None] + rel[None, :]
+    idx = jnp.where(write, idx, max_new)                         # drop invalid
+    b_idx = jnp.arange(S)[:, None]
+    out = out.at[b_idx, idx].set(new_toks, mode="drop")
+
+    # --- commit: recurrent-state checkpoint + winner cache sync -----------
+    cache = handle.commit_cache(cache, jnp.repeat(n_app, N_d))
+    cache = sync_winner(cache, best, N_d)
+
+    last_idx = jnp.clip(n_app - 1, 0, DL)
+    new_last = jnp.take_along_axis(new_toks, last_idx[:, None], axis=1)[:, 0]
+    last = jnp.where(n_app > 0, new_last, last)
+    pos = pos + n_app
+    n_out = n_out + n_app
+    new_finished = finished | hit_eos | (n_out >= max_new)
+    acc_used = jnp.minimum(n_acc_b, n_app)
+    return state._replace(
+        tokens=out[:, None], last=last[:, None], pos=pos[:, None],
+        n_out=n_out[:, None], finished=new_finished[:, None], cache=cache,
+        n_calls=state.n_calls + state.active.astype(jnp.int32),
+        accepted=state.accepted + acc_used)
+
+
+def _beam_family_step(spec: SessionSpec, handle: DecoderHandle,
+                      state: SessionState) -> SessionState:
+    """Speculative beam search, batched over S slots (and with DL=0, plain
+    beam search — the paper's "SBS, DL=0" control). Per slot: candidates
+    of unequal lengths beam ++ draft[:a] ++ w, global top-K (Alg. 1)."""
+    S, K, N_d, DL = (spec.n_slots, spec.n_beams, spec.n_drafts,
+                     spec.draft_len)
+    A = DL + 1
+    max_new, eos_id, pad_id = spec.max_new, spec.eos_id, spec.pad_id
+    V = handle.vocab_size
+    logits, cache, drafts_rows, rel = _forward(spec, handle, state)
+
+    fin = state.finished | ~state.active[:, None]                # (S, K)
+
+    lp_all = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    lp_all = lp_all.at[:, :, pad_id].set(_NEG)   # pad is never a real emission
+    lp_all = lp_all.reshape(S, K, N_d, A, V)
+    greedy_tok = jnp.argmax(lp_all, axis=-1).astype(jnp.int32)
+
+    # ---- best draft per beam ---------------------------------------------
+    d4 = drafts_rows.reshape(S, K, N_d, DL)
+    dm = jnp.broadcast_to(state.draft_mask[:, None], (S, K, N_d))
+    n_acc = _accept_lengths(greedy_tok, d4, dm)                  # (S, K, N_d)
+    best = jnp.argmax(n_acc, axis=-1).astype(jnp.int32)          # (S, K)
+
+    def take_best(x):
+        idx = best.reshape(S, K, 1, *([1] * (x.ndim - 3)))
+        return jnp.take_along_axis(x, idx, axis=2)[:, :, 0]
+
+    lp_best = take_best(lp_all)                                  # (S, K, A, V)
+    draft_best = take_best(d4)                                   # (S, K, DL)
+    n_acc_b = jnp.take_along_axis(n_acc, best[..., None], axis=2)[..., 0]
+
+    # ---- candidates of unequal lengths -----------------------------------
+    # cum[a] = sum of draft-token logps for prefix length a
+    d_lp = jnp.take_along_axis(
+        lp_best[:, :, :DL, :], draft_best[..., None], axis=3)[..., 0]
+    cum = jnp.concatenate(
+        [jnp.zeros((S, K, 1), jnp.float32), jnp.cumsum(d_lp, axis=-1)],
+        axis=-1)                                                 # (S, K, A)
+    topv, topi = jax.lax.top_k(lp_best, K)                       # (S, K, A, K)
+    cand_lp = state.logp[:, :, None, None] + cum[..., None] + topv
+    valid_a = rel[None, None, :] <= n_acc_b[..., None]           # (S, K, A)
+    # budget: a+1 tokens must fit the remaining buffer
+    valid_a &= (state.n_out[..., None] + rel[None, None, :] + 1) <= max_new
+    # prefixes may not extend past a draft EOS token
+    draft_eos = jnp.cumsum((draft_best == eos_id).astype(jnp.int32), axis=-1)
+    no_eos_in_prefix = jnp.concatenate(
+        [jnp.ones((S, K, 1), jnp.int32), (draft_eos == 0).astype(jnp.int32)],
+        axis=-1)
+    valid_a &= no_eos_in_prefix.astype(bool)
+    cand_lp = jnp.where(valid_a[..., None], cand_lp, _NEG)
+
+    # Same-path dedup: (a, w=draft[a]) with a < n_acc is a strict prefix of a
+    # longer candidate in this set; keeping it would crowd out genuine
+    # alternatives (only frontier candidates, as in the paper's Fig. 3).
+    d_pad = jnp.pad(draft_best, ((0, 0), (0, 0), (0, 1)), constant_values=-1)
+    dup = ((topi == d_pad[..., None])
+           & (rel[None, None, :, None] < n_acc_b[..., None, None]))
+    cand_lp = jnp.where(dup, _NEG, cand_lp)
+
+    # finished beams: single pass-through candidate (a=0, k=0), logp kept
+    pass_lp = jnp.full((A, K), _NEG).at[0, 0].set(0.0)
+    cand_lp = jnp.where(fin[..., None, None],
+                        state.logp[:, :, None, None] + pass_lp[None, None],
+                        cand_lp)
+
+    # ---- per-slot global top-K -------------------------------------------
+    flat = cand_lp.reshape(S, K * A * K)
+    new_logp, flat_idx = jax.lax.top_k(flat, K)                  # (S, K)
+    parent = (flat_idx // (A * K)).astype(jnp.int32)
+    a_len = ((flat_idx // K) % A).astype(jnp.int32)
+    w_tok = jnp.take_along_axis(topi.reshape(S, K * A * K), flat_idx, axis=1)
+    was_fin = jnp.take_along_axis(fin, parent, axis=1)
+
+    def take_parent(x):
+        idx = parent.reshape(S, K, *([1] * (x.ndim - 2)))
+        return jnp.take_along_axis(x, idx, axis=1)
+
+    # ---- materialize new beams (fixed-shape writes) ----------------------
+    out_p = take_parent(state.tokens)                            # (S,K,max_new)
+    nout_p = jnp.take_along_axis(state.n_out, parent, axis=1)
+    drafts_p = take_parent(draft_best)                           # (S, K, DL)
+    # committed tokens this round: draft[:a] ++ w  -> length a+1
+    seg = jnp.where(rel[None, None, :] < a_len[..., None],
+                    jnp.pad(drafts_p, ((0, 0), (0, 0), (0, 1))),
+                    jnp.where(rel[None, None, :] == a_len[..., None],
+                              w_tok[..., None], pad_id))
+    n_new = jnp.where(was_fin, 0, a_len + 1)
+    idx = nout_p[..., None] + rel[None, None, :]
+    idx = jnp.where(rel[None, None, :] < n_new[..., None], idx, max_new)
+    s_ix = jnp.arange(S)[:, None, None]
+    k_ix = jnp.arange(K)[None, :, None]
+    out_new = out_p.at[s_ix, k_ix, idx].set(seg, mode="drop")
+
+    new_finished = (was_fin | (w_tok == eos_id)
+                    | (nout_p + n_new >= max_new))
+    new_last = jnp.where(was_fin,
+                         jnp.take_along_axis(state.last, parent, axis=1),
+                         w_tok)
+    new_pos = jnp.take_along_axis(state.pos, parent, axis=1) + n_new
+    new_nout = nout_p + n_new
+
+    # ---- cache: winner-draft row of the parent beam, then commit the
+    # candidate's own prefix length (recurrent-state rollback) -------------
+    best_p = jnp.take_along_axis(best, parent, axis=1)           # (S, K)
+    base = (jnp.arange(S, dtype=jnp.int32) * K)[:, None]
+    src = ((base + parent) * N_d + best_p).reshape(-1)
+    cache = gather_rows(cache, jnp.repeat(src, N_d))
+    n_keep = jnp.where(was_fin, 0, a_len + 1)
+    cache = handle.commit_cache(cache, jnp.repeat(n_keep.reshape(-1), N_d))
+
+    acc = jnp.where(state.active & ~was_fin[:, 0], a_len[:, 0], 0)
+    return state._replace(
+        tokens=out_new, logp=new_logp, last=new_last, pos=new_pos,
+        n_out=new_nout, finished=new_finished, cache=cache,
+        n_calls=state.n_calls + state.active.astype(jnp.int32),
+        accepted=state.accepted + acc)
+
+
+def session_step(spec: SessionSpec, handle: DecoderHandle,
+                 state: SessionState) -> SessionState:
+    """ONE decode iteration for every slot: verify forward pass -> accept ->
+    commit. Pure and shape-stable — jit it once per SessionSpec."""
+    if spec.kind == "greedy":
+        if spec.n_beams != 1:
+            raise ValueError("greedy-family sessions require n_beams == 1")
+        return _greedy_family_step(spec, handle, state)
+    if spec.kind == "beam":
+        return _beam_family_step(spec, handle, state)
+    raise ValueError(f"unknown session kind: {spec.kind!r}")
+
+
+def run_session(spec: SessionSpec, handle: DecoderHandle,
+                state: SessionState):
+    """Drain all resident requests (no admissions): while_loop over the
+    shared step. Returns (state, n_iterations). Used by the one-shot decode
+    wrappers; the continuous scheduler instead steps from the host."""
+
+    def cond(carry):
+        st, i = carry
+        done = st.finished | ~st.active[:, None]
+        return (i < spec.max_new) & ~jnp.all(done)
+
+    def body(carry):
+        st, i = carry
+        return session_step(spec, handle, st), i + 1
+
+    return jax.lax.while_loop(cond, body, (state, jnp.int32(0)))

@@ -1,6 +1,6 @@
 """Speculative beam search (SBS) — the paper's Algorithm 1 / Appendix B.
 
-Per iteration (single query, n beams, N_d drafts, draft length DL):
+Per iteration (n beams, N_d drafts, draft length DL):
 
   1. concatDraftsToSequences: every beam × every draft -> n*N_d rows, one
      decoder forward pass (the paper's effective-batch inflation).
@@ -15,6 +15,10 @@ Per iteration (single query, n beams, N_d drafts, draft length DL):
      position arrays — mathematically identical (DESIGN.md §2), and
      verified against the paper's formulation in tests.
 
+The iteration is the shared DecodeSession beam-family step
+(``repro.core.session``), batched over queries —
+``batched_speculative_beam_search`` removes the paper's B=1 serving
+restriction; ``speculative_beam_search`` keeps the single-query interface.
 With DL=0 (a single empty draft) each iteration reduces exactly to one
 standard beam-search step — the paper's "SBS, DL=0" control.
 """
@@ -23,14 +27,12 @@ from __future__ import annotations
 
 from typing import Any, NamedTuple
 
-import jax
 import jax.numpy as jnp
 
+from repro.core.beam import _beam_state, _sorted_beams
 from repro.core.handles import DecoderHandle
-from repro.core.speculative import _accept_lengths
-from repro.core.tree_batch import expand_batch, gather_rows
-
-_NEG = -1e30
+from repro.core.session import SessionSpec, run_session
+from repro.core.tree_batch import expand_batch
 
 
 class SBSResult(NamedTuple):
@@ -41,6 +43,36 @@ class SBSResult(NamedTuple):
     accepted_tokens: jnp.ndarray  # () total committed draft tokens (best beam path)
 
 
+class BatchedSBSResult(NamedTuple):
+    tokens: jnp.ndarray     # (B, n, max_new)
+    lengths: jnp.ndarray    # (B, n)
+    logprobs: jnp.ndarray   # (B, n)
+    n_calls: jnp.ndarray    # ()
+    accepted_tokens: jnp.ndarray  # (B,)
+
+
+def batched_speculative_beam_search(
+    handle: DecoderHandle, cache: Any, bos_token: int,
+    start_pos: jnp.ndarray, drafts: jnp.ndarray, draft_mask: jnp.ndarray,
+    *, n_beams: int, max_new: int, eos_id: int, pad_id: int = 0,
+) -> BatchedSBSResult:
+    """B independent queries in one fixed-shape loop. drafts: (B, N_d, DL)
+    per-query source-copy drafts; cache: B-row prefix cache (expanded to
+    B * n_beams * N_d rows internally); start_pos: (B,)."""
+    B, N_d, DL = drafts.shape
+    spec = SessionSpec(n_slots=B, n_beams=n_beams, n_drafts=N_d,
+                       draft_len=DL, max_new=max_new, eos_id=eos_id,
+                       pad_id=pad_id, kind="beam")
+    state = _beam_state(spec, expand_batch(cache, n_beams * N_d), bos_token,
+                        start_pos)
+    state = state._replace(drafts=drafts.astype(jnp.int32),
+                           draft_mask=draft_mask)
+    state, i = run_session(spec, handle, state)
+    tokens, lengths, logp = _sorted_beams(state)
+    return BatchedSBSResult(tokens=tokens, lengths=lengths, logprobs=logp,
+                            n_calls=i, accepted_tokens=state.accepted)
+
+
 def speculative_beam_search(
     handle: DecoderHandle, cache: Any, bos_token: int, start_pos: int,
     drafts: jnp.ndarray, draft_mask: jnp.ndarray, *, n_beams: int,
@@ -48,137 +80,10 @@ def speculative_beam_search(
 ) -> SBSResult:
     """drafts: (N_d, DL) source-copy drafts for THIS query (B=1 semantics,
     the paper's serving regime); cache: single-row prefix cache."""
-    n = n_beams
-    N_d, DL = drafts.shape
-    V = handle.vocab_size
-    A = DL + 1                                   # candidate prefix lengths 0..DL
-    rel = jnp.arange(A, dtype=jnp.int32)
-
-    cache = expand_batch(cache, n * N_d)
-    drafts_row = jnp.tile(drafts, (n, 1))        # (n*N_d, DL)
-    dmask = jnp.tile(draft_mask[None, :], (n, 1))  # (n, N_d)
-
-    out = jnp.full((n, max_new), pad_id, jnp.int32)
-    logp = jnp.where(jnp.arange(n) == 0, 0.0, _NEG).astype(jnp.float32)
-    last = jnp.full((n,), bos_token, jnp.int32)
-    pos = jnp.full((n,), start_pos, jnp.int32)   # position of `last`
-    n_out = jnp.zeros((n,), jnp.int32)
-    finished = jnp.zeros((n,), bool)
-
-    max_iters = max_new  # each iteration commits >= 1 token per alive beam
-
-    def cond(state):
-        it = state[0]
-        finished = state[7]
-        return (it < max_iters) & ~jnp.all(finished)
-
-    def body(state):
-        (it, out, logp, last, pos, n_out, cache, finished, acc_total) = state
-
-        # ---- 1. one forward pass over beams × drafts ----------------------
-        last_e = jnp.repeat(last, N_d)                       # (n*N_d,)
-        toks = jnp.concatenate([last_e[:, None], drafts_row], axis=1)
-        pos_e = jnp.repeat(pos, N_d)[:, None] + rel[None, :]  # row pos..pos+DL
-        logits, cache = handle.decode_step(cache, toks, pos_e)
-        lp_all = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        lp_all = lp_all.at[:, :, pad_id].set(_NEG)
-        lp_all = lp_all.reshape(n, N_d, A, V)
-        greedy_tok = jnp.argmax(lp_all, axis=-1).astype(jnp.int32)
-
-        # ---- 2. best draft per beam ---------------------------------------
-        d3 = drafts_row.reshape(n, N_d, DL)
-        n_acc = _accept_lengths(greedy_tok, d3, dmask)       # (n, N_d)
-        best = jnp.argmax(n_acc, axis=-1).astype(jnp.int32)  # (n,)
-        take = lambda x: jnp.take_along_axis(
-            x, best.reshape(-1, *([1] * (x.ndim - 1))), axis=1)[:, 0]
-        lp_best = take(lp_all)                               # (n, A, V)
-        draft_best = take(d3)                                # (n, DL)
-        n_acc_b = jnp.take_along_axis(n_acc, best[:, None], axis=1)[:, 0]
-
-        # ---- 3. candidates of unequal lengths -----------------------------
-        # cum[a] = sum of draft-token logps for prefix length a
-        d_lp = jnp.take_along_axis(
-            lp_best[:, :DL, :], draft_best[:, :, None], axis=2)[:, :, 0]
-        cum = jnp.concatenate(
-            [jnp.zeros((n, 1), jnp.float32), jnp.cumsum(d_lp, axis=1)], axis=1)
-        topv, topi = jax.lax.top_k(lp_best, n)               # (n, A, n)
-        cand_lp = logp[:, None, None] + cum[:, :, None] + topv
-        valid_a = rel[None, :] <= n_acc_b[:, None]           # (n, A)
-        # budget: a+1 tokens must fit the remaining buffer
-        valid_a &= (n_out[:, None] + rel[None, :] + 1) <= max_new
-        # EOS inside the used draft prefix invalidates longer candidates:
-        # prefixes may not extend past a draft EOS token.
-        draft_eos = jnp.cumsum((draft_best == eos_id).astype(jnp.int32), axis=1)
-        no_eos_in_prefix = jnp.concatenate(
-            [jnp.ones((n, 1), jnp.int32), (draft_eos == 0).astype(jnp.int32)],
-            axis=1)
-        valid_a &= no_eos_in_prefix.astype(bool)
-        cand_lp = jnp.where(valid_a[:, :, None], cand_lp, _NEG)
-
-        # Same-path dedup: the candidate (a, w=draft[a]) with a < n_acc is a
-        # strict prefix of the longer greedy-path candidates that are also in
-        # this set (its extension would be regenerated next iteration). A
-        # shorter prefix always carries >= the logprob of its extension, so
-        # without this mask prefixes crowd out genuine alternatives and the
-        # beam degenerates to ~1 committed token/iteration (observed:
-        # call_reduction 1.17x and top-3 accuracy loss before the fix; the
-        # paper's Fig. 3 keeps only frontier candidates).
-        d_pad = jnp.pad(draft_best, ((0, 0), (0, 1)), constant_values=-1)
-        dup = ((topi == d_pad[:, :, None])
-               & (rel[None, :, None] < n_acc_b[:, None, None]))
-        cand_lp = jnp.where(dup, _NEG, cand_lp)
-
-        # finished beams: single pass-through candidate (a=0, k=0), logp kept
-        pass_lp = jnp.full((A, n), _NEG).at[0, 0].set(0.0)
-        cand_lp = jnp.where(finished[:, None, None],
-                            logp[:, None, None] + pass_lp[None], cand_lp)
-
-        # ---- 4. global top-n ----------------------------------------------
-        flat = cand_lp.reshape(-1)                           # (n*A*n,)
-        new_logp, flat_idx = jax.lax.top_k(flat, n)
-        parent = (flat_idx // (A * n)).astype(jnp.int32)
-        a_len = ((flat_idx // n) % A).astype(jnp.int32)
-        k_idx = (flat_idx % n).astype(jnp.int32)
-        w_tok = topi.reshape(-1, n)[parent * A + a_len, k_idx].astype(jnp.int32)
-        was_finished = jnp.take(finished, parent)
-
-        # ---- 5. materialize new beams (fixed-shape writes) ----------------
-        out_p = jnp.take(out, parent, axis=0)
-        nout_p = jnp.take(n_out, parent)
-        drafts_p = jnp.take(draft_best, parent, axis=0)      # (n, DL)
-        # committed tokens this round: draft[:a] ++ w  -> length a+1
-        seg = jnp.where(rel[None, :] < a_len[:, None],
-                        jnp.pad(drafts_p, ((0, 0), (0, 1))),
-                        jnp.where(rel[None, :] == a_len[:, None],
-                                  w_tok[:, None], pad_id))
-        n_new = jnp.where(was_finished, 0, a_len + 1)
-        idx = nout_p[:, None] + rel[None, :]
-        idx = jnp.where(rel[None, :] < n_new[:, None], idx, max_new)
-        out_new = out_p.at[jnp.arange(n)[:, None], idx].set(seg, mode="drop")
-
-        new_finished = was_finished | (w_tok == eos_id) | (nout_p + n_new >= max_new)
-        new_last = jnp.where(was_finished, jnp.take(last, parent), w_tok)
-        new_pos = jnp.take(pos, parent) + n_new
-        new_nout = nout_p + n_new
-
-        # ---- cache: winner-draft row of the parent beam, then commit the
-        # candidate's own prefix length (recurrent-state rollback) ----------
-        src = (parent * N_d + jnp.take(best, parent)).astype(jnp.int32)
-        cache = gather_rows(cache, jnp.repeat(src, N_d))
-        n_keep = jnp.where(was_finished, 0, a_len + 1)
-        cache = handle.commit_cache(cache, jnp.repeat(n_keep, N_d))
-
-        acc_total = acc_total + jnp.where(was_finished[0], 0, a_len[0])
-        return (it + 1, out_new, new_logp, new_last, new_pos, new_nout, cache,
-                new_finished, acc_total)
-
-    state = (jnp.int32(0), out, logp, last, pos, n_out, cache, finished,
-             jnp.int32(0))
-    (it, out, logp, last, pos, n_out, cache, finished, acc_total) = \
-        jax.lax.while_loop(cond, body, state)
-
-    order = jnp.argsort(-logp)
-    return SBSResult(tokens=jnp.take(out, order, axis=0),
-                     lengths=jnp.take(n_out, order),
-                     logprobs=jnp.take(logp, order),
-                     n_calls=it, accepted_tokens=acc_total)
+    res = batched_speculative_beam_search(
+        handle, cache, bos_token, jnp.full((1,), start_pos, jnp.int32),
+        drafts[None], draft_mask[None], n_beams=n_beams, max_new=max_new,
+        eos_id=eos_id, pad_id=pad_id)
+    return SBSResult(tokens=res.tokens[0], lengths=res.lengths[0],
+                     logprobs=res.logprobs[0], n_calls=res.n_calls,
+                     accepted_tokens=res.accepted_tokens[0])

@@ -3,7 +3,9 @@
 Every iteration verifies all N_d drafts for every sequence in ONE decoder
 forward pass over the draft-expanded batch (B*N_d rows — the paper's
 "effective batch" inflation, §3.3), accepts the longest argmax-matching
-prefix of the best draft plus one bonus token, and commits.
+prefix of the best draft plus one bonus token, and commits. The iteration
+itself is the shared DecodeSession greedy-family step
+(``repro.core.session``); this module is the one-shot while_loop wrapper.
 
 Guarantee (the paper's central claim): the generated sequence is IDENTICAL
 to token-by-token greedy decoding — accepted draft tokens equal the argmax
@@ -22,11 +24,15 @@ from __future__ import annotations
 
 from typing import Any, NamedTuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.handles import DecoderHandle
-from repro.core.tree_batch import expand_batch, sync_winner
+from repro.core.session import (SessionSpec, _accept_lengths, init_state,
+                                run_session)
+from repro.core.tree_batch import expand_batch
+
+__all__ = ["SpeculativeResult", "speculative_greedy_decode",
+           "_accept_lengths"]
 
 
 class SpeculativeResult(NamedTuple):
@@ -35,18 +41,6 @@ class SpeculativeResult(NamedTuple):
     n_calls: jnp.ndarray         # () decoder forward passes
     accepted_tokens: jnp.ndarray  # (B,) total draft tokens accepted
     acceptance_rate: jnp.ndarray  # (B,) accepted / generated
-
-
-def _accept_lengths(greedy_tok: jnp.ndarray, drafts: jnp.ndarray,
-                    draft_mask: jnp.ndarray) -> jnp.ndarray:
-    """greedy_tok: (B, N_d, DL+1) argmax predictions; drafts: (B, N_d, DL).
-    Returns (B, N_d): longest prefix where draft token i equals the model's
-    argmax prediction for that position."""
-    if drafts.shape[-1] == 0:
-        return jnp.zeros(drafts.shape[:2], jnp.int32)
-    match = (drafts == greedy_tok[..., :-1]).astype(jnp.int32)
-    n_acc = jnp.sum(jnp.cumprod(match, axis=-1), axis=-1)
-    return jnp.where(draft_mask, n_acc, 0)
 
 
 def speculative_greedy_decode(
@@ -60,73 +54,20 @@ def speculative_greedy_decode(
     as greedy_decode). The cache must cover start_pos + max_new + DL + 1.
     """
     B, N_d, DL = drafts.shape
-    out = jnp.full((B, max_new), pad_id, jnp.int32)
-    cache = expand_batch(cache, N_d)
-    drafts_flat = drafts.reshape(B * N_d, DL)
-    rel = jnp.arange(DL + 1, dtype=jnp.int32)
-
-    def cond(state):
-        _, _, _, _, finished, n_out, _ = state
-        return ~jnp.all(finished) & jnp.any(n_out < max_new)
-
-    def body(state):
-        out, last, pos, cache, finished, n_out, stats = state
-        n_calls, n_accepted = stats
-
-        # --- one verify pass over the draft-expanded batch ---------------
-        last_e = jnp.repeat(last, N_d)                     # (B*N_d,)
-        toks = jnp.concatenate([last_e[:, None], drafts_flat], axis=1)
-        pos_e = jnp.repeat(pos, N_d)[:, None] + rel[None, :]
-        logits, cache = handle.decode_step(cache, toks, pos_e)
-        greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        greedy_tok = greedy_tok.reshape(B, N_d, DL + 1)
-
-        # --- accept / select best draft ----------------------------------
-        n_acc = _accept_lengths(greedy_tok, drafts, draft_mask)   # (B, N_d)
-        best = jnp.argmax(n_acc, axis=-1).astype(jnp.int32)      # (B,)
-        n_acc_b = jnp.take_along_axis(n_acc, best[:, None], axis=1)[:, 0]
-        new_toks = jnp.take_along_axis(
-            greedy_tok, best[:, None, None], axis=1)[:, 0]       # (B, DL+1)
-
-        # --- EOS + budget truncation --------------------------------------
-        within = rel[None, :] <= n_acc_b[:, None]                # proposed
-        is_eos = (new_toks == eos_id) & within
-        any_eos = jnp.any(is_eos, axis=1)
-        first_eos = jnp.argmax(is_eos, axis=1)
-        n_prop = jnp.where(any_eos, first_eos + 1, n_acc_b + 1)
-        budget = max_new - n_out
-        n_app = jnp.minimum(n_prop, budget)
-        n_app = jnp.where(finished, 0, n_app)
-        hit_eos = any_eos & (first_eos + 1 <= budget) & ~finished
-
-        # --- write accepted tokens ----------------------------------------
-        write = rel[None, :] < n_app[:, None]                    # (B, DL+1)
-        idx = n_out[:, None] + rel[None, :]
-        idx = jnp.where(write, idx, max_new)                     # drop invalid
-        b_idx = jnp.arange(B)[:, None]
-        out = out.at[b_idx, idx].set(new_toks, mode="drop")
-
-        # --- commit: recurrent-state checkpoint + winner cache sync -------
-        # Fed token i sits at position pos-1+i and equals the committed token
-        # there for all i < n_app, so the checkpoint to keep is exactly n_app.
-        cache = handle.commit_cache(cache, jnp.repeat(n_app, N_d))
-        cache = sync_winner(cache, best, N_d)
-
-        last_idx = jnp.clip(n_app - 1, 0, DL)
-        new_last = jnp.take_along_axis(new_toks, last_idx[:, None], axis=1)[:, 0]
-        last = jnp.where(n_app > 0, new_last, last)
-        pos = pos + n_app
-        n_out = n_out + n_app
-        finished = finished | hit_eos | (n_out >= max_new)
-        acc_used = jnp.minimum(n_acc_b, n_app)  # committed tokens from drafts
-        return (out, last, pos, cache, finished, n_out,
-                (n_calls + 1, n_accepted + acc_used))
-
-    init = (out, last_token, start_pos, cache, jnp.zeros((B,), bool),
-            jnp.zeros((B,), jnp.int32),
-            (jnp.int32(0), jnp.zeros((B,), jnp.int32)))
-    out, _, _, _, _, n_out, (n_calls, n_accepted) = jax.lax.while_loop(
-        cond, body, init)
-    rate = n_accepted / jnp.maximum(n_out, 1)
-    return SpeculativeResult(tokens=out, lengths=n_out, n_calls=n_calls,
-                             accepted_tokens=n_accepted, acceptance_rate=rate)
+    spec = SessionSpec(n_slots=B, n_beams=1, n_drafts=N_d, draft_len=DL,
+                       max_new=max_new, eos_id=eos_id, pad_id=pad_id,
+                       kind="greedy")
+    state = init_state(spec, expand_batch(cache, N_d))._replace(
+        last=last_token.astype(jnp.int32)[:, None],
+        pos=start_pos.astype(jnp.int32)[:, None],
+        finished=jnp.zeros((B, 1), bool),
+        active=jnp.ones((B,), bool),
+        drafts=drafts.astype(jnp.int32),
+        draft_mask=draft_mask,
+    )
+    state, i = run_session(spec, handle, state)
+    n_out = state.n_out[:, 0]
+    rate = state.accepted / jnp.maximum(n_out, 1)
+    return SpeculativeResult(tokens=state.tokens[:, 0], lengths=n_out,
+                             n_calls=i, accepted_tokens=state.accepted,
+                             acceptance_rate=rate)

@@ -44,3 +44,17 @@ def gather_rows(cache, src_rows: jnp.ndarray):
         return jnp.take(a, src_rows.astype(jnp.int32), axis=1)
 
     return jax.tree_util.tree_map(one, cache)
+
+
+def set_rows(cache, rows: jnp.ndarray, values):
+    """Scatter ``values`` into batch rows ``rows`` (axis 1): the continuous-
+    batching admission path. ``rows`` may be traced — admitting into a freed
+    slot never recompiles. ``values`` leaves are (R, 1 or len(rows), ...)
+    and broadcast across the written rows."""
+    n = rows.shape[0]
+
+    def one(a, b):
+        b = jnp.broadcast_to(b, (a.shape[0], n) + a.shape[2:])
+        return a.at[:, rows.astype(jnp.int32)].set(b.astype(a.dtype))
+
+    return jax.tree_util.tree_map(one, cache, values)

@@ -1,0 +1,6 @@
+"""jax-version compatibility shims shared by the Pallas kernels."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 ships the TPU compiler-params container as TPUCompilerParams
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

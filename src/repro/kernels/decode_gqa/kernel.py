@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 _NEG = -1e30
 
 
@@ -96,7 +98,7 @@ def decode_gqa_kernel(q_r, k_r, v_r, k_pos, q_pos, *, window: int = 0,
             pltpu.VMEM((TG, 1), jnp.float32),
             pltpu.VMEM((TG, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q_r, k_r, v_r, k_pos, q_pos)

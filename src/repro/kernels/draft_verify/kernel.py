@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
 _NEG = -1e30
 
 
@@ -89,7 +91,7 @@ def draft_verify_kernel(logits, drafts, draft_mask, *, bv: int = 512,
             pltpu.VMEM((T, 1), jnp.float32),
             pltpu.VMEM((T, 1), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(logits, drafts, draft_mask)

@@ -60,7 +60,7 @@ def run_one(arch: str, shape: str, *, multi_pod: bool, seq_shard: bool,
 
     from repro.launch import steps as steps_mod
     from repro.launch.hlo_analysis import (
-        ICI_BW, HBM_BW, PEAK_FLOPS, collective_bytes, model_flops)
+        ICI_BW, HBM_BW, PEAK_FLOPS, collective_bytes, cost_dict, model_flops)
     from repro.launch.mesh import make_production_mesh
     from repro.models import transformer as _tr
     from repro.sharding import ctx as shard_ctx
@@ -103,7 +103,7 @@ def run_one(arch: str, shape: str, *, multi_pod: bool, seq_shard: bool,
                 c = _lower_compile(b, shard_ctx, mesh, seq_shard)
             finally:
                 _tr.SCAN_UNROLL = 1
-            cost = c.cost_analysis()
+            cost = cost_dict(c)
             return {"flops": float(cost.get("flops", 0.0)),
                     "bytes": float(cost.get("bytes accessed", 0.0)),
                     "coll": collective_bytes(c.as_text())["total"]}

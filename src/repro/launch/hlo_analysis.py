@@ -34,6 +34,15 @@ _DTYPE_BYTES = {
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 
 
+def cost_dict(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions: older
+    releases return a one-element list of dicts, newer ones the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _shape_bytes(dtype: str, dims: str) -> int:
     if dtype not in _DTYPE_BYTES:
         return 0

@@ -1,15 +1,22 @@
 """Serving launcher: speculative decoding on any decoder-only architecture
 (prompt-lookup drafting) or the Molecular Transformer (source-copy drafting
-via the ReactionEngine — see examples/serve_retrosynthesis.py).
+via the serving engines — see examples/serve_retrosynthesis.py).
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
         --requests 4 --max-new 48
+
+Runs the one-shot greedy vs speculative comparison, then a
+continuous-batching demo: the same requests stream through a fixed-slot
+DecodeSession (``repro.core.session``) driven by the
+``ContinuousScheduler`` — staggered admissions, immediate eviction, one
+jitted step for the whole run. Skip it with --no-continuous.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +25,63 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import (greedy_decode, prompt_lookup_drafts,
                         speculative_greedy_decode, transformer_handle)
+from repro.core.session import SessionSpec, init_state, reset_slot, session_step
+from repro.core.tree_batch import set_rows
 from repro.models import transformer as tr
+from repro.serving.scheduler import ContinuousScheduler
+
+
+def continuous_demo(params, cfg, prompts, args) -> None:
+    """Decoder-only continuous batching: admit each prompt into a freed
+    slot (prefill -> scatter cache rows), step all slots together."""
+    B, P = prompts.shape
+    n_slots = min(2, B)
+    DL, N_d = args.draft_len, args.n_drafts
+    spec = SessionSpec(n_slots=n_slots, n_beams=1, n_drafts=N_d,
+                       draft_len=DL, max_new=args.max_new, eos_id=2,
+                       kind="greedy")
+    cache = tr.init_cache(cfg, spec.n_rows, P + spec.cache_len)
+    state = init_state(spec, cache)
+
+    @partial(jax.jit, donate_argnums=(1,))
+    def step_fn(params, state):
+        return session_step(spec, transformer_handle(params, cfg), state)
+
+    @partial(jax.jit, donate_argnums=(1,))
+    def admit_fn(params, state, slot, prompt, drafts, dmask):
+        one = tr.init_cache(cfg, 1, P + spec.cache_len)
+        _, one = tr.prefill(params, cfg, one, prompt[None, :-1])
+        rows = slot * spec.rows_per_slot + jnp.arange(spec.rows_per_slot)
+        state = state._replace(
+            cache=set_rows(state.cache, rows, one))
+        return reset_slot(spec, state, slot, prompt[-1], P - 1, drafts, dmask)
+
+    sched = ContinuousScheduler(
+        spec, state,
+        admit=lambda st, slot, payload: admit_fn(params, st, jnp.int32(slot),
+                                                 *payload),
+        step=lambda st: step_fn(params, st))
+
+    def read_slot(state, slot):
+        return dict(tokens=np.asarray(state.tokens[slot]),
+                    lengths=np.asarray(state.n_out[slot]),
+                    logprobs=np.asarray(state.logp[slot]),
+                    n_calls=int(state.n_calls[slot]),
+                    accepted=int(state.accepted[slot]))
+
+    for i, row in enumerate(np.asarray(prompts)):
+        d, m = prompt_lookup_drafts(row, DL, N_d)
+        # stagger arrivals so admissions interleave with running decodes
+        sched.submit((jnp.asarray(row), jnp.asarray(d), jnp.asarray(m)),
+                     arrival=float(3 * i))
+    t0 = time.time()
+    results = sched.run(read_slot)
+    dt = time.time() - t0
+    acc = sum(r.accepted for r in results)
+    gen = sum(int(r.lengths[0]) for r in results)
+    print(f"continuous  : {B} requests over {n_slots} slots, "
+          f"{sched.n_steps} steps, {dt:.2f}s, "
+          f"acceptance={acc / max(gen, 1):.2f}")
 
 
 def main() -> None:
@@ -30,6 +93,7 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=48)
     ap.add_argument("--draft-len", type=int, default=8)
     ap.add_argument("--n-drafts", type=int, default=16)
+    ap.add_argument("--no-continuous", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -71,6 +135,8 @@ def main() -> None:
     print(f"speculative : {int(s.n_calls)} calls, {t_s:.2f}s "
           f"acceptance={float(s.acceptance_rate.mean()):.2f}")
     print(f"outputs identical: {bool((g.tokens == s.tokens).all())}")
+    if not args.no_continuous:
+        continuous_demo(params, cfg, prompts, args)
 
 
 if __name__ == "__main__":

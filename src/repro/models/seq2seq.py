@@ -142,8 +142,18 @@ def apply(params, cfg: ModelConfig, src, tgt_in, *, src_mask=None, lengths=None)
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, memory=None,
-               params=None, dtype=jnp.float32) -> dict:
-    """Self-attn KV caches + precomputed cross K/V (if memory given)."""
+               params=None, dtype=jnp.float32, memory_len=None,
+               memory_mask=None) -> dict:
+    """Self-attn KV caches + precomputed cross K/V (if memory given).
+
+    ``memory_len``: cross K/V width when ``memory`` is absent — the
+    continuous-batching session allocates empty rows up front and scatters
+    each request's memory K/V in at admission time.
+    ``memory_mask``: (batch, M) True=valid; when given it is stored INSIDE
+    the cache (leaf shape (1, batch, M), batch on axis 1 like every other
+    leaf), so batch-row expansion/gather/scatter ops carry each row's mask
+    along and ``decode_step`` needs no closed-over mask.
+    """
     R = cfg.n_layers
     stack = lambda t: jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a, (R,) + a.shape), t)
@@ -153,10 +163,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, memory=None,
             lambda p: attn_mod.memory_kv(p, cfg, memory)
         )(params["dec_blocks"]["cross_attn"])
     else:
-        M = 1 if memory is None else memory.shape[1]
+        M = (memory_len if memory_len is not None
+             else (1 if memory is None else memory.shape[1]))
         mkv = stack({"mk": jnp.zeros((batch, M, cfg.n_heads, cfg.head_dim), dtype),
                      "mv": jnp.zeros((batch, M, cfg.n_heads, cfg.head_dim), dtype)})
-    return {"self": self_cache, "cross": mkv}
+    cache = {"self": self_cache, "cross": mkv}
+    if memory_mask is not None:
+        cache["mmask"] = jnp.asarray(memory_mask, bool)[None]
+    return cache
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, positions, *,
@@ -165,8 +179,11 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, positions, *,
 
     ``positions``: (B, T) absolute target positions (rows may differ) — this
     is the JAX-native equivalent of the paper's padLeft + shifted positional
-    encodings (DESIGN.md §2).
+    encodings (DESIGN.md §2). When no explicit ``memory_mask`` is passed the
+    per-row mask stored in the cache (if any) applies.
     """
+    if memory_mask is None and "mmask" in cache:
+        memory_mask = cache["mmask"][0]
     x = _embed_pos(params, cfg, tokens, positions)
 
     def body(h, xs):
@@ -186,7 +203,10 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, positions, *,
         body, x, (params["dec_blocks"], cache["self"], cache["cross"]))
     x = apply_norm(params["dec_norm"], x, cfg.norm)
     logits = x @ params["lm_head"]["w_vocab"]
-    return logits, {"self": new_self, "cross": cache["cross"]}
+    new_cache = {"self": new_self, "cross": cache["cross"]}
+    if "mmask" in cache:
+        new_cache["mmask"] = cache["mmask"]
+    return logits, new_cache
 
 
 def commit_cache(cfg: ModelConfig, cache, n_keep):

@@ -1,3 +1,7 @@
-from repro.serving.engine import ReactionEngine, EngineConfig, Prediction
+from repro.serving.engine import (EngineConfig, Prediction, ReactionEngine,
+                                  StreamingEngine)
+from repro.serving.scheduler import (ContinuousScheduler, ScheduledRequest,
+                                     SlotResult)
 
-__all__ = ["ReactionEngine", "EngineConfig", "Prediction"]
+__all__ = ["ReactionEngine", "StreamingEngine", "EngineConfig", "Prediction",
+           "ContinuousScheduler", "ScheduledRequest", "SlotResult"]

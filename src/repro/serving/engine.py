@@ -1,9 +1,9 @@
-"""Serving engine: the industrial-application layer the paper targets
+"""Serving engines: the industrial-application layer the paper targets
 (reaction-prediction assistants, CASP single-step retrosynthesis models).
 
-Pipeline per request batch:
-  tokenize -> encode once -> extract source-copy drafts (host, negligible
-  cost) -> speculative greedy / speculative beam search -> detokenize.
+Pipeline per request:
+  tokenize -> encode once -> extract source-copy drafts (host, vectorized)
+  -> speculative greedy / speculative beam search -> detokenize.
 
 Decoding modes mirror the paper's experiments:
   greedy               Table 2 baseline
@@ -11,15 +11,25 @@ Decoding modes mirror the paper's experiments:
   beam                 Table 3/4 baseline
   speculative_beam     Table 3/4, the paper's SBS
 
-The engine jits one function per (mode, shape-bucket) and reuses it across
-requests — queries are padded to the bucket's max source length.
+Two engines share these modes:
+
+``ReactionEngine`` — the per-request reference: jits one closed decode
+loop per (mode, batch-shape) and runs each request batch to completion.
+Every request waits for the slowest member of its batch.
+
+``StreamingEngine`` — the production path: a ``DecodeSession`` with S
+fixed slots driven by ``repro.serving.scheduler.ContinuousScheduler``.
+ONE jitted step + ONE jitted admit serve every request forever (slot
+index is traced, so admissions into freed slots never recompile), beams
+are batched across slots (no B=1 restriction), and finished sequences
+leave immediately. Outputs are token-identical to ``ReactionEngine`` —
+``tests/test_session.py`` verifies all four modes.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Sequence
 
 import jax
@@ -31,8 +41,14 @@ from repro.core import (
     batch_drafts, beam_search, extract_drafts, greedy_decode, seq2seq_handle,
     speculative_beam_search, speculative_greedy_decode,
 )
+from repro.core.session import (SessionSpec, init_state, reset_slot,
+                                session_step)
+from repro.core.tree_batch import set_rows
 from repro.data.tokenizer import SmilesTokenizer
+from repro.models import attention as attn_mod
 from repro.models import seq2seq as s2s
+from repro.models.attention import KVCache
+from repro.serving.scheduler import ContinuousScheduler, SlotResult
 
 
 @dataclasses.dataclass
@@ -44,6 +60,7 @@ class EngineConfig:
     max_new: int = 96
     max_src: int = 128
     dilations: tuple[int, ...] = (1,)
+    n_slots: int = 2                 # StreamingEngine decode slots
 
 
 @dataclasses.dataclass
@@ -55,7 +72,20 @@ class Prediction:
     wall_s: float
 
 
+def _mode_shape(ecfg: EngineConfig) -> tuple[str, int, int, int]:
+    """mode -> (session kind, beams K, drafts N_d, draft length DL)."""
+    return {
+        "greedy": ("greedy", 1, 1, 0),
+        "speculative": ("greedy", 1, ecfg.n_drafts, ecfg.draft_len),
+        "beam": ("beam", ecfg.n_beams, 1, 0),
+        "speculative_beam": ("beam", ecfg.n_beams, ecfg.n_drafts,
+                             ecfg.draft_len),
+    }[ecfg.mode]
+
+
 class ReactionEngine:
+    """Per-request reference engine (one jitted closed loop per batch)."""
+
     def __init__(self, params, cfg: ModelConfig, tokenizer: SmilesTokenizer,
                  engine_cfg: EngineConfig | None = None):
         self.params = params
@@ -166,7 +196,7 @@ class ReactionEngine:
 
     def predict_topn(self, query: str) -> Prediction:
         """Beam / speculative-beam search for one query (the paper's B=1
-        retrosynthesis serving regime)."""
+        retrosynthesis serving regime; StreamingEngine lifts it)."""
         ecfg = self.ecfg
         src = jnp.asarray(self._encode_src([query]))
         spec = ecfg.mode == "speculative_beam"
@@ -183,8 +213,158 @@ class ReactionEngine:
         wall = time.time() - t0
         smiles = [self.tok.decode(np.asarray(res.tokens[i]))
                   for i in range(res.tokens.shape[0])]
-        acc = float(getattr(res, "accepted_tokens", 0.0))
+        # true rate: committed draft tokens / generated tokens on the best
+        # beam's path, same convention as predict()
+        accepted = int(getattr(res, "accepted_tokens", 0))
+        generated = int(res.lengths[0])
         return Prediction(smiles=smiles,
                           logprobs=[float(x) for x in res.logprobs],
                           n_calls=int(res.n_calls),
-                          acceptance_rate=acc, wall_s=wall)
+                          acceptance_rate=accepted / max(generated, 1),
+                          wall_s=wall)
+
+
+class StreamingEngine:
+    """Continuous-batching engine: S decode slots, one jitted step/admit."""
+
+    def __init__(self, params, cfg: ModelConfig, tokenizer: SmilesTokenizer,
+                 engine_cfg: EngineConfig | None = None):
+        self.params = params
+        self.cfg = cfg
+        self.tok = tokenizer
+        self.ecfg = ecfg = engine_cfg or EngineConfig()
+        kind, K, N_d, DL = _mode_shape(ecfg)
+        self.spec = spec = SessionSpec(
+            n_slots=ecfg.n_slots, n_beams=K, n_drafts=N_d, draft_len=DL,
+            max_new=ecfg.max_new, eos_id=tokenizer.eos_id,
+            pad_id=tokenizer.pad_id, kind=kind)
+        # donate the session state: the scheduler threads it linearly, so
+        # XLA updates the (dominant) cache buffers in place every step
+        self._step_fn = jax.jit(self._step_impl, donate_argnums=(1,))
+        self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(1,))
+        self.scheduler = self._new_scheduler()
+
+    # -- jitted session functions (compiled ONCE per engine, every request
+    #    and every slot reuses them) ----------------------------------------
+    def _step_impl(self, params, state):
+        handle = seq2seq_handle(params, self.cfg)   # mask rides in the cache
+        return session_step(self.spec, handle, state)
+
+    def _admit_impl(self, params, state, slot, src, drafts, dmask):
+        """Prefill request -> slot: encode the query, scatter its cross-attn
+        K/V + memory mask into the slot's cache rows, reset the slot's
+        decode state. ``slot`` is traced — no recompilation per admission."""
+        spec = self.spec
+        memory, mask = s2s.encode(params, self.cfg, src[None])
+        mkv = jax.vmap(
+            lambda p: attn_mod.memory_kv(p, self.cfg, memory)
+        )(params["dec_blocks"]["cross_attn"])
+        rows = slot * spec.rows_per_slot + jnp.arange(spec.rows_per_slot)
+        cache = dict(state.cache)
+        cache["cross"] = set_rows(cache["cross"], rows, mkv)
+        cache["mmask"] = cache["mmask"].at[:, rows].set(mask[0])
+        # recycled rows: pos=-1 marks every slot empty (attention masks on
+        # stored positions), so the evicted request's stale K/V is unreadable
+        sc = cache["self"]
+        cache["self"] = KVCache(k=sc.k, v=sc.v,
+                                pos=sc.pos.at[:, rows].set(-1))
+        state = state._replace(cache=cache)
+        return reset_slot(spec, state, slot, self.tok.bos_id, 0,
+                          drafts, dmask)
+
+    def _new_scheduler(self) -> ContinuousScheduler:
+        spec, ecfg = self.spec, self.ecfg
+        cache = s2s.init_cache(
+            self.cfg, spec.n_rows, spec.cache_len, memory_len=ecfg.max_src,
+            memory_mask=np.zeros((spec.n_rows, ecfg.max_src), bool))
+        step = lambda state: self._step_fn(self.params, state)
+        admit = lambda state, slot, payload: self._admit_fn(
+            self.params, state, jnp.int32(slot), *payload)
+        return ContinuousScheduler(self.spec, init_state(spec, cache),
+                                   admit=admit, step=step)
+
+    # -- request plumbing ----------------------------------------------------
+    def _payload(self, query: str):
+        spec, ecfg = self.spec, self.ecfg
+        src = np.asarray(self.tok.encode_padded(query, ecfg.max_src,
+                                                add_eos=True), np.int32)
+        if spec.draft_len > 0:
+            drafts_b, dmask_b = batch_drafts(src[None], spec.draft_len,
+                                             spec.n_drafts,
+                                             dilations=ecfg.dilations)
+            drafts, dmask = drafts_b[0], dmask_b[0]
+        else:
+            drafts = np.zeros((spec.n_drafts, 0), np.int32)
+            dmask = np.ones((spec.n_drafts,), bool)
+        return (jnp.asarray(src), jnp.asarray(drafts), jnp.asarray(dmask))
+
+    def _read_slot(self, state, slot: int) -> dict:
+        order = (np.argsort(-np.asarray(state.logp[slot]), kind="stable")
+                 if self.spec.kind == "beam"
+                 else np.arange(self.spec.n_beams))
+        return dict(
+            tokens=np.asarray(state.tokens[slot])[order],
+            lengths=np.asarray(state.n_out[slot])[order],
+            logprobs=np.asarray(state.logp[slot])[order],
+            n_calls=int(state.n_calls[slot]),
+            accepted=int(state.accepted[slot]),
+        )
+
+    def _prediction(self, r: SlotResult, wall_s: float) -> Prediction:
+        smiles = [self.tok.decode(r.tokens[k])
+                  for k in range(r.tokens.shape[0])]
+        logprobs = ([float(x) for x in r.logprobs]
+                    if self.spec.kind == "beam" else [0.0] * len(smiles))
+        return Prediction(smiles=smiles, logprobs=logprobs,
+                          n_calls=r.n_calls,
+                          acceptance_rate=r.accepted / max(int(r.lengths[0]), 1),
+                          wall_s=wall_s)
+
+    # -- public API ----------------------------------------------------------
+    def reset(self) -> None:
+        """Drop all queued/resident requests and start a fresh session.
+        The jitted step/admit functions (and their compilations) survive."""
+        self.scheduler = self._new_scheduler()
+
+    def submit(self, query: str, *, arrival: float = 0.0) -> int:
+        """Enqueue a request; returns its id. ``arrival`` delays admission
+        (steps in closed-loop serve(), seconds in realtime serve())."""
+        return self.scheduler.submit(self._payload(query), arrival=arrival)
+
+    def serve(self, *, realtime: bool = False) -> dict[int, SlotResult]:
+        """Drain the queue with continuous batching; {rid: SlotResult}."""
+        results = self.scheduler.run(self._read_slot, realtime=realtime)
+        return {r.rid: r for r in results}
+
+    def _require_idle(self, caller: str) -> None:
+        # the one-shot APIs drain the queue; running them with foreign
+        # submit()ed requests pending would silently discard those results
+        if self.scheduler.pending:
+            raise RuntimeError(
+                f"{caller} would drain {self.scheduler.pending} pending "
+                f"submit()ed request(s); call serve() first")
+
+    def predict(self, queries: Sequence[str]) -> list[Prediction]:
+        """Drop-in for ReactionEngine.predict (greedy/speculative), served
+        through the continuous scheduler."""
+        if self.ecfg.mode not in ("greedy", "speculative"):
+            raise ValueError(f"predict() supports greedy/speculative, "
+                             f"got {self.ecfg.mode}")
+        self._require_idle("predict()")
+        t0 = time.time()
+        rids = [self.submit(q) for q in queries]
+        done = self.serve()
+        wall = (time.time() - t0) / max(len(queries), 1)
+        return [self._prediction(done[rid], wall) for rid in rids]
+
+    def predict_topn(self, query: str) -> Prediction:
+        """Drop-in for ReactionEngine.predict_topn (beam modes) — one
+        query, n_beams candidates sorted by log-probability."""
+        if self.spec.kind != "beam":
+            raise ValueError(f"predict_topn() needs a beam mode, "
+                             f"got {self.ecfg.mode}")
+        self._require_idle("predict_topn()")
+        t0 = time.time()
+        rid = self.submit(query)
+        done = self.serve()
+        return self._prediction(done[rid], time.time() - t0)

@@ -1,0 +1,179 @@
+"""Continuous-batching request scheduler over a DecodeSession.
+
+The paper's industrial setting is a stream of retrosynthesis queries, not
+fixed batches: the old engine padded requests into one jit-per-batch-shape
+``lax.while_loop`` where every request waited for the batch's slowest
+member. This scheduler instead keeps S fixed decode slots stepping
+forever:
+
+  - ``submit()`` enqueues a request (optionally with a future arrival
+    time for open-loop load generation);
+  - each host iteration admits queued requests into free slots (one
+    jitted admit with a *traced* slot index — no recompilation), runs ONE
+    shared jitted ``session_step`` for all slots, and evicts finished
+    slots, returning their tokens immediately;
+  - eviction frees the slot for the next queued request while the other
+    slots keep decoding — no head-of-line blocking.
+
+The scheduler is model-agnostic: it drives two callables (``admit``,
+``step``) plus a ``read_slot`` extractor, all supplied by the engine
+(``repro.serving.engine.StreamingEngine`` for the Molecular Transformer).
+Because the session step is row-independent, a request's output is
+byte-identical whether it runs alone or is admitted mid-stream next to
+strangers — the invariant ``tests/test_session.py`` enforces.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.session import SessionSpec, SessionState, release_slot
+
+
+@dataclasses.dataclass
+class ScheduledRequest:
+    """One queued decode request. ``payload`` is whatever the engine's
+    admit function consumes (source tokens, drafts, ...)."""
+
+    rid: int
+    payload: Any
+    arrival: float = 0.0   # run()-relative: steps (closed loop) | s (realtime)
+
+
+@dataclasses.dataclass
+class SlotResult:
+    """A finished request, read out of its slot at eviction time.
+
+    Timestamps (and thus ``latency``/``queue_delay``) are relative to
+    run() start, in the run's clock unit: wall-clock seconds when
+    ``realtime=True``, decode-step counts otherwise."""
+
+    rid: int
+    tokens: np.ndarray            # (K, max_new) committed tokens, pad after EOS
+    lengths: np.ndarray           # (K,)
+    logprobs: np.ndarray          # (K,) cumulative log-probs (beam family)
+    n_calls: int                  # decoder forward passes while resident
+    accepted: int                 # committed draft tokens
+    arrival: float                # s (realtime) | steps (closed loop)
+    admitted: float
+    completed: float
+
+    @property
+    def latency(self) -> float:
+        return self.completed - self.arrival
+
+    @property
+    def queue_delay(self) -> float:
+        return self.admitted - self.arrival
+
+
+class ContinuousScheduler:
+    """S-slot continuous batching over engine-supplied session callables.
+
+    admit(state, slot:int, payload) -> state     (jitted by the engine)
+    step(state) -> state                          (jitted by the engine)
+    """
+
+    def __init__(self, spec: SessionSpec, state: SessionState, *,
+                 admit: Callable, step: Callable):
+        self.spec = spec
+        self.state = state
+        self._admit = admit
+        self._step = step
+        self._queue: list[ScheduledRequest] = []   # sorted by arrival
+        self._resident: dict[int, ScheduledRequest] = {}   # slot -> request
+        self._admit_time: dict[int, float] = {}
+        self._free = list(range(spec.n_slots))
+        self._next_rid = 0
+        self.n_steps = 0
+        self._skipped = 0.0   # closed-loop clock offset from idle jumps
+
+    # ------------------------------------------------------------------ API
+    def submit(self, payload, *, arrival: float = 0.0, rid=None) -> int:
+        if rid is None:
+            rid = self._next_rid
+        elif rid < self._next_rid:
+            # auto-assigned ids count up from 0; reusing one would make two
+            # results collide in any {rid: result} view
+            raise ValueError(f"rid {rid} may already be in use; "
+                             f"pass rid >= {self._next_rid} or omit it")
+        self._next_rid = max(self._next_rid, rid) + 1
+        # keep the queue arrival-ordered (stable for ties), so an
+        # already-arrived request never stalls behind a later arrival
+        bisect.insort(self._queue,
+                      ScheduledRequest(rid=rid, payload=payload,
+                                       arrival=arrival),
+                      key=lambda r: r.arrival)
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue) + len(self._resident)
+
+    # ------------------------------------------------------------ internals
+    def _admit_ready(self, now: float) -> None:
+        while self._queue and self._free and self._queue[0].arrival <= now:
+            req = self._queue.pop(0)
+            slot = self._free.pop(0)
+            self.state = self._admit(self.state, slot, req.payload)
+            self._resident[slot] = req
+            self._admit_time[slot] = now
+
+    def _evict_finished(self, now: float, read_slot) -> list[SlotResult]:
+        if not self._resident:
+            return []
+        finished = np.asarray(self.state.finished)
+        done, results = [s for s in self._resident
+                         if finished[s].all()], []
+        for slot in done:
+            req = self._resident.pop(slot)
+            fields = read_slot(self.state, slot)
+            results.append(SlotResult(
+                rid=req.rid, arrival=req.arrival,
+                admitted=self._admit_time.pop(slot), completed=now,
+                **fields))
+            self.state = release_slot(self.state, slot)
+            self._free.append(slot)
+        self._free.sort()
+        return results
+
+    # ---------------------------------------------------------------- drive
+    def run(self, read_slot: Callable, *,
+            realtime: bool = False) -> list[SlotResult]:
+        """Drive admissions/steps/evictions until the queue drains.
+
+        ``realtime=False``: closed loop — arrival times are DECODE-STEP
+        counts (deterministic mid-stream admission, the unit tests' mode),
+        and the clock fast-forwards over idle gaps.
+        ``realtime=True``: open loop — arrival times are wall-clock seconds
+        since run() start; requests are held back until they "arrive" (the
+        throughput benchmark's Poisson stream)."""
+        results: list[SlotResult] = []
+        t0 = time.perf_counter()
+        step0, skip0 = self.n_steps, self._skipped   # run()-relative clock
+        clock = ((lambda: time.perf_counter() - t0) if realtime
+                 else (lambda: float(self.n_steps - step0)
+                       + (self._skipped - skip0)))
+        while self._queue or self._resident:
+            now = clock()
+            if (not self._resident and self._queue and not realtime
+                    and self._queue[0].arrival > now):
+                # idle: fast-forward the clock to the next arrival (persisted
+                # in the offset so admitted/completed stamps stay monotone)
+                self._skipped += self._queue[0].arrival - now
+                now = clock()
+            self._admit_ready(now)
+            if not self._resident:
+                if realtime and self._queue:
+                    # nothing can change until the head arrives: sleep it off
+                    time.sleep(max(0.0, self._queue[0].arrival - now))
+                continue
+            self.state = self._step(self.state)
+            self.n_steps += 1
+            results.extend(self._evict_finished(clock(), read_slot))
+        return results

@@ -1,0 +1,89 @@
+"""Minimal property-testing fallback with a hypothesis-compatible surface.
+
+The tier-1 suite uses ``hypothesis`` (declared in pyproject's ``dev``
+extra). Hermetic environments — CI images without the dev extra, airgapped
+containers — must still run the full suite, so tests import through::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from repro.testing import given, settings, strategies as st
+
+This fallback implements the tiny subset the suite needs: ``given`` over
+``integers``/``lists`` strategies with a deterministic per-test seed, and a
+``settings`` decorator honouring ``max_examples``. It does NOT shrink
+failing examples — it reports the failing inputs and re-raises — and it
+does NOT support mixing pytest fixtures into a ``@given`` test's
+signature (the wrapper hides all params from pytest; keep fixture-using
+property tests fixture-free, as the suite does).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from types import SimpleNamespace
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: int = 16) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+strategies = SimpleNamespace(integers=integers, lists=lists)
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+def given(*strats: _Strategy):
+    def deco(f):
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(f.__qualname__.encode()))
+            for _ in range(n):
+                vals = tuple(s.example(rng) for s in strats)
+                try:
+                    f(*args, *vals, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{f.__name__} falsified by example {vals!r}: {e}"
+                    ) from e
+
+        # inherit an inner @settings(...) applied below the @given
+        wrapper._max_examples = getattr(f, "_max_examples",
+                                        _DEFAULT_MAX_EXAMPLES)
+        # pytest resolves fixtures from the (followed) signature; the
+        # strategy-supplied params must not look like fixtures
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco
+
+
+def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(f):
+        f._max_examples = max_examples
+        return f
+
+    return deco

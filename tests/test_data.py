@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: in-repo fallback (see pyproject [dev])
+    from repro.testing import given, settings, strategies as st
 
 from repro.core.drafting import extract_drafts
 from repro.data.synthetic import SyntheticReactionDataset, make_reaction

@@ -1,0 +1,227 @@
+"""DecodeSession + continuous-batching invariants.
+
+The contract that makes continuous batching safe to ship:
+
+  1. the StreamingEngine (fixed slots, queued admissions, shared jitted
+     step) produces token-identical outputs to the per-request
+     ReactionEngine for all four decoding modes;
+  2. a request admitted mid-stream — next to strangers, into a recycled
+     slot — yields byte-identical output to running it alone;
+  3. batched beam search == the B=1 beam loop run per query (the lifted
+     restriction changes nothing but wall-clock);
+  4. vectorized draft extraction == the per-row reference, including
+     dilated windows (paper §3.1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: in-repo fallback (see pyproject [dev])
+    from repro.testing import given, settings, strategies as st
+
+from repro.configs.mt import tiny_config
+from repro.core import (batch_drafts, batched_beam_search,
+                        batched_speculative_beam_search, beam_search,
+                        extract_drafts, seq2seq_handle,
+                        speculative_beam_search)
+from repro.data import SyntheticReactionDataset
+from repro.models import seq2seq as s2s
+from repro.serving import EngineConfig, ReactionEngine, StreamingEngine
+
+MAX_NEW = 20
+
+
+# ---------------------------------------------------------------------------
+# small random model (decoder behaviour only, no training needed)
+
+
+@pytest.fixture(scope="module")
+def toy():
+    ds = SyntheticReactionDataset(16, seed=0)
+    cfg = tiny_config(ds.tokenizer.vocab_size, depth=2, d_model=64,
+                      max_len=192)
+    params = s2s.init(jax.random.PRNGKey(0), cfg)
+    return ds, cfg, params
+
+
+def _engines(toy, **kw):
+    ds, cfg, params = toy
+    ecfg = EngineConfig(max_new=MAX_NEW, max_src=96, **kw)
+    return (ReactionEngine(params, cfg, ds.tokenizer, ecfg),
+            StreamingEngine(params, cfg, ds.tokenizer, ecfg))
+
+
+# ---------------------------------------------------------------------------
+# 1. continuous engine == per-request engine, all four modes
+
+
+@pytest.mark.parametrize("mode,kw", [
+    ("greedy", {}),
+    ("speculative", dict(draft_len=4, n_drafts=6)),
+])
+def test_streaming_matches_batch_engine_greedy_family(toy, mode, kw):
+    ds, _, _ = toy
+    queries = [ds.pair(i)[0] for i in range(5)]
+    ref, stream = _engines(toy, mode=mode, n_slots=2, **kw)
+    a = ref.predict(queries)
+    b = stream.predict(queries)
+    assert [p.smiles[0] for p in a] == [p.smiles[0] for p in b]
+
+
+@pytest.mark.parametrize("mode,kw", [
+    ("beam", dict(n_beams=3)),
+    ("speculative_beam", dict(n_beams=3, draft_len=4, n_drafts=6)),
+])
+def test_streaming_matches_batch_engine_beam_family(toy, mode, kw):
+    ds, _, _ = toy
+    queries = [ds.pair(i)[0] for i in range(3)]
+    ref, stream = _engines(toy, mode=mode, n_slots=2, **kw)
+    for q in queries:
+        a = ref.predict_topn(q)
+        b = stream.predict_topn(q)
+        assert a.smiles == b.smiles
+        np.testing.assert_allclose(a.logprobs, b.logprobs, rtol=1e-5,
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 2. scheduler admission/eviction invariants
+
+
+def test_mid_stream_admission_is_isolated(toy):
+    """A request admitted into a recycled slot while strangers occupy the
+    other slots produces byte-identical tokens to running it alone."""
+    ds, _, _ = toy
+    queries = [ds.pair(i)[0] for i in range(6)]
+    probe = queries[-1]
+
+    _, alone = _engines(toy, mode="speculative", draft_len=4, n_drafts=6,
+                        n_slots=2)
+    alone_rid = alone.submit(probe)
+    alone_res = alone.serve()[alone_rid]
+
+    _, stream = _engines(toy, mode="speculative", draft_len=4, n_drafts=6,
+                         n_slots=2)
+    # five strangers first, probe arrives mid-stream (closed loop: arrival
+    # is a decode-step count), so it lands in an already-recycled slot
+    for q in queries[:-1]:
+        stream.submit(q)
+    probe_rid = stream.submit(probe, arrival=7.0)
+    res = stream.serve()
+    np.testing.assert_array_equal(res[probe_rid].tokens, alone_res.tokens)
+    assert res[probe_rid].n_calls <= alone_res.n_calls + 1
+    assert len(res) == 6
+
+
+def test_eviction_frees_slots_for_queue(toy):
+    """More requests than slots: every request completes, slots recycle."""
+    ds, _, _ = toy
+    queries = [ds.pair(i % 8)[0] for i in range(7)]
+    _, stream = _engines(toy, mode="greedy", n_slots=2)
+    rids = [stream.submit(q) for q in queries]
+    res = stream.serve()
+    assert sorted(res) == sorted(rids)
+    ref, _ = _engines(toy, mode="greedy", n_slots=2)
+    want = [p.smiles[0] for p in ref.predict(queries)]
+    got = [ds.tokenizer.decode(res[r].tokens[0]) for r in rids]
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# 3. batched beam == per-query B=1 beam
+
+
+def test_batched_beam_matches_single_query(toy):
+    ds, cfg, params = toy
+    tok = ds.tokenizer
+    B, n = 3, 4
+    rows = [tok.encode_padded(ds.pair(i)[0], 64, add_eos=True)
+            for i in range(B)]
+    src = jnp.asarray(np.stack(rows))
+    memory, src_mask = s2s.encode(params, cfg, src)
+    handle = seq2seq_handle(params, cfg, memory_mask=src_mask)
+    cache = s2s.init_cache(cfg, B, MAX_NEW + 2, memory=memory, params=params)
+    batched = batched_beam_search(handle, cache, tok.bos_id,
+                                  jnp.zeros((B,), jnp.int32), n_beams=n,
+                                  max_new=MAX_NEW, eos_id=tok.eos_id)
+    for b in range(B):
+        memory1, mask1 = s2s.encode(params, cfg, src[b:b + 1])
+        handle1 = seq2seq_handle(params, cfg, memory_mask=mask1)
+        cache1 = s2s.init_cache(cfg, 1, MAX_NEW + 2, memory=memory1,
+                                params=params)
+        single = beam_search(handle1, cache1, tok.bos_id, 0, n_beams=n,
+                             max_new=MAX_NEW, eos_id=tok.eos_id)
+        np.testing.assert_array_equal(np.asarray(batched.tokens[b]),
+                                      np.asarray(single.tokens))
+        np.testing.assert_allclose(np.asarray(batched.logprobs[b]),
+                                   np.asarray(single.logprobs),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_batched_sbs_matches_single_query(toy):
+    ds, cfg, params = toy
+    tok = ds.tokenizer
+    B, n, DL, N_d = 2, 3, 4, 5
+    rows = [tok.encode_padded(ds.pair(i)[0], 64, add_eos=True)
+            for i in range(B)]
+    src = jnp.asarray(np.stack(rows))
+    dd, mm = zip(*(extract_drafts(r, DL, N_d) for r in np.stack(rows)))
+    drafts, dmask = jnp.asarray(np.stack(dd)), jnp.asarray(np.stack(mm))
+    memory, src_mask = s2s.encode(params, cfg, src)
+    handle = seq2seq_handle(params, cfg, memory_mask=src_mask)
+    cache = s2s.init_cache(cfg, B, MAX_NEW + DL + 2, memory=memory,
+                           params=params)
+    batched = batched_speculative_beam_search(
+        handle, cache, tok.bos_id, jnp.zeros((B,), jnp.int32), drafts,
+        dmask, n_beams=n, max_new=MAX_NEW, eos_id=tok.eos_id)
+    for b in range(B):
+        memory1, mask1 = s2s.encode(params, cfg, src[b:b + 1])
+        handle1 = seq2seq_handle(params, cfg, memory_mask=mask1)
+        cache1 = s2s.init_cache(cfg, 1, MAX_NEW + DL + 2, memory=memory1,
+                                params=params)
+        single = speculative_beam_search(
+            handle1, cache1, tok.bos_id, 0, drafts[b], dmask[b], n_beams=n,
+            max_new=MAX_NEW, eos_id=tok.eos_id)
+        np.testing.assert_array_equal(np.asarray(batched.tokens[b]),
+                                      np.asarray(single.tokens))
+
+
+# ---------------------------------------------------------------------------
+# 4. drafting: vectorized batch == per-row reference, incl. dilations
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(1, 28))
+def test_batch_drafts_matches_reference(seed, dl, nd):
+    rng = np.random.default_rng(seed)
+    B, T = int(rng.integers(1, 6)), int(rng.integers(0, 40))
+    toks = rng.integers(0, 24, size=(B, T)).astype(np.int32)  # incl. pads
+    for dilations in ((1,), (1, 2), (2,), (1, 2, 3)):
+        got_d, got_m = batch_drafts(toks, dl, nd, dilations=dilations)
+        ds_, ms_ = zip(*(extract_drafts(r, dl, nd, dilations=dilations)
+                         for r in toks))
+        np.testing.assert_array_equal(got_d, np.stack(ds_))
+        np.testing.assert_array_equal(got_m, np.stack(ms_))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(4, 60), min_size=2, max_size=40),
+       st.integers(2, 6))
+def test_dilated_drafts_are_dilated_substrings(tokens, dl):
+    """Property (paper §3.1): every masked dilation-2 draft is an
+    every-other-token subsequence of the query."""
+    drafts, mask = batch_drafts(np.asarray([tokens], np.int32), dl, 64,
+                                dilations=(1, 2))
+    toks = [t for t in tokens if t != 0]
+    n1 = max(0, len(toks) - dl + 1) or (1 if toks else 0)  # stride-1 windows
+    strided = {",".join(map(str, toks[s::2][:dl]))
+               for s in range(len(toks))}
+    for i in range(64):
+        if not mask[0, i] or i < n1:
+            continue
+        w = [t for t in drafts[0, i] if t != 0]
+        assert ",".join(map(str, w)) in strided

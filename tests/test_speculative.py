@@ -17,7 +17,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic env: in-repo fallback (see pyproject [dev])
+    from repro.testing import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.configs.mt import tiny_config
