@@ -29,13 +29,16 @@ requests are unaffected — the invariant ``tests/test_session.py`` checks.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.handles import DecoderHandle
 from repro.core.tree_batch import gather_rows, sync_winner
+from repro.models.attention import TRASH_PAGE, PagedKVCache
 
 _NEG = -1e30
 
@@ -130,6 +133,233 @@ def release_slot(state: SessionState, slot) -> SessionState:
     """Evict a finished request; the slot's cache rows become garbage that
     the next ``reset_slot`` + cache prefill overwrite."""
     return state._replace(active=state.active.at[slot].set(False))
+
+
+def unmap_slot_pages(spec: SessionSpec, state: SessionState,
+                     slot) -> SessionState:
+    """Unmap a slot's block-table rows (paged caches; ``slot`` may be a
+    traced scalar). Once unmapped, ``PageAllocator.reclaim`` returns the
+    pages to the free list — an eviction or preemption frees the slot's
+    whole footprint at once. Stale writes by the now-inactive rows fall
+    through the -1 table entries into the trash page."""
+    sc = state.cache["self"]
+    rows = slot * spec.rows_per_slot + jnp.arange(spec.rows_per_slot)
+    cache = dict(state.cache)
+    cache["self"] = dataclasses.replace(
+        sc, block_tables=sc.block_tables.at[:, rows].set(-1))
+    return state._replace(cache=cache)
+
+
+# ---------------------------------------------------------------------------
+# paged-cache page allocation (host side)
+
+
+class PoolExhausted(RuntimeError):
+    """The page pool cannot satisfy a mapping request. The scheduler reacts
+    by deferring admission or preempting the youngest resident request —
+    exhaustion is a scheduling event, never a crash."""
+
+
+class PageAllocator:
+    """Host-side free-list allocator + block-table maintenance for a session
+    whose model cache uses a ``PagedKVCache`` self-attention cache.
+
+    The jitted session step never allocates: between steps the host
+
+      1. ``reclaim(state)`` — recomputes page reference counts from the
+         (tiny) block tables and returns every unreferenced page to the
+         free list.  Beam reorder / winner sync inside the step alias and
+         orphan pages freely; this pass is the single garbage collector.
+      2. ``prepare_step(state)`` — walks every live row's write window
+         ``[pos, pos + DL]`` and restores the invariant the step's writes
+         rely on: each window block is mapped to a page owned by exactly
+         one row.  Shared boundary pages (aliased by winner sync or beam
+         gather) are split copy-on-write — the partially committed boundary
+         block is copied, fully-stale blocks just get fresh empty pages.
+         Unmapped blocks (frontier growth, fresh admissions) are mapped
+         lazily, so a short request only ever holds the pages its tokens
+         actually occupy.
+
+    Page 0 is the reserved trash page (writes with no mapped target land
+    there, masked by stored position -1) and is never allocated. The pool
+    must at least cover one slot's worst case so the oldest resident request
+    can always run to completion — that bound makes deferral + preemption a
+    complete (deadlock-free) admission policy.
+    """
+
+    def __init__(self, spec: SessionSpec, *, n_pages: int, page_size: int):
+        self.spec = spec
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        # linear block space: the allocator does not model the sliding-window
+        # block ring of init_paged_kv_cache (callers must gate on
+        # cfg.sliding_window == 0, as StreamingEngine does)
+        self.n_blocks = -(-spec.cache_len // self.page_size)
+        need_one_slot = spec.rows_per_slot * self.n_blocks
+        if self.n_pages - 1 < need_one_slot:
+            raise ValueError(
+                f"n_pages={n_pages} cannot hold one slot's worst case "
+                f"({need_one_slot} pages of {page_size} tokens + trash page); "
+                f"no admission policy can make progress")
+        self._free: list[int] = list(range(self.n_pages - 1, TRASH_PAGE, -1))
+        self._used: set[int] = set()
+        self.peak_pages = 0
+
+    # ---------------------------------------------------------------- state
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._used)
+
+    def window_blocks(self, pos: int) -> range:
+        """Logical blocks the next step writes for a row at position ``pos``
+        (tokens land at pos .. pos + DL)."""
+        ps = self.page_size
+        lo = pos // ps
+        hi = min((pos + self.spec.draft_len) // ps, self.n_blocks - 1)
+        return range(lo, hi + 1)
+
+    @property
+    def admit_pages(self) -> int:
+        """Pages a fresh admission maps on its first step (window at pos 0),
+        plus one window of headroom so resident rows' copy-on-write splits
+        do not immediately preempt the newcomer. Clamped to one slot's worst
+        case so an empty pool can always admit (no admission deadlock)."""
+        per_row = len(self.window_blocks(0))
+        return self.spec.rows_per_slot * min(2 * per_row, self.n_blocks)
+
+    def _alloc(self) -> int:
+        if not self._free:
+            raise PoolExhausted(f"page pool exhausted "
+                                f"({self.used_pages}/{self.n_pages - 1} used)")
+        p = self._free.pop()
+        self._used.add(p)
+        self.peak_pages = max(self.peak_pages, len(self._used))
+        return p
+
+    # ------------------------------------------------------------- host ops
+    def _tables(self, state: SessionState):
+        sc = state.cache["self"]
+        if not isinstance(sc, PagedKVCache):
+            raise TypeError("PageAllocator requires a PagedKVCache 'self' "
+                            "cache (init_cache(..., paged=(n_pages, ps)))")
+        # layer copies of the table are identical by construction; read one
+        # (np.array: host copy — prepare_step mutates it as its worklist)
+        return sc, np.array(sc.block_tables[0])
+
+    def _scan(self, state: SessionState):
+        """ONE device readback feeding reclaim, admission accounting, and
+        the prepare walk: (cache, tables, pos, active, refcounts). As a side
+        effect, returns every unreferenced page to the free list (rows of
+        released slots must already be unmapped — ``unmap_slot_pages``)."""
+        sc, bt = self._tables(state)
+        pos = np.asarray(state.pos)
+        active = np.asarray(state.active)
+        rps = self.spec.rows_per_slot
+        rows = (np.flatnonzero(active)[:, None] * rps
+                + np.arange(rps)[None, :]).reshape(-1)
+        live = bt[rows]
+        refs = np.bincount(live[live >= 0].ravel(), minlength=self.n_pages)
+        for p in [p for p in self._used if refs[p] == 0]:
+            self._used.remove(p)
+            self._free.append(p)
+        return sc, bt, pos, active, refs
+
+    def reclaim(self, state: SessionState) -> None:
+        """Return every page unreferenced by a live row to the free list."""
+        self._scan(state)
+
+    def _unmapped_window_blocks(self, bt, pos, active) -> int:
+        """Live window blocks no page is mapped to yet — what the next
+        ``prepare_step`` must allocate before any new admission's share."""
+        K, N_d = self.spec.n_beams, self.spec.n_drafts
+        n = 0
+        for s in np.flatnonzero(active):
+            for k in range(K):
+                window = self.window_blocks(int(pos[s, k]))
+                for d in range(N_d):
+                    r = (s * K + k) * N_d + d
+                    n += sum(1 for j in window if bt[r, j] < 0)
+        return n
+
+    def can_admit(self, state: SessionState) -> bool:
+        """Gate an admission on free pages, net of the pages already-resident
+        rows still need mapped (a burst of admissions in one scheduler cycle
+        books its pages here — lazily-mapped slots are not double-counted as
+        free)."""
+        _, bt, pos, active, _ = self._scan(state)
+        pending = self._unmapped_window_blocks(bt, pos, active)
+        return self.free_pages - pending >= self.admit_pages
+
+    def prepare_step(self, state: SessionState) -> SessionState:
+        """Reclaim orphans, then map/privatize every live row's write window
+        (lazy growth + copy-on-write at the draft boundary). Returns the
+        updated state; raises ``PoolExhausted`` (allocator self-heals via the
+        next ``reclaim``) when the pool cannot cover the windows."""
+        sc, bt, pos, active, refs = self._scan(state)
+        spec, ps = self.spec, self.page_size
+        K, N_d = spec.n_beams, spec.n_drafts
+
+        set_r: list[int] = []; set_j: list[int] = []; set_p: list[int] = []
+        fresh: list[int] = []                             # pos := -1
+        copy_src: list[int] = []; copy_dst: list[int] = []
+        for s in np.flatnonzero(active):
+            for k in range(K):
+                p_row = int(pos[s, k])
+                window = self.window_blocks(p_row)
+                for d in range(N_d):
+                    r = (s * K + k) * N_d + d
+                    for j in window:
+                        cur = int(bt[r, j])
+                        if cur >= 0 and refs[cur] == 1:
+                            continue                      # already private
+                        new = self._alloc()
+                        if cur >= 0:
+                            refs[cur] -= 1
+                        refs[new] = 1
+                        if cur >= 0 and j == window[0] and p_row % ps:
+                            # boundary block holds committed tokens: copy the
+                            # whole page — entries >= pos are stale draft
+                            # slots the next write pass overwrites pre-read
+                            copy_src.append(cur)
+                            copy_dst.append(new)
+                        else:
+                            fresh.append(new)
+                        bt[r, j] = new
+                        set_r.append(r); set_j.append(j); set_p.append(new)
+
+        if not (set_r or fresh or copy_dst):
+            return state
+        tables, pos_pool = sc.block_tables, sc.pos
+        k_pool, v_pool = sc.k_pool, sc.v_pool
+        if set_r:
+            tables = tables.at[:, np.asarray(set_r), np.asarray(set_j)].set(
+                np.asarray(set_p, np.int32))
+        if fresh:
+            pos_pool = pos_pool.at[:, np.asarray(fresh)].set(-1)
+        if copy_dst:
+            src = np.asarray(copy_src); dst = np.asarray(copy_dst)
+            k_pool = k_pool.at[:, dst].set(k_pool[:, src])
+            v_pool = v_pool.at[:, dst].set(v_pool[:, src])
+            pos_pool = pos_pool.at[:, dst].set(pos_pool[:, src])
+        cache = dict(state.cache)
+        cache["self"] = dataclasses.replace(
+            sc, block_tables=tables, pos=pos_pool, k_pool=k_pool,
+            v_pool=v_pool)
+        return state._replace(cache=cache)
+
+    # ------------------------------------------------------------ debugging
+    def check(self) -> None:
+        """Allocator invariants (exercised by the hypothesis tests)."""
+        free = self._free
+        assert len(set(free)) == len(free), "duplicate pages in free list"
+        assert not (set(free) & self._used), "page both free and allocated"
+        assert TRASH_PAGE not in self._used and TRASH_PAGE not in free
+        assert set(free) | self._used == set(range(1, self.n_pages)), \
+            "page leaked"
 
 
 def _accept_lengths(greedy_tok: jnp.ndarray, drafts: jnp.ndarray,

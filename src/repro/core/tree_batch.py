@@ -3,28 +3,53 @@
 Model caches store batch on axis 1 (axis 0 is the scan-repeat dim), so the
 draft expansion of the paper's "effective batch" (B -> B*N_d) and the
 post-verification winner sync are pytree maps over axis 1.
+
+``PagedKVCache`` nodes are special-cased: the page pool carries no batch
+axis, so batch-row ops touch only the per-row block tables. This turns the
+beam-search cache reorder (``gather_rows``) and the speculative winner sync
+(``sync_winner``) from full K/V copies into int32 table gathers — page
+contents are shared by aliasing, and the host allocator restores private
+ownership of write-window pages before the next step (copy-on-write at the
+draft boundary; see ``repro.core.session.PageAllocator``).
 """
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
+
+from repro.models.attention import PagedKVCache
+
+
+def _is_paged(x) -> bool:
+    return isinstance(x, PagedKVCache)
+
+
+def _paged_map(fn, cache):
+    """Apply ``fn`` to array leaves; for paged nodes apply it to the block
+    tables only (the pool has no batch axis to operate on)."""
+
+    def one(x):
+        if _is_paged(x):
+            return dataclasses.replace(x, block_tables=fn(x.block_tables))
+        return fn(x)
+
+    return jax.tree_util.tree_map(one, cache, is_leaf=_is_paged)
 
 
 def expand_batch(cache, n: int):
     """Tile batch axis 1: (R, B, ...) -> (R, B*n, ...) with row b repeated n×."""
-
-    def one(a):
-        rep = jnp.repeat(a, n, axis=1)
-        return rep
-
-    return jax.tree_util.tree_map(one, cache)
+    return _paged_map(lambda a: jnp.repeat(a, n, axis=1), cache)
 
 
 def sync_winner(cache, best_idx: jnp.ndarray, n: int):
     """After verification: broadcast the winning draft-row's cache to all n
     rows of each sequence. best_idx: (B,) winner draft index per sequence.
-    Leaves: (R, B*n, ...) viewed as (R, B, n, ...)."""
+    Leaves: (R, B*n, ...) viewed as (R, B, n, ...). Paged nodes alias the
+    winner's pages by copying its block table — O(n_blocks) int32 per row
+    instead of O(S * n_kv * head_dim) K/V."""
 
     def one(a):
         R, Bn = a.shape[:2]
@@ -34,23 +59,22 @@ def sync_winner(cache, best_idx: jnp.ndarray, n: int):
         win = jnp.take_along_axis(v, idx, axis=2)          # (R, B, 1, ...)
         return jnp.broadcast_to(win, v.shape).reshape(a.shape)
 
-    return jax.tree_util.tree_map(one, cache)
+    return _paged_map(one, cache)
 
 
 def gather_rows(cache, src_rows: jnp.ndarray):
     """Reorder batch rows: new_row[i] = old_row[src_rows[i]] (axis 1)."""
-
-    def one(a):
-        return jnp.take(a, src_rows.astype(jnp.int32), axis=1)
-
-    return jax.tree_util.tree_map(one, cache)
+    return _paged_map(
+        lambda a: jnp.take(a, src_rows.astype(jnp.int32), axis=1), cache)
 
 
 def set_rows(cache, rows: jnp.ndarray, values):
     """Scatter ``values`` into batch rows ``rows`` (axis 1): the continuous-
     batching admission path. ``rows`` may be traced — admitting into a freed
     slot never recompiles. ``values`` leaves are (R, 1 or len(rows), ...)
-    and broadcast across the written rows."""
+    and broadcast across the written rows. (Paged self-attn caches are not
+    admitted through this path — admission unmaps their table rows instead.)
+    """
     n = rows.shape[0]
 
     def one(a, b):

@@ -102,3 +102,103 @@ def decode_gqa_kernel(q_r, k_r, v_r, k_pos, q_pos, *, window: int = 0,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q_r, k_r, v_r, k_pos, q_pos)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: walk a block table instead of a contiguous row
+
+
+def _paged_decode_kernel(bt_ref, q_ref, k_ref, v_ref, kpos_ref, qpos_ref,
+                         o_ref, m_ref, l_ref, acc_ref, *, G: int, ps: int,
+                         n_blocks: int, window: int, scale: float):
+    """One (sequence b, kv-head g, logical block j) grid step. The block
+    table rides scalar prefetch: the K/V BlockSpecs DMA page
+    ``bt[b, j]`` of the *pool* directly — the kernel never materializes the
+    per-row gathered view the XLA path builds, so HBM traffic is one pool
+    page per grid step regardless of how rows alias pages."""
+    b, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (T*G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (ps, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    mapped = bt_ref[b, j] >= 0                            # unmapped -> page 0
+    kp = kpos_ref[0]                                      # (ps,)
+    qp = qpos_ref[0]                                      # (T,)
+    TG = q.shape[0]
+    qp_rows = jnp.broadcast_to(jnp.repeat(qp, G)[:, None], (TG, ps))
+    kp_b = jnp.broadcast_to(kp[None, :], (TG, ps))
+    mask = mapped & (kp_b >= 0) & (kp_b <= qp_rows)
+    if window > 0:
+        mask &= kp_b > qp_rows - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)  # fully-masked tiles contribute nothing
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        l = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_gqa_kernel(block_tables, q_r, k_pool, v_pool, pos_pool,
+                            q_pos, *, window: int = 0,
+                            interpret: bool = True):
+    """q_r: (B, Kv, T*G, hd); k/v_pool: (P, Kv, ps, hd); pos_pool: (P, ps);
+    block_tables: (B, n_blocks) int32 page ids (-1 unmapped); q_pos: (B, T).
+    Returns (B, Kv, T*G, hd). One KV tile = one page (bk == page_size)."""
+    B, Kv, TG, hd = q_r.shape
+    ps = k_pool.shape[2]
+    n_blocks = block_tables.shape[1]
+    T = q_pos.shape[1]
+    G = TG // T
+    kernel = functools.partial(_paged_decode_kernel, G=G, ps=ps,
+                               n_blocks=n_blocks, window=window,
+                               scale=1.0 / math.sqrt(hd))
+
+    def page(b, g, j, bt):   # data-dependent DMA: the block-table walk
+        return (jnp.maximum(bt[b, j], 0), g, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Kv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, TG, hd), lambda b, g, j, bt: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd), page),
+            pl.BlockSpec((1, 1, ps, hd), page),
+            pl.BlockSpec((1, ps),
+                         lambda b, g, j, bt: (jnp.maximum(bt[b, j], 0), 0)),
+            pl.BlockSpec((1, T), lambda b, g, j, bt: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, TG, hd),
+                               lambda b, g, j, bt: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((TG, 1), jnp.float32),
+            pltpu.VMEM((TG, 1), jnp.float32),
+            pltpu.VMEM((TG, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Kv, TG, hd), q_r.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, q_r, k_pool, v_pool, pos_pool, q_pos)

@@ -13,6 +13,24 @@ import jax
 import jax.numpy as jnp
 
 
+def paged_decode_gqa_ref(q, k_pool, v_pool, pos_pool, block_tables, q_pos,
+                         *, window: int = 0):
+    """Paged oracle: gather each row's mapped pages into the dense view,
+    then run the dense oracle (mirrors ``models.attention.paged_view``).
+
+    q: (B, T, H, hd); k/v_pool: (P, ps, Kv, hd); pos_pool: (P, ps);
+    block_tables: (B, n_blocks) int32 page ids, -1 unmapped. Returns
+    (B, T, H, hd)."""
+    B, nb = block_tables.shape
+    ps = k_pool.shape[1]
+    pages = jnp.where(block_tables >= 0, block_tables, 0)
+    k = k_pool[pages].reshape(B, nb * ps, *k_pool.shape[2:])
+    v = v_pool[pages].reshape(B, nb * ps, *v_pool.shape[2:])
+    kpos = jnp.where(block_tables[..., None] >= 0, pos_pool[pages], -1)
+    return decode_gqa_ref(q, k, v, kpos.reshape(B, nb * ps), q_pos,
+                          window=window)
+
+
 def decode_gqa_ref(q, k_cache, v_cache, k_pos, q_pos, *, window: int = 0):
     """q: (B, T, H, hd); k/v_cache: (B, S, Kv, hd); k_pos: (B, S);
     q_pos: (B, T). Returns (B, T, H, hd)."""

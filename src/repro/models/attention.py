@@ -13,12 +13,25 @@ plus a ``(B, S)`` int32 ``pos`` array holding the *absolute* position stored in
 each slot (-1 = empty). Writes go to ``slot = position % S``; masking is done
 on stored positions, which makes a ring buffer (sliding window, ``S = window``)
 and a linear cache (``S = max_len``) the same code path.
+
+Paged variant (serving): ``PagedKVCache`` replaces the per-row ``(B, S)``
+reservation with a global page pool ``(n_pages, page_size, n_kv, head_dim)``
+plus a per-row block table ``(B, n_blocks)`` of page ids (-1 = unmapped).
+Rows of one request share read-only committed pages (the host allocator in
+``repro.core.session.PageAllocator`` copy-on-writes the draft-boundary page),
+so HBM scales with *live tokens*, not ``n_rows * max_len``. Page 0 is a
+reserved trash page: writes whose target block is unmapped (or whose position
+is -1) land there with stored position -1, so they are never attended to.
+Masking semantics are identical to the dense cache — stored positions are the
+single source of truth — which is what makes paged and dense decoding
+token-identical (``tests/test_session.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -86,6 +99,106 @@ def _write_cache(cache: KVCache, k_new, v_new, positions) -> KVCache:
         v=cache.v.at[b_idx, slots].set(v_new.astype(cache.v.dtype)),
         pos=cache.pos.at[b_idx, slots].set(positions.astype(jnp.int32)),
     )
+
+
+# ---------------------------------------------------------------------------
+# paged cache
+
+
+TRASH_PAGE = 0  # reserved: writes with no mapped target land here, pos = -1
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Block-table KV cache: a global page pool shared by all batch rows.
+
+    ``block_tables[b, j]`` maps logical block ``j`` of row ``b`` to a page in
+    the pool (-1 = unmapped). Logical position ``p`` of row ``b`` lives at
+    ``(page=block_tables[b, (p // ps) % n_blocks], slot=p % ps)``. The pool
+    (and stored positions) carry no batch axis, so batch-row ops — beam
+    reorder, winner sync, slot recycling — touch ONLY the tiny block tables;
+    page contents are shared by aliasing. The host allocator keeps the
+    invariant that pages overlapping a row's write window ``[pos, pos+DL]``
+    are privately owned (copy-on-write at the draft boundary).
+    """
+
+    k_pool: jnp.ndarray        # (P, ps, n_kv, head_dim)
+    v_pool: jnp.ndarray        # (P, ps, n_kv, head_dim)
+    pos: jnp.ndarray           # (P, ps) int32, absolute position stored, -1 empty
+    block_tables: jnp.ndarray  # (B, n_blocks) int32 page id, -1 unmapped
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pool.shape[-3]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.block_tables.shape[-1]
+
+
+jax.tree_util.register_dataclass(
+    PagedKVCache, data_fields=["k_pool", "v_pool", "pos", "block_tables"],
+    meta_fields=[])
+
+
+def init_paged_kv_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                        n_pages: int, page_size: int, cross: bool = False,
+                        dtype=jnp.float32) -> PagedKVCache:
+    """Empty pool + unmapped tables. ``n_blocks`` covers the same logical
+    length the dense cache would reserve per row (ring over blocks when a
+    sliding window applies); page 0 is the reserved trash page."""
+    n_kv = cfg.n_heads if cross else cfg.n_kv_heads
+    size = max_len if (cfg.sliding_window == 0 or cross) else min(max_len, cfg.sliding_window)
+    n_blocks = -(-size // page_size)
+    if n_pages < 2:
+        raise ValueError("n_pages must be >= 2 (page 0 is the trash page)")
+    return PagedKVCache(
+        k_pool=jnp.zeros((n_pages, page_size, n_kv, cfg.head_dim), dtype),
+        v_pool=jnp.zeros((n_pages, page_size, n_kv, cfg.head_dim), dtype),
+        pos=jnp.full((n_pages, page_size), -1, jnp.int32),
+        block_tables=jnp.full((batch, n_blocks), -1, jnp.int32),
+    )
+
+
+def _lookup_pages(cache: PagedKVCache, positions):
+    """positions (B, T) -> (page (B, T), slot (B, T), mapped (B, T))."""
+    ps, nb = cache.page_size, cache.n_blocks
+    blocks = (positions // ps) % nb
+    b_idx = jnp.arange(cache.block_tables.shape[0])[:, None]
+    page = cache.block_tables[b_idx, blocks]
+    mapped = (page >= 0) & (positions >= 0)
+    return jnp.where(mapped, page, TRASH_PAGE), positions % ps, mapped
+
+
+def _write_cache_paged(cache: PagedKVCache, k_new, v_new, positions
+                       ) -> PagedKVCache:
+    """Scatter new K/V through the block table; positions: (B, T). Invalid
+    targets (position -1 or unmapped block) go to the trash page with stored
+    position -1 — unreadable, exactly like the dense pad convention."""
+    page, slot, mapped = _lookup_pages(cache, positions)
+    store_pos = jnp.where(mapped, positions, -1).astype(jnp.int32)
+    return dataclasses.replace(
+        cache,
+        k_pool=cache.k_pool.at[page, slot].set(k_new.astype(cache.k_pool.dtype)),
+        v_pool=cache.v_pool.at[page, slot].set(v_new.astype(cache.v_pool.dtype)),
+        pos=cache.pos.at[page, slot].set(store_pos),
+    )
+
+
+def paged_view(cache: PagedKVCache):
+    """Materialize the dense per-row view (k, v, kpos) the attention math
+    expects: (B, n_blocks*ps, n_kv, hd) x2 + (B, n_blocks*ps) positions.
+    Unmapped blocks read the trash page but are masked to position -1. This
+    is the XLA reference read path; the Pallas kernel
+    (``repro.kernels.decode_gqa.paged_decode_gqa_attention``) walks the block
+    table instead and never materializes the gather."""
+    B, nb = cache.block_tables.shape
+    ps = cache.page_size
+    pages = jnp.where(cache.block_tables >= 0, cache.block_tables, TRASH_PAGE)
+    k = cache.k_pool[pages].reshape(B, nb * ps, *cache.k_pool.shape[2:])
+    v = cache.v_pool[pages].reshape(B, nb * ps, *cache.v_pool.shape[2:])
+    kpos = jnp.where(cache.block_tables[..., None] >= 0, cache.pos[pages], -1)
+    return k, v, kpos.reshape(B, nb * ps)
 
 
 # ---------------------------------------------------------------------------
@@ -301,14 +414,16 @@ def commit_verified_kv(cache: KVCache, k_new, v_new, take_idx, positions,
     )
 
 
-def cached_attention(p: dict, cfg: ModelConfig, x, cache: KVCache, positions,
-                     ) -> tuple[jnp.ndarray, KVCache]:
-    """Cached causal decode (and prefill-into-cache).
+def cached_attention(p: dict, cfg: ModelConfig, x, cache, positions,
+                     ) -> tuple[jnp.ndarray, Any]:
+    """Cached causal decode (and prefill-into-cache), dense or paged.
 
     x: (B, T, d) new tokens; positions: (B, T) absolute positions of those
     tokens (rows may differ — the speculative decoder relies on this).
     Pad-token convention: ``positions == -1`` marks invalid tokens; their K/V
     land in a throwaway slot with stored position -1, which every query masks.
+    ``cache`` is a ``KVCache`` or a ``PagedKVCache`` — masking semantics are
+    identical, so the two produce the same output for the same stored tokens.
     Returns output (B, T, d) and the updated cache.
     """
     B, T = x.shape[:2]
@@ -316,8 +431,13 @@ def cached_attention(p: dict, cfg: ModelConfig, x, cache: KVCache, positions,
     if cfg.pos == "rope":
         q = apply_rope(q, positions, cfg.rope_theta)
         k_new = apply_rope(k_new, positions, cfg.rope_theta)
-    cache = _write_cache(cache, k_new, v_new, positions)
+    if isinstance(cache, PagedKVCache):
+        cache = _write_cache_paged(cache, k_new, v_new, positions)
+        k, v, kpos = paged_view(cache)
+    else:
+        cache = _write_cache(cache, k_new, v_new, positions)
+        k, v, kpos = cache.k, cache.v, cache.pos
     out = _attend_maybe_chunked(
-        q, cache.k, cache.v, positions, cache.pos >= 0, cache.pos,
+        q, k, v, positions, kpos >= 0, kpos,
         causal=True, window=cfg.sliding_window, q_per_kv=cfg.q_per_kv)
     return dense(p["wo"], out.reshape(B, T, -1)), cache

@@ -143,7 +143,7 @@ def apply(params, cfg: ModelConfig, src, tgt_in, *, src_mask=None, lengths=None)
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, memory=None,
                params=None, dtype=jnp.float32, memory_len=None,
-               memory_mask=None) -> dict:
+               memory_mask=None, paged=None) -> dict:
     """Self-attn KV caches + precomputed cross K/V (if memory given).
 
     ``memory_len``: cross K/V width when ``memory`` is absent — the
@@ -153,11 +153,23 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, memory=None,
     the cache (leaf shape (1, batch, M), batch on axis 1 like every other
     leaf), so batch-row expansion/gather/scatter ops carry each row's mask
     along and ``decode_step`` needs no closed-over mask.
+    ``paged``: ``(n_pages, page_size)`` — allocate the self-attn cache as a
+    ``PagedKVCache`` (one pool per decoder layer) instead of dense rows; the
+    caller owns page mapping (``repro.core.session.PageAllocator``). The
+    cross K/V stays dense: it is fixed-size per request and written once at
+    admission.
     """
     R = cfg.n_layers
     stack = lambda t: jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a, (R,) + a.shape), t)
-    self_cache = stack(attn_mod.init_kv_cache(cfg, batch, max_len, dtype=dtype))
+    if paged is not None:
+        n_pages, page_size = paged
+        self_cache = stack(attn_mod.init_paged_kv_cache(
+            cfg, batch, max_len, n_pages=n_pages, page_size=page_size,
+            dtype=dtype))
+    else:
+        self_cache = stack(attn_mod.init_kv_cache(cfg, batch, max_len,
+                                                  dtype=dtype))
     if memory is not None and params is not None:
         mkv = jax.vmap(
             lambda p: attn_mod.memory_kv(p, cfg, memory)

@@ -41,13 +41,14 @@ from repro.core import (
     batch_drafts, beam_search, extract_drafts, greedy_decode, seq2seq_handle,
     speculative_beam_search, speculative_greedy_decode,
 )
-from repro.core.session import (SessionSpec, init_state, reset_slot,
-                                session_step)
+from repro.core.session import (PageAllocator, SessionSpec, init_state,
+                                release_slot, reset_slot, session_step,
+                                unmap_slot_pages)
 from repro.core.tree_batch import set_rows
 from repro.data.tokenizer import SmilesTokenizer
 from repro.models import attention as attn_mod
 from repro.models import seq2seq as s2s
-from repro.models.attention import KVCache
+from repro.models.attention import KVCache, PagedKVCache
 from repro.serving.scheduler import ContinuousScheduler, SlotResult
 
 
@@ -61,6 +62,13 @@ class EngineConfig:
     max_src: int = 128
     dilations: tuple[int, ...] = (1,)
     n_slots: int = 2                 # StreamingEngine decode slots
+    # paged KV cache (StreamingEngine): HBM scales with live tokens, not
+    # n_slots * worst case — admission is gated on free pages and n_slots
+    # may exceed what contiguous rows would fit in the same budget
+    paged: bool = False
+    page_size: int = 16              # tokens per page
+    n_pages: int | None = None       # pool size; None = worst case (no
+                                     # oversubscription, paged layout only)
 
 
 @dataclasses.dataclass
@@ -242,6 +250,8 @@ class StreamingEngine:
         # XLA updates the (dominant) cache buffers in place every step
         self._step_fn = jax.jit(self._step_impl, donate_argnums=(1,))
         self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(1,))
+        self._release_fn = jax.jit(self._release_impl)
+        self.allocator: PageAllocator | None = None
         self.scheduler = self._new_scheduler()
 
     # -- jitted session functions (compiled ONCE per engine, every request
@@ -263,25 +273,94 @@ class StreamingEngine:
         cache = dict(state.cache)
         cache["cross"] = set_rows(cache["cross"], rows, mkv)
         cache["mmask"] = cache["mmask"].at[:, rows].set(mask[0])
-        # recycled rows: pos=-1 marks every slot empty (attention masks on
-        # stored positions), so the evicted request's stale K/V is unreadable
+        # recycled rows: the evicted request's stale K/V must be unreadable.
+        # dense: pos=-1 marks every slot empty (attention masks on stored
+        # positions); paged: unmap the rows' block tables — the host
+        # allocator maps fresh pages before the first step
         sc = cache["self"]
-        cache["self"] = KVCache(k=sc.k, v=sc.v,
-                                pos=sc.pos.at[:, rows].set(-1))
+        if isinstance(sc, PagedKVCache):
+            cache["self"] = dataclasses.replace(
+                sc, block_tables=sc.block_tables.at[:, rows].set(-1))
+        else:
+            cache["self"] = KVCache(k=sc.k, v=sc.v,
+                                    pos=sc.pos.at[:, rows].set(-1))
         state = state._replace(cache=cache)
         return reset_slot(spec, state, slot, self.tok.bos_id, 0,
                           drafts, dmask)
 
+    def _release_impl(self, state, slot):
+        """Evict + (paged) unmap the slot's pages so the allocator's next
+        reclaim returns them. ``slot`` is traced — no recompilation."""
+        state = release_slot(state, slot)
+        if self.ecfg.paged:
+            state = unmap_slot_pages(self.spec, state, slot)
+        return state
+
+    def _paged_geometry(self) -> tuple[int, int]:
+        """(n_pages, page_size); default pool = worst case for all rows —
+        the paged *layout* with no oversubscription. Set ``n_pages`` lower
+        to oversubscribe HBM (admission then defers on pool pressure)."""
+        spec, ecfg = self.spec, self.ecfg
+        if self.cfg.sliding_window:
+            raise NotImplementedError(
+                "paged serving sessions require sliding_window == 0: "
+                "PageAllocator maps a linear block space and does not model "
+                "the window's block ring")
+        ps = ecfg.page_size
+        n_blocks = -(-spec.cache_len // ps)
+        n_pages = (ecfg.n_pages if ecfg.n_pages is not None
+                   else spec.n_rows * n_blocks + 1)
+        return n_pages, ps
+
     def _new_scheduler(self) -> ContinuousScheduler:
         spec, ecfg = self.spec, self.ecfg
+        paged = self._paged_geometry() if ecfg.paged else None
         cache = s2s.init_cache(
             self.cfg, spec.n_rows, spec.cache_len, memory_len=ecfg.max_src,
-            memory_mask=np.zeros((spec.n_rows, ecfg.max_src), bool))
+            memory_mask=np.zeros((spec.n_rows, ecfg.max_src), bool),
+            paged=paged)
         step = lambda state: self._step_fn(self.params, state)
         admit = lambda state, slot, payload: self._admit_fn(
             self.params, state, jnp.int32(slot), *payload)
+        release = lambda state, slot: self._release_fn(state, jnp.int32(slot))
+        hooks: dict = {"release": release}
+        if ecfg.paged:
+            self.allocator = PageAllocator(spec, n_pages=paged[0],
+                                           page_size=paged[1])
+            hooks.update(admit_ok=self.allocator.can_admit,
+                         pre_step=self.allocator.prepare_step)
         return ContinuousScheduler(self.spec, init_state(spec, cache),
-                                   admit=admit, step=step)
+                                   admit=admit, step=step, **hooks)
+
+    def cache_footprint(self) -> dict:
+        """Self-attention cache HBM accounting for the serving benchmark.
+
+        ``capacity_bytes``: what the session reserves up front.
+        ``peak_bytes``: high-water mark actually touched (dense rows reserve
+        their worst case, so peak == capacity there; paged sessions report
+        the allocator's page high-water mark).
+        ``contiguous_equiv_slots``: how many slots a *contiguous-row* cache
+        could fit in the same capacity — the paged session serves
+        ``n_slots`` > this when oversubscribed (the acceptance criterion).
+        """
+        spec, cfg = self.spec, self.cfg
+        per_token = cfg.n_layers * 2 * cfg.n_kv_heads * cfg.head_dim * 4
+        row_bytes = spec.cache_len * per_token
+        if self.ecfg.paged:
+            n_pages, ps = self._paged_geometry()
+            page_bytes = ps * per_token
+            alloc = self.allocator
+            return {
+                "kind": "paged", "page_size": ps, "n_pages": n_pages,
+                "capacity_bytes": (n_pages - 1) * page_bytes,
+                "peak_bytes": (alloc.peak_pages if alloc else 0) * page_bytes,
+                "contiguous_equiv_slots":
+                    ((n_pages - 1) * page_bytes)
+                    // (spec.rows_per_slot * row_bytes),
+            }
+        cap = spec.n_rows * row_bytes
+        return {"kind": "dense", "capacity_bytes": cap, "peak_bytes": cap,
+                "contiguous_equiv_slots": spec.n_slots}
 
     # -- request plumbing ----------------------------------------------------
     def _payload(self, query: str):

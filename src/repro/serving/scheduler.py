@@ -21,6 +21,17 @@ The scheduler is model-agnostic: it drives two callables (``admit``,
 Because the session step is row-independent, a request's output is
 byte-identical whether it runs alone or is admitted mid-stream next to
 strangers — the invariant ``tests/test_session.py`` enforces.
+
+Memory-aware mode (paged KV cache): three optional hooks turn slot-count
+admission into page-count admission. ``admit_ok`` gates each admission on
+free *pages* (so ``n_slots`` may exceed what contiguous cache rows would
+fit in the same HBM), ``pre_step`` runs the host page-table maintenance
+(lazy growth + copy-on-write) before every step, and when the pool is
+truly exhausted mid-decode the scheduler *preempts* the youngest resident
+request — releasing its pages and requeuing it at the head of the queue
+for a deterministic from-scratch restart — rather than crashing. The
+oldest resident always fits (``PageAllocator`` validates the pool covers
+one slot's worst case), so the policy is deadlock-free.
 """
 
 from __future__ import annotations
@@ -32,7 +43,12 @@ from typing import Any, Callable
 
 import numpy as np
 
-from repro.core.session import SessionSpec, SessionState, release_slot
+from repro.core.session import (PoolExhausted, SessionSpec, SessionState,
+                                release_slot)
+
+# compact the consumed queue prefix once it grows past this many entries
+# (amortized O(1) head-pops without unbounded memory on long open-loop runs)
+_COMPACT_AT = 4096
 
 
 @dataclasses.dataclass
@@ -77,20 +93,40 @@ class ContinuousScheduler:
 
     admit(state, slot:int, payload) -> state     (jitted by the engine)
     step(state) -> state                          (jitted by the engine)
+
+    Optional memory-aware hooks (paged KV cache):
+    admit_ok(state) -> bool          gate admissions on free pages
+    pre_step(state) -> state         page-table maintenance; may raise
+                                     ``PoolExhausted`` -> preemption
+    release(state, slot) -> state    eviction (default: core release_slot;
+                                     paged engines also unmap the slot)
     """
 
     def __init__(self, spec: SessionSpec, state: SessionState, *,
-                 admit: Callable, step: Callable):
+                 admit: Callable, step: Callable,
+                 admit_ok: Callable | None = None,
+                 pre_step: Callable | None = None,
+                 release: Callable = release_slot):
         self.spec = spec
         self.state = state
         self._admit = admit
         self._step = step
-        self._queue: list[ScheduledRequest] = []   # sorted by arrival
+        self._admit_ok = admit_ok
+        self._pre_step = pre_step
+        self._release = release
+        # arrival-ordered queue consumed from a head cursor: submissions use
+        # bisect on the unconsumed suffix and head-pops are O(1), so an
+        # open-loop stream of thousands of queued requests stays linear
+        # (the old list.pop(0) walked the whole backlog every admission)
+        self._queue: list[ScheduledRequest] = []
+        self._head = 0
         self._resident: dict[int, ScheduledRequest] = {}   # slot -> request
         self._admit_time: dict[int, float] = {}
         self._free = list(range(spec.n_slots))
         self._next_rid = 0
         self.n_steps = 0
+        self.n_preemptions = 0
+        self.max_resident = 0
         self._skipped = 0.0   # closed-loop clock offset from idle jumps
 
     # ------------------------------------------------------------------ API
@@ -108,21 +144,67 @@ class ContinuousScheduler:
         bisect.insort(self._queue,
                       ScheduledRequest(rid=rid, payload=payload,
                                        arrival=arrival),
-                      key=lambda r: r.arrival)
+                      lo=self._head, key=lambda r: r.arrival)
         return rid
 
     @property
+    def queued(self) -> int:
+        return len(self._queue) - self._head
+
+    @property
     def pending(self) -> int:
-        return len(self._queue) + len(self._resident)
+        return self.queued + len(self._resident)
 
     # ------------------------------------------------------------ internals
+    def _peek(self) -> ScheduledRequest:
+        return self._queue[self._head]
+
+    def _pop_head(self) -> ScheduledRequest:
+        req = self._queue[self._head]
+        self._head += 1
+        if self._head >= _COMPACT_AT:
+            del self._queue[:self._head]
+            self._head = 0
+        return req
+
+    def _requeue_front(self, req: ScheduledRequest) -> None:
+        self._queue.insert(self._head, req)
+
     def _admit_ready(self, now: float) -> None:
-        while self._queue and self._free and self._queue[0].arrival <= now:
-            req = self._queue.pop(0)
+        while (self.queued and self._free and self._peek().arrival <= now
+               and (self._admit_ok is None or self._admit_ok(self.state))):
+            req = self._pop_head()
             slot = self._free.pop(0)
             self.state = self._admit(self.state, slot, req.payload)
             self._resident[slot] = req
             self._admit_time[slot] = now
+        self.max_resident = max(self.max_resident, len(self._resident))
+
+    def _preempt_youngest(self) -> None:
+        """Kick the most recently admitted request back to the queue head;
+        its pages are reclaimed and it restarts from scratch later (decoding
+        is deterministic, so its tokens are unchanged — only latency pays)."""
+        slot = max(self._resident, key=lambda s: (self._admit_time[s], s))
+        req = self._resident.pop(slot)
+        self._admit_time.pop(slot)
+        self.state = self._release(self.state, slot)
+        self._free.append(slot)
+        self._free.sort()
+        self._requeue_front(req)
+        self.n_preemptions += 1
+
+    def _prepare(self) -> None:
+        if self._pre_step is None:
+            return
+        while True:
+            try:
+                self.state = self._pre_step(self.state)
+                return
+            except PoolExhausted:
+                if len(self._resident) <= 1:
+                    raise  # pool below one request's worst case (validated
+                           # at allocator construction; unreachable there)
+                self._preempt_youngest()
 
     def _evict_finished(self, now: float, read_slot) -> list[SlotResult]:
         if not self._resident:
@@ -137,7 +219,7 @@ class ContinuousScheduler:
                 rid=req.rid, arrival=req.arrival,
                 admitted=self._admit_time.pop(slot), completed=now,
                 **fields))
-            self.state = release_slot(self.state, slot)
+            self.state = self._release(self.state, slot)
             self._free.append(slot)
         self._free.sort()
         return results
@@ -159,20 +241,21 @@ class ContinuousScheduler:
         clock = ((lambda: time.perf_counter() - t0) if realtime
                  else (lambda: float(self.n_steps - step0)
                        + (self._skipped - skip0)))
-        while self._queue or self._resident:
+        while self.queued or self._resident:
             now = clock()
-            if (not self._resident and self._queue and not realtime
-                    and self._queue[0].arrival > now):
+            if (not self._resident and self.queued and not realtime
+                    and self._peek().arrival > now):
                 # idle: fast-forward the clock to the next arrival (persisted
                 # in the offset so admitted/completed stamps stay monotone)
-                self._skipped += self._queue[0].arrival - now
+                self._skipped += self._peek().arrival - now
                 now = clock()
             self._admit_ready(now)
             if not self._resident:
-                if realtime and self._queue:
+                if realtime and self.queued:
                     # nothing can change until the head arrives: sleep it off
-                    time.sleep(max(0.0, self._queue[0].arrival - now))
+                    time.sleep(max(0.0, self._peek().arrival - now))
                 continue
+            self._prepare()
             self.state = self._step(self.state)
             self.n_steps += 1
             results.extend(self._evict_finished(clock(), read_slot))

@@ -157,6 +157,45 @@ def test_seq2seq_decode_matches_full():
                                    rtol=2e-4, atol=2e-4)
 
 
+def test_seq2seq_paged_decode_matches_dense():
+    """The same decode_step chunks through a paged self-attn cache (block
+    tables mapped by hand, private pages per row) produce logits identical
+    to the dense cache — the models-layer half of the paged/dense
+    token-identity contract (the session/engine half lives in
+    tests/test_session.py)."""
+    from repro.configs.mt import tiny_config
+    from repro.models.attention import PagedKVCache
+    cfg = tiny_config(48, depth=2, d_model=64)
+    key = jax.random.PRNGKey(5)
+    params = s2s.init(key, cfg)
+    B, S, T, ps = 2, 14, 10, 4
+    src = jax.random.randint(key, (B, S), 4, cfg.vocab_size)
+    tgt = jax.random.randint(jax.random.PRNGKey(6), (B, T), 4, cfg.vocab_size)
+    memory, src_mask = s2s.encode(params, cfg, src)
+
+    dense = s2s.init_cache(cfg, B, max_len=32, memory=memory, params=params)
+    n_blocks = 32 // ps
+    paged = s2s.init_cache(cfg, B, max_len=32, memory=memory, params=params,
+                           paged=(B * n_blocks + 1, ps))
+    sc = paged["self"]
+    assert isinstance(sc, PagedKVCache)
+    # map every block of every row to a distinct page up front
+    bt = jnp.arange(1, B * n_blocks + 1, dtype=jnp.int32).reshape(B, n_blocks)
+    paged["self"] = dataclasses.replace(
+        sc, block_tables=jnp.broadcast_to(bt, sc.block_tables.shape))
+
+    for start in range(0, T, 4):
+        chunk = tgt[:, start: start + 4]
+        Tc = chunk.shape[1]
+        positions = (jnp.arange(Tc) + start)[None, :].repeat(B, 0)
+        ld, dense = s2s.decode_step(params, cfg, dense, chunk, positions,
+                                    memory_mask=src_mask)
+        lp, paged = s2s.decode_step(params, cfg, paged, chunk, positions,
+                                    memory_mask=src_mask)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(ld),
+                                   rtol=2e-5, atol=2e-5)
+
+
 def test_sliding_window_variant_matches_full_within_window():
     """The beyond-paper sliding-window variant: ring-buffer cached decode
     equals full apply when the context fits the window."""

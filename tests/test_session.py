@@ -10,7 +10,11 @@ The contract that makes continuous batching safe to ship:
   3. batched beam search == the B=1 beam loop run per query (the lifted
      restriction changes nothing but wall-clock);
   4. vectorized draft extraction == the per-row reference, including
-     dilated windows (paper §3.1).
+     dilated windows (paper §3.1);
+  5. the paged KV cache is invisible: paged and dense sessions emit
+     token-identical outputs for all four modes, the page allocator never
+     double-allocates or leaks, and pool exhaustion defers admission (or
+     preempts) — it never crashes and never changes tokens.
 """
 
 import jax
@@ -24,7 +28,7 @@ except ImportError:  # hermetic env: in-repo fallback (see pyproject [dev])
     from repro.testing import given, settings, strategies as st
 
 from repro.configs.mt import tiny_config
-from repro.core import (batch_drafts, batched_beam_search,
+from repro.core import (SessionSpec, batch_drafts, batched_beam_search,
                         batched_speculative_beam_search, beam_search,
                         extract_drafts, seq2seq_handle,
                         speculative_beam_search)
@@ -129,6 +133,184 @@ def test_eviction_frees_slots_for_queue(toy):
     want = [p.smiles[0] for p in ref.predict(queries)]
     got = [ds.tokenizer.decode(res[r].tokens[0]) for r in rids]
     assert got == want
+
+
+# ---------------------------------------------------------------------------
+# 2b. paged KV cache: token identity + allocator invariants
+
+
+PAGED_MODES = [
+    ("greedy", {}),
+    ("speculative", dict(draft_len=4, n_drafts=6)),
+    ("beam", dict(n_beams=3)),
+    ("speculative_beam", dict(n_beams=3, draft_len=4, n_drafts=6)),
+]
+
+
+@pytest.mark.parametrize("mode,kw", PAGED_MODES)
+def test_paged_matches_dense_all_modes(toy, mode, kw):
+    """Acceptance criterion: the paged cache is a pure memory-layout change
+    — token-identical outputs (and beam log-probs) in all four modes."""
+    ds, _, _ = toy
+    queries = [ds.pair(i)[0] for i in range(4)]
+    _, dense = _engines(toy, mode=mode, n_slots=2, **kw)
+    _, paged = _engines(toy, mode=mode, n_slots=2, paged=True, page_size=8,
+                        **kw)
+    if mode in ("greedy", "speculative"):
+        a, b = dense.predict(queries), paged.predict(queries)
+        assert [p.smiles[0] for p in a] == [p.smiles[0] for p in b]
+    else:
+        for q in queries[:2]:
+            a, b = dense.predict_topn(q), paged.predict_topn(q)
+            assert a.smiles == b.smiles
+            np.testing.assert_allclose(a.logprobs, b.logprobs, rtol=1e-5,
+                                       atol=1e-5)
+    paged.allocator.check()
+    # short sequences must not have touched the worst case
+    fp = paged.cache_footprint()
+    assert fp["peak_bytes"] <= fp["capacity_bytes"]
+
+
+def test_paged_pool_exhaustion_defers_never_crashes(toy):
+    """Oversubscription: a pool holding ~1 slot's worst case serves a
+    4-slot session — admission defers on pool pressure (preempting when a
+    resident outgrows it) and every request still completes with tokens
+    identical to the dense session."""
+    ds, _, _ = toy
+    queries = [ds.pair(i % 8)[0] for i in range(8)]
+    kw = dict(mode="speculative", draft_len=4, n_drafts=6)
+    _, dense = _engines(toy, n_slots=4, **kw)
+    # worst case per slot = n_drafts * ceil(cache_len/ps) pages; give the
+    # pool barely more than one slot's worth
+    _, paged = _engines(toy, n_slots=4, paged=True, page_size=8,
+                        n_pages=1 + 6 * 4 + 4, **kw)
+    fp = paged.cache_footprint()
+    assert paged.spec.n_slots > fp["contiguous_equiv_slots"], \
+        "pool must be smaller than the contiguous-row layout would need"
+    a = dense.predict(queries)
+    b = paged.predict(queries)
+    assert [p.smiles[0] for p in a] == [p.smiles[0] for p in b]
+    paged.allocator.check()
+
+
+# ---- allocator property tests: driven with the session's own ops ----------
+
+
+def _paged_session(spec, page_size, n_pages):
+    """Synthetic paged session (no model): enough structure for the
+    allocator — (R=1)-stacked PagedKVCache + the SessionState fields."""
+    from repro.configs.mt import tiny_config
+    from repro.core.session import PageAllocator, init_state
+    from repro.models.attention import init_paged_kv_cache
+    cfg = tiny_config(32, depth=1, d_model=16)
+    pc = init_paged_kv_cache(cfg, spec.n_rows, spec.cache_len,
+                             n_pages=n_pages, page_size=page_size)
+    pc = jax.tree_util.tree_map(lambda a: a[None], pc)
+    state = init_state(spec, {"self": pc})
+    return PageAllocator(spec, n_pages=n_pages, page_size=page_size), state
+
+
+def _window_refs(alloc, state, spec):
+    """(live-row window pages, their refcounts across ALL rows)."""
+    bt = np.asarray(state.cache["self"].block_tables[0])
+    pos = np.asarray(state.pos)
+    active = np.asarray(state.active)
+    refs = np.bincount(bt[bt >= 0].ravel(), minlength=alloc.n_pages)
+    K, N_d = spec.n_beams, spec.n_drafts
+    out = []
+    for s in np.flatnonzero(active):
+        for k in range(K):
+            for d in range(N_d):
+                r = (s * K + k) * N_d + d
+                for j in alloc.window_blocks(int(pos[s, k])):
+                    out.append((int(bt[r, j]), int(refs[bt[r, j]])
+                                if bt[r, j] >= 0 else 0))
+    return out
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_page_allocator_invariants(seed):
+    """Against random admit/decode/sync/release traces: (a) no page is ever
+    double-allocated (every live write-window page is mapped and privately
+    owned), (b) pages never leak — releasing everything returns the whole
+    pool, (c) exhaustion surfaces as PoolExhausted, never corruption."""
+    from repro.core.session import (PoolExhausted, release_slot, reset_slot,
+                                    unmap_slot_pages)
+    from repro.core.tree_batch import gather_rows, sync_winner
+    rng = np.random.default_rng(seed)
+    K, N_d, DL = int(rng.integers(1, 3)), int(rng.integers(1, 4)), 3
+    spec = SessionSpec(n_slots=3, n_beams=K, n_drafts=N_d, draft_len=DL,
+                       max_new=12, eos_id=1, kind="beam" if K > 1 else "greedy")
+    ps = int(rng.choice([2, 4, 8]))
+    n_blocks = -(-spec.cache_len // ps)
+    n_pages = 1 + spec.rows_per_slot * n_blocks + int(rng.integers(0, 12))
+    alloc, state = _paged_session(spec, ps, n_pages)
+    resident: set[int] = set()
+    empty_drafts = jnp.zeros((N_d, DL), jnp.int32)
+    dmask = jnp.ones((N_d,), bool)
+
+    for _ in range(25):
+        op = rng.choice(["admit", "step", "release"])
+        if op == "admit" and len(resident) < spec.n_slots:
+            slot = int(rng.choice(list(set(range(spec.n_slots)) - resident)))
+            state = unmap_slot_pages(spec, state, jnp.int32(slot))
+            state = reset_slot(spec, state, jnp.int32(slot), 2, 0,
+                               empty_drafts, dmask)
+            resident.add(slot)
+        elif op == "step" and resident:
+            try:
+                state = alloc.prepare_step(state)
+            except PoolExhausted:
+                alloc.reclaim(state)
+                alloc.check()
+                continue
+            alloc.check()
+            # every live window page is mapped and owned by exactly one row
+            for page, nref in _window_refs(alloc, state, spec):
+                assert page >= 1, "write-window block left unmapped"
+                assert nref == 1, "write-window page shared between rows"
+            # emulate the step's cache movement: advance + alias tables the
+            # way winner-sync / beam-gather do
+            adv = rng.integers(0, DL + 2, size=(spec.n_slots, K))
+            pos = np.minimum(np.asarray(state.pos) + adv, spec.max_new)
+            state = state._replace(pos=jnp.asarray(pos, jnp.int32))
+            cache = state.cache
+            if N_d > 1:
+                best = jnp.asarray(rng.integers(0, N_d, spec.n_slots * K))
+                cache = sync_winner(cache, best, N_d)
+            if K > 1:
+                parent = rng.integers(0, K, (spec.n_slots, K))
+                base = (np.arange(spec.n_slots) * K)[:, None]
+                src = np.repeat((base + parent).reshape(-1), N_d) * N_d \
+                    + np.tile(np.arange(N_d), spec.n_slots * K)
+                cache = gather_rows(cache, jnp.asarray(src))
+            state = state._replace(cache=cache)
+        elif op == "release" and resident:
+            slot = int(rng.choice(list(resident)))
+            state = release_slot(state, jnp.int32(slot))
+            state = unmap_slot_pages(spec, state, jnp.int32(slot))
+            resident.discard(slot)
+            alloc.reclaim(state)
+            alloc.check()
+
+    # release everything: the allocator must get every page back
+    for slot in list(resident):
+        state = release_slot(state, jnp.int32(slot))
+        state = unmap_slot_pages(spec, state, jnp.int32(slot))
+    alloc.reclaim(state)
+    alloc.check()
+    assert alloc.free_pages == n_pages - 1, "pages leaked after full release"
+
+
+def test_page_allocator_rejects_impossible_pool():
+    """A pool that cannot hold even one slot's worst case is a config
+    error at construction time — not a runtime deadlock."""
+    from repro.core.session import PageAllocator
+    spec = SessionSpec(n_slots=2, n_beams=1, n_drafts=4, draft_len=4,
+                       max_new=16, eos_id=1)
+    with pytest.raises(ValueError):
+        PageAllocator(spec, n_pages=4, page_size=4)
 
 
 # ---------------------------------------------------------------------------
