@@ -1,0 +1,103 @@
+"""CI bench gate: diff a fresh ``BENCH_serving.json`` against the committed
+baseline and fail on a per-mode requests/sec collapse.
+
+The serving scheduler is the part of this repo a refactor can silently
+slow down (admission stalls, extra host syncs, accidental retraces), so CI
+reruns the throughput benchmark and compares per-mode ``rps`` — including
+every ``per_mode`` entry of the mixed-mode workload — against the baseline
+committed at the repo root. The gate is deliberately loose (default: fail
+only on a >30% drop) because CI runners are noisy; it exists to catch
+step-function regressions, not single-digit drift. Latency is reported for
+context but never gated (it is far noisier than throughput).
+
+Policy (see ROADMAP.md): any PR that legitimately shifts throughput
+regenerates the committed baseline with the same command CI runs, in the
+same PR. The gate also fails when a baseline mode disappears from the
+fresh run, or when the benchmark configs differ — a config drift would
+make the comparison meaningless.
+
+    python benchmarks/check_regression.py \
+        --baseline BENCH_serving.json --new BENCH_serving.new.json \
+        [--threshold 0.30]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _flat_rps(payload: dict) -> dict[str, float]:
+    """{gate key: req/s} — one entry per single-mode run, plus one per mode
+    inside the mixed workload ("mixed/<mode>")."""
+    out: dict[str, float] = {}
+    for mode, row in payload.get("modes", {}).items():
+        out[mode] = float(row["rps"])
+        for sub, pm in row.get("per_mode", {}).items():
+            out[f"{mode}/{sub}"] = float(pm["rps"])
+    return out
+
+
+def compare(baseline: dict, new: dict, threshold: float) -> list[str]:
+    """Return a list of human-readable gate failures (empty = pass)."""
+    failures: list[str] = []
+    cfg_b, cfg_n = baseline.get("config", {}), new.get("config", {})
+    drift = {k for k in set(cfg_b) | set(cfg_n) if cfg_b.get(k) != cfg_n.get(k)}
+    if drift:
+        failures.append(
+            f"benchmark configs differ on {sorted(drift)}: "
+            f"baseline={cfg_b} new={cfg_n} — rerun with the baseline's args "
+            f"or regenerate the committed baseline"
+        )
+        return failures
+    base_rps, new_rps = _flat_rps(baseline), _flat_rps(new)
+    for key, old in sorted(base_rps.items()):
+        if key not in new_rps:
+            failures.append(f"{key}: present in baseline but missing from new run")
+            continue
+        now = new_rps[key]
+        floor = (1.0 - threshold) * old
+        verdict = "FAIL" if now < floor else "ok"
+        print(
+            f"  {key:24s} baseline {old:8.2f} req/s   new {now:8.2f} req/s   "
+            f"floor {floor:8.2f}   {verdict}"
+        )
+        if now < floor:
+            failures.append(
+                f"{key}: {now:.2f} req/s is more than "
+                f"{threshold:.0%} below baseline {old:.2f} req/s"
+            )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_serving.json")
+    ap.add_argument("--new", dest="new_path", required=True)
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.30,
+        help="max tolerated fractional req/s drop per mode (default 0.30)",
+    )
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.new_path) as f:
+        new = json.load(f)
+
+    print(f"bench gate: {args.new_path} vs baseline {args.baseline}")
+    failures = compare(baseline, new, args.threshold)
+    if failures:
+        print("\nbench gate FAILED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

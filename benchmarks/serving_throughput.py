@@ -16,9 +16,16 @@ need for the same slot count — admission gates on free pages, short
 requests release their pages early, and the session sustains more
 resident slots than the equivalent contiguous HBM budget allows.
 
+``--modes mixed`` (in the default set) adds the in-flight mode-mixing
+workload: ONE session with per-mode slot groups (greedy + speculative +
+beam) sharing a cache serves a round-robin request mix, reporting overall
+and per-mode req/s + latency — and asserting zero recompilation after the
+per-group warmup.
+
 Results are printed AND written as machine-readable ``BENCH_serving.json``
 (req/s, p50/p95 latency, peak/capacity cache bytes, slots resident) so the
-perf trajectory is tracked across PRs.
+perf trajectory is tracked across PRs; ``benchmarks/check_regression.py``
+diffs a fresh run against the committed baseline in CI (the bench gate).
 
     PYTHONPATH=src python benchmarks/serving_throughput.py \
         [--requests 16] [--rate 2.0] [--slots 2] [--seed 0] \
@@ -40,7 +47,11 @@ from repro.core import SessionSpec
 from repro.serving import EngineConfig, StreamingEngine
 from repro.serving.engine import _mode_shape
 
-MODES = ("greedy", "speculative", "beam", "speculative_beam")
+MODES = ("greedy", "speculative", "beam", "speculative_beam", "mixed")
+# the mixed workload's slot groups: cheap greedy probes + speculative
+# forward predictions + beam retrosynthesis expansions in ONE session
+# (requests round-robin over the groups)
+MIXED_GROUPS = ("greedy", "speculative", "beam")
 
 
 def run_mode(mode: str, params, cfg, tok, queries, arrivals, args, *,
@@ -80,6 +91,59 @@ def run_mode(mode: str, params, cfg, tok, queries, arrivals, args, *,
     }
 
 
+def run_mixed(params, cfg, tok, queries, arrivals, args):
+    """In-flight mode mixing: one StreamingEngine session serves greedy,
+    speculative, and beam traffic concurrently through per-mode slot groups
+    sharing one cache. Reports overall AND per-mode req/s + latency (the
+    per-mode numbers are what the CI bench gate tracks)."""
+    groups = {"greedy": args.slots, "speculative": args.slots,
+              "beam": max(1, args.slots // 2)}
+    ecfg = EngineConfig(mode="speculative", mode_groups=groups,
+                        draft_len=args.draft_len, n_drafts=args.n_drafts,
+                        n_beams=args.n_beams, max_new=args.max_new,
+                        max_src=96)
+    eng = StreamingEngine(params, cfg, tok, ecfg)
+    modes = [MIXED_GROUPS[i % len(MIXED_GROUPS)]
+             for i in range(len(queries))]
+    # warmup: one trace per group step + admit, on a throwaway session
+    for m in MIXED_GROUPS:
+        eng.submit(queries[0], mode=m)
+    eng.serve()
+    eng.reset()
+    traces0 = dict(eng.n_traces)
+
+    for q, t, m in zip(queries, arrivals, modes):
+        eng.submit(q, arrival=float(t), mode=m)
+    results = list(eng.serve(realtime=True).values())
+    assert dict(eng.n_traces) == traces0, \
+        f"mixed traffic retraced after warmup: {traces0} -> {eng.n_traces}"
+
+    makespan = max(r.completed for r in results)
+    per_mode = {}
+    for m in MIXED_GROUPS:
+        rs = [r for r in results if r.mode == m]
+        lat = np.sort([r.latency for r in rs]) if rs else np.zeros(1)
+        per_mode[m] = {
+            "requests": len(rs),
+            "rps": len(rs) / makespan,
+            "p50": float(np.percentile(lat, 50)),
+            "p95": float(np.percentile(lat, 95)),
+        }
+    return {
+        "mode": "mixed",
+        "groups": {m: int(n) for m, n in groups.items()},
+        "rps": len(results) / makespan,
+        "p50": float(np.percentile([r.latency for r in results], 50)),
+        "p95": float(np.percentile([r.latency for r in results], 95)),
+        "steps": eng.scheduler.n_steps,
+        "n_slots": eng.n_slots,
+        "slots_resident": eng.scheduler.max_resident,
+        "preemptions": eng.scheduler.n_preemptions,
+        "per_mode": per_mode,
+        "cache": eng.cache_footprint(),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
@@ -115,6 +179,15 @@ def main() -> None:
           f"{'steps':>6s} {'accept':>7s}")
     rows = {}
     for mode in args.modes:
+        if mode == "mixed":
+            r = run_mixed(params, cfg, tok, queries, arrivals, args)
+            rows[mode] = r
+            print(f"{r['mode']:18s} {r['rps']:7.2f} {r['p50']:8.2f}s "
+                  f"{r['p95']:8.2f}s {r['steps']:6d} {'':>7s}")
+            for m, pm in r["per_mode"].items():
+                print(f"  mixed/{m:11s} {pm['rps']:7.2f} {pm['p50']:8.2f}s "
+                      f"{pm['p95']:8.2f}s {pm['requests']:5d}r")
+            continue
         r = run_mode(mode, params, cfg, tok, queries, arrivals, args)
         rows[mode] = r
         print(f"{r['mode']:18s} {r['rps']:7.2f} {r['p50']:8.2f}s "
@@ -129,11 +202,12 @@ def main() -> None:
         print(f"speculative beam vs beam throughput:  {speedup:.2f}x")
 
     paged_demo = None
-    if not args.no_paged_demo:
+    demo_modes = [m for m in args.modes if m != "mixed"]
+    if not args.no_paged_demo and demo_modes:
         # pool sized to ~1.5 slots' worst case, serving 2x the slot count:
         # the resident-slot high-water mark exceeds what contiguous rows
         # would fit in the same HBM (the paged cache's acceptance criterion)
-        mode = "speculative" if "speculative" in args.modes else args.modes[0]
+        mode = "speculative" if "speculative" in demo_modes else demo_modes[0]
         demo_slots = 2 * args.slots
         kind, K, N_d, DL = _mode_shape(EngineConfig(
             mode=mode, draft_len=args.draft_len, n_drafts=args.n_drafts,

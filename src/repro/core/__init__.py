@@ -12,10 +12,11 @@ generators by copying query substrings into the target (Andronov et al. 2024).
 
 from repro.core.drafting import batch_drafts, extract_drafts, prompt_lookup_drafts
 from repro.core.handles import DecoderHandle, seq2seq_handle, transformer_handle
-from repro.core.session import (PageAllocator, PoolExhausted, SessionSpec,
-                                SessionState, init_state, release_slot,
+from repro.core.session import (GroupedState, PageAllocator, PoolExhausted,
+                                SessionSpec, SessionState, grouped_init_state,
+                                grouped_step, init_state, release_slot,
                                 reset_slot, run_session, session_step,
-                                unmap_slot_pages)
+                                unmap_cache_rows, unmap_slot_pages)
 from repro.core.greedy import greedy_decode
 from repro.core.speculative import speculative_greedy_decode
 from repro.core.beam import batched_beam_search, beam_search
@@ -27,7 +28,8 @@ __all__ = [
     "DecoderHandle", "seq2seq_handle", "transformer_handle",
     "SessionSpec", "SessionState", "init_state", "reset_slot",
     "release_slot", "session_step", "run_session",
-    "PageAllocator", "PoolExhausted", "unmap_slot_pages",
+    "PageAllocator", "PoolExhausted", "unmap_slot_pages", "unmap_cache_rows",
+    "GroupedState", "grouped_init_state", "grouped_step",
     "greedy_decode", "speculative_greedy_decode",
     "beam_search", "batched_beam_search",
     "speculative_beam_search", "batched_speculative_beam_search",

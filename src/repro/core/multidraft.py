@@ -13,7 +13,6 @@ Attention-family architectures only (DESIGN.md §4).
 
 from __future__ import annotations
 
-from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

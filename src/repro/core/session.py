@@ -37,7 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.handles import DecoderHandle
-from repro.core.tree_batch import gather_rows, sync_winner
+from repro.core.tree_batch import (gather_rows, merge_rows, slice_rows,
+                                   sync_winner)
 from repro.models.attention import TRASH_PAGE, PagedKVCache
 
 _NEG = -1e30
@@ -135,19 +136,84 @@ def release_slot(state: SessionState, slot) -> SessionState:
     return state._replace(active=state.active.at[slot].set(False))
 
 
+def unmap_cache_rows(cache, rows):
+    """Unmap block-table ``rows`` of a paged model cache (``rows`` may be
+    traced). Stale writes by the now-inactive rows fall through the -1
+    table entries into the trash page."""
+    sc = cache["self"]
+    cache = dict(cache)
+    cache["self"] = dataclasses.replace(
+        sc, block_tables=sc.block_tables.at[:, rows].set(-1))
+    return cache
+
+
 def unmap_slot_pages(spec: SessionSpec, state: SessionState,
                      slot) -> SessionState:
     """Unmap a slot's block-table rows (paged caches; ``slot`` may be a
     traced scalar). Once unmapped, ``PageAllocator.reclaim`` returns the
     pages to the free list — an eviction or preemption frees the slot's
-    whole footprint at once. Stale writes by the now-inactive rows fall
-    through the -1 table entries into the trash page."""
-    sc = state.cache["self"]
+    whole footprint at once."""
     rows = slot * spec.rows_per_slot + jnp.arange(spec.rows_per_slot)
-    cache = dict(state.cache)
-    cache["self"] = dataclasses.replace(
-        sc, block_tables=sc.block_tables.at[:, rows].set(-1))
-    return state._replace(cache=cache)
+    return state._replace(cache=unmap_cache_rows(state.cache, rows))
+
+
+# ---------------------------------------------------------------------------
+# grouped sessions: per-mode slot groups sharing one cache and one step
+
+
+class GroupedState(NamedTuple):
+    """Session state partitioned into per-mode slot groups.
+
+    ``groups[g]`` is a plain ``SessionState`` for group ``g``'s slots with
+    ``cache=None`` — the model cache is held ONCE at the top level, covering
+    every group's rows, so all groups share one paged page pool (or one
+    dense row block) and one ``PageAllocator``. Group ``g`` owns the
+    contiguous cache rows ``[offset_g, offset_g + specs[g].n_rows)`` in
+    declaration order."""
+
+    groups: tuple            # per-group SessionState (cache=None)
+    cache: Any               # shared model cache over all groups' rows
+
+
+def group_row_offsets(specs) -> list[int]:
+    """Starting cache row of each group (+ total) in declaration order."""
+    offs = [0]
+    for spec in specs:
+        offs.append(offs[-1] + spec.n_rows)
+    return offs
+
+
+def grouped_init_state(specs, cache) -> GroupedState:
+    """All slots of all groups free. ``cache`` must have
+    ``group_row_offsets(specs)[-1]`` batch rows and length >= the largest
+    group's ``cache_len`` (groups with shorter draft windows simply never
+    touch the tail blocks)."""
+    return GroupedState(
+        groups=tuple(init_state(spec, None) for spec in specs),
+        cache=cache)
+
+
+def grouped_step(specs, handle: DecoderHandle,
+                 gstate: GroupedState) -> GroupedState:
+    """ONE decode iteration for every slot of every group.
+
+    Applies each group's pure ``session_step`` to its row slice of the
+    shared cache, threading the (paged) pool through sequentially and
+    merging each group's commits back. Group steps only write pages their
+    own rows own (the allocator's private-window invariant), so the merge
+    order is irrelevant to the result. Pure and shape-stable — jit it once
+    per group tuple; admitting a request of one mode never retraces the
+    other groups' math."""
+    cache = gstate.cache
+    out, lo = [], 0
+    for spec, gs in zip(specs, gstate.groups):
+        hi = lo + spec.n_rows
+        st = gs._replace(cache=slice_rows(cache, lo, hi))
+        st = session_step(spec, handle, st)
+        cache = merge_rows(cache, st.cache, lo, hi)
+        out.append(st._replace(cache=None))
+        lo = hi
+    return GroupedState(groups=tuple(out), cache=cache)
 
 
 # ---------------------------------------------------------------------------
@@ -157,7 +223,13 @@ def unmap_slot_pages(spec: SessionSpec, state: SessionState,
 class PoolExhausted(RuntimeError):
     """The page pool cannot satisfy a mapping request. The scheduler reacts
     by deferring admission or preempting the youngest resident request —
-    exhaustion is a scheduling event, never a crash."""
+    exhaustion is a scheduling event, never a crash. ``group`` names the
+    slot group whose row could not be mapped (None outside grouped
+    sessions) so the scheduler can prefer an in-group preemption victim."""
+
+    def __init__(self, msg: str, group=None):
+        super().__init__(msg)
+        self.group = group
 
 
 class PageAllocator:
@@ -187,15 +259,23 @@ class PageAllocator:
     complete (deadlock-free) admission policy.
     """
 
-    def __init__(self, spec: SessionSpec, *, n_pages: int, page_size: int):
-        self.spec = spec
+    def __init__(self, spec, *, n_pages: int, page_size: int):
+        # ``spec``: one SessionSpec, or an ordered {group_key: SessionSpec}
+        # mapping for a grouped session (declaration order == row order,
+        # matching GroupedState.groups)
+        self.groups: dict = ({None: spec} if isinstance(spec, SessionSpec)
+                             else dict(spec))
+        self.spec = next(iter(self.groups.values()))   # primary (legacy API)
         self.n_pages = int(n_pages)
         self.page_size = int(page_size)
         # linear block space: the allocator does not model the sliding-window
         # block ring of init_paged_kv_cache (callers must gate on
         # cfg.sliding_window == 0, as StreamingEngine does)
-        self.n_blocks = -(-spec.cache_len // self.page_size)
-        need_one_slot = spec.rows_per_slot * self.n_blocks
+        self._blocks = {k: -(-s.cache_len // self.page_size)
+                        for k, s in self.groups.items()}
+        self.n_blocks = max(self._blocks.values())
+        need_one_slot = max(s.rows_per_slot * self._blocks[k]
+                            for k, s in self.groups.items())
         if self.n_pages - 1 < need_one_slot:
             raise ValueError(
                 f"n_pages={n_pages} cannot hold one slot's worst case "
@@ -214,22 +294,32 @@ class PageAllocator:
     def used_pages(self) -> int:
         return len(self._used)
 
-    def window_blocks(self, pos: int) -> range:
-        """Logical blocks the next step writes for a row at position ``pos``
-        (tokens land at pos .. pos + DL)."""
+    def window_blocks(self, pos: int, group=None) -> range:
+        """Logical blocks the next step writes for a ``group`` row at
+        position ``pos`` (tokens land at pos .. pos + DL)."""
+        if group is None:
+            group = next(iter(self.groups))
         ps = self.page_size
         lo = pos // ps
-        hi = min((pos + self.spec.draft_len) // ps, self.n_blocks - 1)
+        hi = min((pos + self.groups[group].draft_len) // ps,
+                 self._blocks[group] - 1)
         return range(lo, hi + 1)
+
+    def admit_pages_for(self, group=None) -> int:
+        """Pages a fresh ``group`` admission maps on its first step (window
+        at pos 0), plus one window of headroom so resident rows'
+        copy-on-write splits do not immediately preempt the newcomer.
+        Clamped to one slot's worst case so an empty pool can always admit
+        (no admission deadlock)."""
+        if group is None:
+            group = next(iter(self.groups))
+        per_row = len(self.window_blocks(0, group))
+        return self.groups[group].rows_per_slot * min(
+            2 * per_row, self._blocks[group])
 
     @property
     def admit_pages(self) -> int:
-        """Pages a fresh admission maps on its first step (window at pos 0),
-        plus one window of headroom so resident rows' copy-on-write splits
-        do not immediately preempt the newcomer. Clamped to one slot's worst
-        case so an empty pool can always admit (no admission deadlock)."""
-        per_row = len(self.window_blocks(0))
-        return self.spec.rows_per_slot * min(2 * per_row, self.n_blocks)
+        return self.admit_pages_for()
 
     def _alloc(self) -> int:
         if not self._free:
@@ -250,86 +340,113 @@ class PageAllocator:
         # (np.array: host copy — prepare_step mutates it as its worklist)
         return sc, np.array(sc.block_tables[0])
 
-    def _scan(self, state: SessionState):
+    def _group_views(self, state):
+        """(group key, spec, row offset, pos (S,K), active (S,)) per group.
+        Accepts a plain ``SessionState`` (single group) or ``GroupedState``
+        (one view per group, in the shared declaration/row order)."""
+        if isinstance(state, GroupedState):
+            if len(state.groups) != len(self.groups):
+                raise ValueError(
+                    f"allocator has {len(self.groups)} group spec(s) but "
+                    f"the state has {len(state.groups)}")
+            lo = 0
+            for (key, spec), gs in zip(self.groups.items(), state.groups):
+                yield key, spec, lo, np.asarray(gs.pos), np.asarray(gs.active)
+                lo += spec.n_rows
+        else:
+            key = next(iter(self.groups))
+            yield (key, self.groups[key], 0, np.asarray(state.pos),
+                   np.asarray(state.active))
+
+    def _scan(self, state):
         """ONE device readback feeding reclaim, admission accounting, and
-        the prepare walk: (cache, tables, pos, active, refcounts). As a side
+        the prepare walk: (cache, tables, group views, refcounts). As a side
         effect, returns every unreferenced page to the free list (rows of
         released slots must already be unmapped — ``unmap_slot_pages``)."""
         sc, bt = self._tables(state)
-        pos = np.asarray(state.pos)
-        active = np.asarray(state.active)
-        rps = self.spec.rows_per_slot
-        rows = (np.flatnonzero(active)[:, None] * rps
-                + np.arange(rps)[None, :]).reshape(-1)
-        live = bt[rows]
+        views = list(self._group_views(state))
+        rows = [np.empty((0,), np.int64)]
+        for _, spec, lo, _, active in views:
+            rps = spec.rows_per_slot
+            rows.append((lo + np.flatnonzero(active)[:, None] * rps
+                         + np.arange(rps)[None, :]).reshape(-1))
+        live = bt[np.concatenate(rows)]
         refs = np.bincount(live[live >= 0].ravel(), minlength=self.n_pages)
         for p in [p for p in self._used if refs[p] == 0]:
             self._used.remove(p)
             self._free.append(p)
-        return sc, bt, pos, active, refs
+        return sc, bt, views, refs
 
-    def reclaim(self, state: SessionState) -> None:
+    def reclaim(self, state) -> None:
         """Return every page unreferenced by a live row to the free list."""
         self._scan(state)
 
-    def _unmapped_window_blocks(self, bt, pos, active) -> int:
+    def _unmapped_window_blocks(self, bt, views) -> int:
         """Live window blocks no page is mapped to yet — what the next
         ``prepare_step`` must allocate before any new admission's share."""
-        K, N_d = self.spec.n_beams, self.spec.n_drafts
         n = 0
-        for s in np.flatnonzero(active):
-            for k in range(K):
-                window = self.window_blocks(int(pos[s, k]))
-                for d in range(N_d):
-                    r = (s * K + k) * N_d + d
-                    n += sum(1 for j in window if bt[r, j] < 0)
+        for key, spec, lo, pos, active in views:
+            K, N_d = spec.n_beams, spec.n_drafts
+            for s in np.flatnonzero(active):
+                for k in range(K):
+                    window = self.window_blocks(int(pos[s, k]), key)
+                    for d in range(N_d):
+                        r = lo + (s * K + k) * N_d + d
+                        n += sum(1 for j in window if bt[r, j] < 0)
         return n
 
-    def can_admit(self, state: SessionState) -> bool:
-        """Gate an admission on free pages, net of the pages already-resident
-        rows still need mapped (a burst of admissions in one scheduler cycle
-        books its pages here — lazily-mapped slots are not double-counted as
-        free)."""
-        _, bt, pos, active, _ = self._scan(state)
-        pending = self._unmapped_window_blocks(bt, pos, active)
-        return self.free_pages - pending >= self.admit_pages
+    def can_admit(self, state, group=None) -> bool:
+        """Gate a ``group`` admission on free pages, net of the pages
+        already-resident rows still need mapped (a burst of admissions in
+        one scheduler cycle books its pages here — lazily-mapped slots are
+        not double-counted as free)."""
+        _, bt, views, _ = self._scan(state)
+        pending = self._unmapped_window_blocks(bt, views)
+        return self.free_pages - pending >= self.admit_pages_for(group)
 
-    def prepare_step(self, state: SessionState) -> SessionState:
+    def prepare_step(self, state):
         """Reclaim orphans, then map/privatize every live row's write window
         (lazy growth + copy-on-write at the draft boundary). Returns the
         updated state; raises ``PoolExhausted`` (allocator self-heals via the
         next ``reclaim``) when the pool cannot cover the windows."""
-        sc, bt, pos, active, refs = self._scan(state)
-        spec, ps = self.spec, self.page_size
-        K, N_d = spec.n_beams, spec.n_drafts
+        sc, bt, views, refs = self._scan(state)
+        ps = self.page_size
 
         set_r: list[int] = []; set_j: list[int] = []; set_p: list[int] = []
         fresh: list[int] = []                             # pos := -1
         copy_src: list[int] = []; copy_dst: list[int] = []
-        for s in np.flatnonzero(active):
-            for k in range(K):
-                p_row = int(pos[s, k])
-                window = self.window_blocks(p_row)
-                for d in range(N_d):
-                    r = (s * K + k) * N_d + d
-                    for j in window:
-                        cur = int(bt[r, j])
-                        if cur >= 0 and refs[cur] == 1:
-                            continue                      # already private
-                        new = self._alloc()
-                        if cur >= 0:
-                            refs[cur] -= 1
-                        refs[new] = 1
-                        if cur >= 0 and j == window[0] and p_row % ps:
-                            # boundary block holds committed tokens: copy the
-                            # whole page — entries >= pos are stale draft
-                            # slots the next write pass overwrites pre-read
-                            copy_src.append(cur)
-                            copy_dst.append(new)
-                        else:
-                            fresh.append(new)
-                        bt[r, j] = new
-                        set_r.append(r); set_j.append(j); set_p.append(new)
+        for key, spec, lo, pos, active in views:
+            K, N_d = spec.n_beams, spec.n_drafts
+            for s in np.flatnonzero(active):
+                for k in range(K):
+                    p_row = int(pos[s, k])
+                    window = self.window_blocks(p_row, key)
+                    for d in range(N_d):
+                        r = lo + (s * K + k) * N_d + d
+                        for j in window:
+                            cur = int(bt[r, j])
+                            if cur >= 0 and refs[cur] == 1:
+                                continue                  # already private
+                            try:
+                                new = self._alloc()
+                            except PoolExhausted as e:
+                                e.group = key  # in-group preemption hint
+                                raise
+                            if cur >= 0:
+                                refs[cur] -= 1
+                            refs[new] = 1
+                            if cur >= 0 and j == window[0] and p_row % ps:
+                                # boundary block holds committed tokens: copy
+                                # the whole page — entries >= pos are stale
+                                # draft slots the next write pass overwrites
+                                # pre-read
+                                copy_src.append(cur)
+                                copy_dst.append(new)
+                            else:
+                                fresh.append(new)
+                            bt[r, j] = new
+                            set_r.append(r); set_j.append(j)
+                            set_p.append(new)
 
         if not (set_r or fresh or copy_dst):
             return state

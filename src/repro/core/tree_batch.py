@@ -68,6 +68,32 @@ def gather_rows(cache, src_rows: jnp.ndarray):
         lambda a: jnp.take(a, src_rows.astype(jnp.int32), axis=1), cache)
 
 
+def slice_rows(cache, lo: int, hi: int):
+    """Static batch-row slice ``[lo, hi)`` on axis 1: the per-group view a
+    grouped session step operates on. Paged nodes slice only their block
+    tables — the page pool is shared by every group, so a group's step reads
+    and writes the one true pool through its own table rows."""
+    return _paged_map(lambda a: a[:, lo:hi], cache)
+
+
+def merge_rows(cache, part, lo: int, hi: int):
+    """Write a group's stepped sub-cache (``slice_rows(cache, lo, hi)``
+    after a session step) back into the full cache. Dense leaves scatter
+    their row slice; paged nodes scatter their block-table rows and adopt
+    the stepped pool wholesale — the step's pool writes land only on pages
+    owned by the group's rows (the allocator's private-window invariant),
+    so sequential per-group merges never clobber another group's pages."""
+
+    def one(full, sub):
+        if _is_paged(full):
+            return dataclasses.replace(
+                sub, block_tables=full.block_tables.at[:, lo:hi].set(
+                    sub.block_tables))
+        return full.at[:, lo:hi].set(sub)
+
+    return jax.tree_util.tree_map(one, cache, part, is_leaf=_is_paged)
+
+
 def set_rows(cache, rows: jnp.ndarray, values):
     """Scatter ``values`` into batch rows ``rows`` (axis 1): the continuous-
     batching admission path. ``rows`` may be traced — admitting into a freed

@@ -16,7 +16,6 @@ Input shapes (assigned):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

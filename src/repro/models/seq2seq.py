@@ -16,14 +16,13 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn_mod
-from repro.models.attention import KVCache, attention, cached_attention, cross_attention
+from repro.models.attention import attention, cached_attention, cross_attention
 from repro.models.layers import (
     apply_norm, dense, embed, embed_init, ffn, ffn_init, logits_init, norm_init,
     sinusoidal_positions,

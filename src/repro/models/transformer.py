@@ -37,7 +37,7 @@ from repro.models import attention as attn_mod
 from repro.models import mamba as mamba_mod
 from repro.models import moe as moe_mod
 from repro.models import rwkv as rwkv_mod
-from repro.models.attention import KVCache, attention, cached_attention, cross_attention
+from repro.models.attention import attention, cached_attention, cross_attention
 from repro.models.layers import (
     apply_norm, dense, embed, embed_init, ffn, ffn_init, logits_init, norm_init,
     sinusoidal_positions, unembed,

@@ -19,11 +19,23 @@ Every request waits for the slowest member of its batch.
 
 ``StreamingEngine`` — the production path: a ``DecodeSession`` with S
 fixed slots driven by ``repro.serving.scheduler.ContinuousScheduler``.
-ONE jitted step + ONE jitted admit serve every request forever (slot
-index is traced, so admissions into freed slots never recompile), beams
-are batched across slots (no B=1 restriction), and finished sequences
-leave immediately. Outputs are token-identical to ``ReactionEngine`` —
-``tests/test_session.py`` verifies all four modes.
+ONE jitted step + ONE jitted admit per slot group serve every request
+forever (slot index is traced, so admissions into freed slots never
+recompile), beams are batched across slots (no B=1 restriction), and
+finished sequences leave immediately. Outputs are token-identical to
+``ReactionEngine`` — ``tests/test_session.py`` verifies all four modes.
+
+In-flight mode mixing: ``EngineConfig.mode_groups`` partitions the slot
+axis into per-mode slot groups — e.g. greedy×4, speculative×4, beam×2 —
+that share one model cache (one paged page pool, one ``PageAllocator``)
+and one jitted step (``repro.core.session.grouped_step``). A production
+retrosynthesis planner can then issue cheap greedy forward-prediction
+probes and expensive beam expansions against the same session: requests
+are tagged with a mode at ``submit()`` and route to their group's slots,
+admitting one mode never retraces another group, and page-gated
+admission/preemption arbitrate the shared pool across all groups.
+``tests/test_mixed_mode.py`` verifies every request in a mixed session is
+token-identical to the corresponding single-mode engine run.
 """
 
 from __future__ import annotations
@@ -41,9 +53,9 @@ from repro.core import (
     batch_drafts, beam_search, extract_drafts, greedy_decode, seq2seq_handle,
     speculative_beam_search, speculative_greedy_decode,
 )
-from repro.core.session import (PageAllocator, SessionSpec, init_state,
-                                release_slot, reset_slot, session_step,
-                                unmap_slot_pages)
+from repro.core.session import (GroupedState, PageAllocator, SessionSpec,
+                                grouped_init_state, grouped_step,
+                                release_slot, reset_slot, unmap_cache_rows)
 from repro.core.tree_batch import set_rows
 from repro.data.tokenizer import SmilesTokenizer
 from repro.models import attention as attn_mod
@@ -62,6 +74,11 @@ class EngineConfig:
     max_src: int = 128
     dilations: tuple[int, ...] = (1,)
     n_slots: int = 2                 # StreamingEngine decode slots
+    # in-flight mode mixing (StreamingEngine): partition the slot axis into
+    # per-mode slot groups sharing one cache/pool/step, e.g.
+    # {"greedy": 4, "speculative": 4, "beam": 2}. None = one group of
+    # ``mode`` × ``n_slots`` (the classic single-mode session).
+    mode_groups: dict[str, int] | tuple | None = None
     # paged KV cache (StreamingEngine): HBM scales with live tokens, not
     # n_slots * worst case — admission is gated on free pages and n_slots
     # may exceed what contiguous rows would fit in the same budget
@@ -80,7 +97,8 @@ class Prediction:
     wall_s: float
 
 
-def _mode_shape(ecfg: EngineConfig) -> tuple[str, int, int, int]:
+def _mode_shape(ecfg: EngineConfig,
+                mode: str | None = None) -> tuple[str, int, int, int]:
     """mode -> (session kind, beams K, drafts N_d, draft length DL)."""
     return {
         "greedy": ("greedy", 1, 1, 0),
@@ -88,7 +106,7 @@ def _mode_shape(ecfg: EngineConfig) -> tuple[str, int, int, int]:
         "beam": ("beam", ecfg.n_beams, 1, 0),
         "speculative_beam": ("beam", ecfg.n_beams, ecfg.n_drafts,
                              ecfg.draft_len),
-    }[ecfg.mode]
+    }[ecfg.mode if mode is None else mode]
 
 
 class ReactionEngine:
@@ -233,7 +251,8 @@ class ReactionEngine:
 
 
 class StreamingEngine:
-    """Continuous-batching engine: S decode slots, one jitted step/admit."""
+    """Continuous-batching engine: S decode slots in per-mode slot groups,
+    one jitted step, one jitted admit/release per group."""
 
     def __init__(self, params, cfg: ModelConfig, tokenizer: SmilesTokenizer,
                  engine_cfg: EngineConfig | None = None):
@@ -241,96 +260,167 @@ class StreamingEngine:
         self.cfg = cfg
         self.tok = tokenizer
         self.ecfg = ecfg = engine_cfg or EngineConfig()
-        kind, K, N_d, DL = _mode_shape(ecfg)
-        self.spec = spec = SessionSpec(
-            n_slots=ecfg.n_slots, n_beams=K, n_drafts=N_d, draft_len=DL,
-            max_new=ecfg.max_new, eos_id=tokenizer.eos_id,
-            pad_id=tokenizer.pad_id, kind=kind)
+        group_slots = (dict(ecfg.mode_groups) if ecfg.mode_groups
+                       else {ecfg.mode: ecfg.n_slots})
+        self._groups: dict[str, SessionSpec] = {}
+        for mode, n_slots in group_slots.items():
+            kind, K, N_d, DL = _mode_shape(ecfg, mode)
+            self._groups[mode] = SessionSpec(
+                n_slots=int(n_slots), n_beams=K, n_drafts=N_d, draft_len=DL,
+                max_new=ecfg.max_new, eos_id=tokenizer.eos_id,
+                pad_id=tokenizer.pad_id, kind=kind)
+        self.mode_names = list(self._groups)
+        self.default_mode = (ecfg.mode if ecfg.mode in self._groups
+                             else self.mode_names[0])
+        self.spec = self._groups[self.default_mode]   # primary (legacy API)
+        # group g owns cache rows [row_lo[g], row_lo[g] + n_rows_g) and
+        # global scheduler slots [slot_base[g], slot_base[g] + n_slots_g)
+        self._row_lo, self._slot_base, self._slot_map = {}, {}, []
+        rows = slots = 0
+        for mode, spec in self._groups.items():
+            self._row_lo[mode], self._slot_base[mode] = rows, slots
+            self._slot_map += [(mode, i) for i in range(spec.n_slots)]
+            rows += spec.n_rows
+            slots += spec.n_slots
+        self.n_rows, self.n_slots = rows, slots
+        self.cache_len = max(s.cache_len for s in self._groups.values())
+        # trace counters (incremented at TRACE time only): after one warmup
+        # request per mode, mixed traffic must not grow any of these — the
+        # zero-recompilation acceptance criterion tests assert on it
+        self.n_traces = {"step": 0}
+        self.n_traces.update({("admit", m): 0 for m in self._groups})
         # donate the session state: the scheduler threads it linearly, so
         # XLA updates the (dominant) cache buffers in place every step
         self._step_fn = jax.jit(self._step_impl, donate_argnums=(1,))
-        self._admit_fn = jax.jit(self._admit_impl, donate_argnums=(1,))
-        self._release_fn = jax.jit(self._release_impl)
+        self._admit_fns = {m: self._make_admit(m) for m in self._groups}
+        self._release_fns = {m: self._make_release(m) for m in self._groups}
         self.allocator: PageAllocator | None = None
         self.scheduler = self._new_scheduler()
 
-    # -- jitted session functions (compiled ONCE per engine, every request
-    #    and every slot reuses them) ----------------------------------------
-    def _step_impl(self, params, state):
+    # -- jitted session functions (compiled ONCE per engine group, every
+    #    request and every slot of the group reuses them) -------------------
+    def _step_impl(self, params, gstate):
+        self.n_traces["step"] += 1
         handle = seq2seq_handle(params, self.cfg)   # mask rides in the cache
-        return session_step(self.spec, handle, state)
+        return grouped_step(tuple(self._groups.values()), handle, gstate)
 
-    def _admit_impl(self, params, state, slot, src, drafts, dmask):
-        """Prefill request -> slot: encode the query, scatter its cross-attn
-        K/V + memory mask into the slot's cache rows, reset the slot's
-        decode state. ``slot`` is traced — no recompilation per admission."""
-        spec = self.spec
-        memory, mask = s2s.encode(params, self.cfg, src[None])
-        mkv = jax.vmap(
-            lambda p: attn_mod.memory_kv(p, self.cfg, memory)
-        )(params["dec_blocks"]["cross_attn"])
-        rows = slot * spec.rows_per_slot + jnp.arange(spec.rows_per_slot)
-        cache = dict(state.cache)
-        cache["cross"] = set_rows(cache["cross"], rows, mkv)
-        cache["mmask"] = cache["mmask"].at[:, rows].set(mask[0])
-        # recycled rows: the evicted request's stale K/V must be unreadable.
-        # dense: pos=-1 marks every slot empty (attention masks on stored
-        # positions); paged: unmap the rows' block tables — the host
-        # allocator maps fresh pages before the first step
-        sc = cache["self"]
-        if isinstance(sc, PagedKVCache):
-            cache["self"] = dataclasses.replace(
-                sc, block_tables=sc.block_tables.at[:, rows].set(-1))
-        else:
-            cache["self"] = KVCache(k=sc.k, v=sc.v,
-                                    pos=sc.pos.at[:, rows].set(-1))
-        state = state._replace(cache=cache)
-        return reset_slot(spec, state, slot, self.tok.bos_id, 0,
-                          drafts, dmask)
+    def _make_admit(self, mode: str):
+        """Jitted prefill request -> slot of ``mode``'s group: encode the
+        query, scatter its cross-attn K/V + memory mask into the slot's
+        cache rows, reset the slot's decode state. ``slot`` is a traced
+        LOCAL slot index — no recompilation per admission, and admitting
+        into this group never retraces the other groups' math."""
+        spec = self._groups[mode]
+        gi = self.mode_names.index(mode)
+        lo = self._row_lo[mode]
 
-    def _release_impl(self, state, slot):
-        """Evict + (paged) unmap the slot's pages so the allocator's next
-        reclaim returns them. ``slot`` is traced — no recompilation."""
-        state = release_slot(state, slot)
-        if self.ecfg.paged:
-            state = unmap_slot_pages(self.spec, state, slot)
-        return state
+        def admit(params, gstate, slot, src, drafts, dmask):
+            self.n_traces["admit", mode] += 1
+            memory, mask = s2s.encode(params, self.cfg, src[None])
+            mkv = jax.vmap(
+                lambda p: attn_mod.memory_kv(p, self.cfg, memory)
+            )(params["dec_blocks"]["cross_attn"])
+            rows = (lo + slot * spec.rows_per_slot
+                    + jnp.arange(spec.rows_per_slot))
+            cache = dict(gstate.cache)
+            cache["cross"] = set_rows(cache["cross"], rows, mkv)
+            cache["mmask"] = cache["mmask"].at[:, rows].set(mask[0])
+            # recycled rows: the evicted request's stale K/V must be
+            # unreadable. dense: pos=-1 marks every slot empty (attention
+            # masks on stored positions); paged: unmap the rows' block
+            # tables — the host allocator maps fresh pages before the step
+            sc = cache["self"]
+            if isinstance(sc, PagedKVCache):
+                cache = unmap_cache_rows(cache, rows)
+            else:
+                cache["self"] = KVCache(k=sc.k, v=sc.v,
+                                        pos=sc.pos.at[:, rows].set(-1))
+            gs = reset_slot(spec, gstate.groups[gi], slot, self.tok.bos_id,
+                            0, drafts, dmask)
+            groups = gstate.groups[:gi] + (gs,) + gstate.groups[gi + 1:]
+            return GroupedState(groups=groups, cache=cache)
+
+        return jax.jit(admit, donate_argnums=(1,))
+
+    def _make_release(self, mode: str):
+        """Jitted evict + (paged) unmap of a LOCAL slot of ``mode``'s group
+        so the allocator's next reclaim returns its pages."""
+        spec = self._groups[mode]
+        gi = self.mode_names.index(mode)
+        lo = self._row_lo[mode]
+        paged = self.ecfg.paged
+
+        def release(gstate, slot):
+            gs = release_slot(gstate.groups[gi], slot)
+            groups = gstate.groups[:gi] + (gs,) + gstate.groups[gi + 1:]
+            cache = gstate.cache
+            if paged:
+                rows = (lo + slot * spec.rows_per_slot
+                        + jnp.arange(spec.rows_per_slot))
+                cache = unmap_cache_rows(cache, rows)
+            return GroupedState(groups=groups, cache=cache)
+
+        # donate like step/admit: eviction must not copy the whole cache
+        return jax.jit(release, donate_argnums=(0,))
+
+    def _slot_of(self, slot: int) -> tuple[str, int]:
+        """Global scheduler slot -> (mode, local slot in its group)."""
+        return self._slot_map[slot]
 
     def _paged_geometry(self) -> tuple[int, int]:
-        """(n_pages, page_size); default pool = worst case for all rows —
-        the paged *layout* with no oversubscription. Set ``n_pages`` lower
-        to oversubscribe HBM (admission then defers on pool pressure)."""
-        spec, ecfg = self.spec, self.ecfg
+        """(n_pages, page_size); default pool = worst case for all rows of
+        all groups — the paged *layout* with no oversubscription. Set
+        ``n_pages`` lower to oversubscribe HBM (admission then defers on
+        pool pressure)."""
+        ecfg = self.ecfg
         if self.cfg.sliding_window:
             raise NotImplementedError(
                 "paged serving sessions require sliding_window == 0: "
                 "PageAllocator maps a linear block space and does not model "
                 "the window's block ring")
         ps = ecfg.page_size
-        n_blocks = -(-spec.cache_len // ps)
-        n_pages = (ecfg.n_pages if ecfg.n_pages is not None
-                   else spec.n_rows * n_blocks + 1)
+        worst = sum(s.n_rows * (-(-s.cache_len // ps))
+                    for s in self._groups.values())
+        n_pages = ecfg.n_pages if ecfg.n_pages is not None else worst + 1
         return n_pages, ps
 
+    def _finished_mask(self, gstate) -> np.ndarray:
+        """(n_slots,) bool by global slot id (groups are slot-contiguous in
+        declaration order, matching ``_slot_base``)."""
+        return np.concatenate([np.asarray(gs.finished).all(axis=1)
+                               for gs in gstate.groups])
+
     def _new_scheduler(self) -> ContinuousScheduler:
-        spec, ecfg = self.spec, self.ecfg
+        ecfg = self.ecfg
         paged = self._paged_geometry() if ecfg.paged else None
         cache = s2s.init_cache(
-            self.cfg, spec.n_rows, spec.cache_len, memory_len=ecfg.max_src,
-            memory_mask=np.zeros((spec.n_rows, ecfg.max_src), bool),
+            self.cfg, self.n_rows, self.cache_len, memory_len=ecfg.max_src,
+            memory_mask=np.zeros((self.n_rows, ecfg.max_src), bool),
             paged=paged)
         step = lambda state: self._step_fn(self.params, state)
-        admit = lambda state, slot, payload: self._admit_fn(
-            self.params, state, jnp.int32(slot), *payload)
-        release = lambda state, slot: self._release_fn(state, jnp.int32(slot))
-        hooks: dict = {"release": release}
+
+        def admit(state, slot, payload):
+            mode, args = payload
+            local = slot - self._slot_base[mode]
+            return self._admit_fns[mode](self.params, state,
+                                         jnp.int32(local), *args)
+
+        def release(state, slot):
+            mode, local = self._slot_of(slot)
+            return self._release_fns[mode](state, jnp.int32(local))
+
+        groups = {mode: list(range(base, base + self._groups[mode].n_slots))
+                  for mode, base in self._slot_base.items()}
+        hooks: dict = {"release": release, "groups": groups,
+                       "finished": self._finished_mask}
         if ecfg.paged:
-            self.allocator = PageAllocator(spec, n_pages=paged[0],
+            self.allocator = PageAllocator(self._groups, n_pages=paged[0],
                                            page_size=paged[1])
             hooks.update(admit_ok=self.allocator.can_admit,
                          pre_step=self.allocator.prepare_step)
-        return ContinuousScheduler(self.spec, init_state(spec, cache),
-                                   admit=admit, step=step, **hooks)
+        state = grouped_init_state(tuple(self._groups.values()), cache)
+        return ContinuousScheduler(self.spec, state, admit=admit, step=step,
+                                   **hooks)
 
     def cache_footprint(self) -> dict:
         """Self-attention cache HBM accounting for the serving benchmark.
@@ -339,9 +429,10 @@ class StreamingEngine:
         ``peak_bytes``: high-water mark actually touched (dense rows reserve
         their worst case, so peak == capacity there; paged sessions report
         the allocator's page high-water mark).
-        ``contiguous_equiv_slots``: how many slots a *contiguous-row* cache
-        could fit in the same capacity — the paged session serves
-        ``n_slots`` > this when oversubscribed (the acceptance criterion).
+        ``contiguous_equiv_slots``: how many *primary-group* slots a
+        contiguous-row cache could fit in the same capacity — the paged
+        session serves ``n_slots`` > this when oversubscribed (the
+        acceptance criterion).
         """
         spec, cfg = self.spec, self.cfg
         per_token = cfg.n_layers * 2 * cfg.n_kv_heads * cfg.head_dim * 4
@@ -358,13 +449,13 @@ class StreamingEngine:
                     ((n_pages - 1) * page_bytes)
                     // (spec.rows_per_slot * row_bytes),
             }
-        cap = spec.n_rows * row_bytes
+        cap = self.n_rows * self.cache_len * per_token
         return {"kind": "dense", "capacity_bytes": cap, "peak_bytes": cap,
-                "contiguous_equiv_slots": spec.n_slots}
+                "contiguous_equiv_slots": self.n_slots}
 
     # -- request plumbing ----------------------------------------------------
-    def _payload(self, query: str):
-        spec, ecfg = self.spec, self.ecfg
+    def _payload(self, query: str, mode: str):
+        spec, ecfg = self._groups[mode], self.ecfg
         src = np.asarray(self.tok.encode_padded(query, ecfg.max_src,
                                                 add_eos=True), np.int32)
         if spec.draft_len > 0:
@@ -375,25 +466,30 @@ class StreamingEngine:
         else:
             drafts = np.zeros((spec.n_drafts, 0), np.int32)
             dmask = np.ones((spec.n_drafts,), bool)
-        return (jnp.asarray(src), jnp.asarray(drafts), jnp.asarray(dmask))
+        return (mode, (jnp.asarray(src), jnp.asarray(drafts),
+                       jnp.asarray(dmask)))
 
     def _read_slot(self, state, slot: int) -> dict:
-        order = (np.argsort(-np.asarray(state.logp[slot]), kind="stable")
-                 if self.spec.kind == "beam"
-                 else np.arange(self.spec.n_beams))
+        mode, local = self._slot_of(slot)
+        spec = self._groups[mode]
+        gs = state.groups[self.mode_names.index(mode)]
+        order = (np.argsort(-np.asarray(gs.logp[local]), kind="stable")
+                 if spec.kind == "beam"
+                 else np.arange(spec.n_beams))
         return dict(
-            tokens=np.asarray(state.tokens[slot])[order],
-            lengths=np.asarray(state.n_out[slot])[order],
-            logprobs=np.asarray(state.logp[slot])[order],
-            n_calls=int(state.n_calls[slot]),
-            accepted=int(state.accepted[slot]),
+            tokens=np.asarray(gs.tokens[local])[order],
+            lengths=np.asarray(gs.n_out[local])[order],
+            logprobs=np.asarray(gs.logp[local])[order],
+            n_calls=int(gs.n_calls[local]),
+            accepted=int(gs.accepted[local]),
         )
 
     def _prediction(self, r: SlotResult, wall_s: float) -> Prediction:
         smiles = [self.tok.decode(r.tokens[k])
                   for k in range(r.tokens.shape[0])]
+        kind = self._groups[r.mode].kind if r.mode in self._groups else "greedy"
         logprobs = ([float(x) for x in r.logprobs]
-                    if self.spec.kind == "beam" else [0.0] * len(smiles))
+                    if kind == "beam" else [0.0] * len(smiles))
         return Prediction(smiles=smiles, logprobs=logprobs,
                           n_calls=r.n_calls,
                           acceptance_rate=r.accepted / max(int(r.lengths[0]), 1),
@@ -405,10 +501,17 @@ class StreamingEngine:
         The jitted step/admit functions (and their compilations) survive."""
         self.scheduler = self._new_scheduler()
 
-    def submit(self, query: str, *, arrival: float = 0.0) -> int:
+    def submit(self, query: str, *, arrival: float = 0.0,
+               mode: str | None = None) -> int:
         """Enqueue a request; returns its id. ``arrival`` delays admission
-        (steps in closed-loop serve(), seconds in realtime serve())."""
-        return self.scheduler.submit(self._payload(query), arrival=arrival)
+        (steps in closed-loop serve(), seconds in realtime serve());
+        ``mode`` routes the request to that slot group (default: the
+        engine's primary mode)."""
+        mode = self.default_mode if mode is None else mode
+        if mode not in self._groups:
+            raise KeyError(f"engine serves {self.mode_names}, got {mode!r}")
+        return self.scheduler.submit(self._payload(query, mode),
+                                     arrival=arrival, mode=mode)
 
     def serve(self, *, realtime: bool = False) -> dict[int, SlotResult]:
         """Drain the queue with continuous batching; {rid: SlotResult}."""

@@ -22,13 +22,24 @@ Because the session step is row-independent, a request's output is
 byte-identical whether it runs alone or is admitted mid-stream next to
 strangers — the invariant ``tests/test_session.py`` enforces.
 
+In-flight mode mixing: the slot axis may be partitioned into named *slot
+groups* (``groups={mode: [slot ids]}``) so one session serves e.g. greedy
+probes and beam retrosynthesis expansions concurrently. Each group keeps
+its own free list and its own arrival-ordered queue — a request routes to
+its mode's slots (``submit(..., mode=...)``) and a full group never blocks
+another group's admissions — while page-gated admission and preemption
+operate over the one shared KV pool. Preemption prefers a victim inside
+the group that exhausted the pool (``PoolExhausted.group``) before
+falling back to the globally youngest resident, and a preempted request
+requeues at the head of *its own* group's queue with its mode tag intact.
+
 Memory-aware mode (paged KV cache): three optional hooks turn slot-count
 admission into page-count admission. ``admit_ok`` gates each admission on
 free *pages* (so ``n_slots`` may exceed what contiguous cache rows would
 fit in the same HBM), ``pre_step`` runs the host page-table maintenance
 (lazy growth + copy-on-write) before every step, and when the pool is
-truly exhausted mid-decode the scheduler *preempts* the youngest resident
-request — releasing its pages and requeuing it at the head of the queue
+truly exhausted mid-decode the scheduler *preempts* a youngest resident
+request — releasing its pages and requeuing it at the head of its queue
 for a deterministic from-scratch restart — rather than crashing. The
 oldest resident always fits (``PageAllocator`` validates the pool covers
 one slot's worst case), so the policy is deadlock-free.
@@ -39,12 +50,11 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Hashable
 
 import numpy as np
 
-from repro.core.session import (PoolExhausted, SessionSpec, SessionState,
-                                release_slot)
+from repro.core.session import PoolExhausted, SessionSpec, release_slot
 
 # compact the consumed queue prefix once it grows past this many entries
 # (amortized O(1) head-pops without unbounded memory on long open-loop runs)
@@ -54,11 +64,14 @@ _COMPACT_AT = 4096
 @dataclasses.dataclass
 class ScheduledRequest:
     """One queued decode request. ``payload`` is whatever the engine's
-    admit function consumes (source tokens, drafts, ...)."""
+    admit function consumes (source tokens, drafts, ...); ``mode`` is the
+    slot group the request routes to (queue routing AND requeue-after-
+    preemption both read it, so the tag survives a round trip)."""
 
     rid: int
     payload: Any
     arrival: float = 0.0   # run()-relative: steps (closed loop) | s (realtime)
+    mode: Hashable = None
 
 
 @dataclasses.dataclass
@@ -78,6 +91,7 @@ class SlotResult:
     arrival: float                # s (realtime) | steps (closed loop)
     admitted: float
     completed: float
+    mode: Hashable = None         # slot group the request was served by
 
     @property
     def latency(self) -> float:
@@ -88,25 +102,40 @@ class SlotResult:
         return self.admitted - self.arrival
 
 
+def _default_finished(state) -> np.ndarray:
+    """(n_slots,) bool per global slot for a plain single-group session."""
+    return np.asarray(state.finished).all(axis=1)
+
+
 class ContinuousScheduler:
     """S-slot continuous batching over engine-supplied session callables.
 
     admit(state, slot:int, payload) -> state     (jitted by the engine)
     step(state) -> state                          (jitted by the engine)
 
+    Optional mode mixing:
+    groups: {mode: [global slot ids]}    per-mode slot groups/free lists;
+                                         default one anonymous group over
+                                         ``spec.n_slots`` slots
+    finished(state) -> (n_slots,) bool   per-global-slot finished mask
+                                         (grouped engines supply one that
+                                         spans their group states)
+
     Optional memory-aware hooks (paged KV cache):
-    admit_ok(state) -> bool          gate admissions on free pages
+    admit_ok(state, mode) -> bool    gate admissions on free pages
     pre_step(state) -> state         page-table maintenance; may raise
                                      ``PoolExhausted`` -> preemption
     release(state, slot) -> state    eviction (default: core release_slot;
                                      paged engines also unmap the slot)
     """
 
-    def __init__(self, spec: SessionSpec, state: SessionState, *,
+    def __init__(self, spec: SessionSpec, state, *,
                  admit: Callable, step: Callable,
                  admit_ok: Callable | None = None,
                  pre_step: Callable | None = None,
-                 release: Callable = release_slot):
+                 release: Callable = release_slot,
+                 groups: dict[Hashable, list[int]] | None = None,
+                 finished: Callable | None = None):
         self.spec = spec
         self.state = state
         self._admit = admit
@@ -114,15 +143,23 @@ class ContinuousScheduler:
         self._admit_ok = admit_ok
         self._pre_step = pre_step
         self._release = release
-        # arrival-ordered queue consumed from a head cursor: submissions use
-        # bisect on the unconsumed suffix and head-pops are O(1), so an
-        # open-loop stream of thousands of queued requests stays linear
-        # (the old list.pop(0) walked the whole backlog every admission)
-        self._queue: list[ScheduledRequest] = []
-        self._head = 0
+        self._finished = finished or _default_finished
+        if groups is None:
+            groups = {None: list(range(spec.n_slots))}
+        # per-group free lists + arrival-ordered queues, each consumed from
+        # a head cursor: submissions use bisect on the unconsumed suffix and
+        # head-pops are O(1), so an open-loop stream of thousands of queued
+        # requests stays linear. A full group's backlog never blocks another
+        # group's admissions (per-mode head-of-line only).
+        self._slot_key = {s: k for k, slots in groups.items() for s in slots}
+        if len(self._slot_key) != sum(len(v) for v in groups.values()):
+            raise ValueError("slot groups must be disjoint")
+        self._free = {k: sorted(slots) for k, slots in groups.items()}
+        self._queues: dict[Hashable, list[ScheduledRequest]] = {
+            k: [] for k in groups}
+        self._heads: dict[Hashable, int] = {k: 0 for k in groups}
         self._resident: dict[int, ScheduledRequest] = {}   # slot -> request
         self._admit_time: dict[int, float] = {}
-        self._free = list(range(spec.n_slots))
         self._next_rid = 0
         self.n_steps = 0
         self.n_preemptions = 0
@@ -130,7 +167,13 @@ class ContinuousScheduler:
         self._skipped = 0.0   # closed-loop clock offset from idle jumps
 
     # ------------------------------------------------------------------ API
-    def submit(self, payload, *, arrival: float = 0.0, rid=None) -> int:
+    def submit(self, payload, *, arrival: float = 0.0, rid=None,
+               mode: Hashable = None) -> int:
+        if mode is None and len(self._queues) == 1:
+            mode = next(iter(self._queues))
+        if mode not in self._queues:
+            raise KeyError(f"unknown mode {mode!r}; "
+                           f"groups: {list(self._queues)}")
         if rid is None:
             rid = self._next_rid
         elif rid < self._next_rid:
@@ -139,59 +182,94 @@ class ContinuousScheduler:
             raise ValueError(f"rid {rid} may already be in use; "
                              f"pass rid >= {self._next_rid} or omit it")
         self._next_rid = max(self._next_rid, rid) + 1
-        # keep the queue arrival-ordered (stable for ties), so an
+        # keep each queue arrival-ordered (stable for ties), so an
         # already-arrived request never stalls behind a later arrival
-        bisect.insort(self._queue,
+        bisect.insort(self._queues[mode],
                       ScheduledRequest(rid=rid, payload=payload,
-                                       arrival=arrival),
-                      lo=self._head, key=lambda r: r.arrival)
+                                       arrival=arrival, mode=mode),
+                      lo=self._heads[mode], key=lambda r: r.arrival)
         return rid
 
     @property
     def queued(self) -> int:
-        return len(self._queue) - self._head
+        return sum(len(q) - self._heads[k] for k, q in self._queues.items())
 
     @property
     def pending(self) -> int:
         return self.queued + len(self._resident)
 
     # ------------------------------------------------------------ internals
-    def _peek(self) -> ScheduledRequest:
-        return self._queue[self._head]
+    def _heads_ready(self):
+        """Current head request of every non-empty group queue with a free
+        slot, earliest arrival first (group declaration order for ties)."""
+        out = []
+        for gi, (k, q) in enumerate(self._queues.items()):
+            if len(q) > self._heads[k] and self._free[k]:
+                out.append((q[self._heads[k]].arrival, gi, k))
+        out.sort()
+        return out
 
-    def _pop_head(self) -> ScheduledRequest:
-        req = self._queue[self._head]
-        self._head += 1
-        if self._head >= _COMPACT_AT:
-            del self._queue[:self._head]
-            self._head = 0
+    def _next_arrival(self) -> float | None:
+        arr = [q[self._heads[k]].arrival
+               for k, q in self._queues.items() if len(q) > self._heads[k]]
+        return min(arr) if arr else None
+
+    def _pop_head(self, mode) -> ScheduledRequest:
+        q = self._queues[mode]
+        req = q[self._heads[mode]]
+        self._heads[mode] += 1
+        if self._heads[mode] >= _COMPACT_AT:
+            del q[:self._heads[mode]]
+            self._heads[mode] = 0
         return req
 
     def _requeue_front(self, req: ScheduledRequest) -> None:
-        self._queue.insert(self._head, req)
+        """Requeue at the head of the request's OWN group queue — the mode
+        tag rides on the request, so a preempted beam expansion can never
+        restart in a greedy slot."""
+        self._queues[req.mode].insert(self._heads[req.mode], req)
 
     def _admit_ready(self, now: float) -> None:
-        while (self.queued and self._free and self._peek().arrival <= now
-               and (self._admit_ok is None or self._admit_ok(self.state))):
-            req = self._pop_head()
-            slot = self._free.pop(0)
-            self.state = self._admit(self.state, slot, req.payload)
-            self._resident[slot] = req
-            self._admit_time[slot] = now
+        admitted = True
+        while admitted:
+            admitted = False
+            for arrival, _, mode in self._heads_ready():
+                if arrival > now:
+                    continue
+                if (self._admit_ok is not None
+                        and not self._admit_ok(self.state, mode)):
+                    continue   # pool pressure: try the other groups' heads
+                req = self._pop_head(mode)
+                slot = self._free[mode].pop(0)
+                self.state = self._admit(self.state, slot, req.payload)
+                self._resident[slot] = req
+                self._admit_time[slot] = now
+                admitted = True   # state changed: recompute candidates
+                break
         self.max_resident = max(self.max_resident, len(self._resident))
 
-    def _preempt_youngest(self) -> None:
-        """Kick the most recently admitted request back to the queue head;
+    def _preempt_youngest(self, prefer: Hashable | None = None) -> None:
+        """Kick a most recently admitted request back to its queue head;
         its pages are reclaimed and it restarts from scratch later (decoding
-        is deterministic, so its tokens are unchanged — only latency pays)."""
-        slot = max(self._resident, key=lambda s: (self._admit_time[s], s))
+        is deterministic, so its tokens are unchanged — only latency pays).
+        ``prefer`` names the slot group that exhausted the pool: a victim is
+        taken from that group first so one mode's burst cannot evict another
+        mode's residents while it still has residents of its own."""
+        pool = [s for s in self._resident if self._slot_key[s] == prefer]
+        if not pool:
+            pool = list(self._resident)
+        slot = max(pool, key=lambda s: (self._admit_time[s], s))
         req = self._resident.pop(slot)
         self._admit_time.pop(slot)
         self.state = self._release(self.state, slot)
-        self._free.append(slot)
-        self._free.sort()
+        self._return_slot(slot)
         self._requeue_front(req)
         self.n_preemptions += 1
+
+    def _return_slot(self, slot: int) -> None:
+        free = self._free[self._slot_key[slot]]
+        free.append(slot)
+        free.sort()
 
     def _prepare(self) -> None:
         if self._pre_step is None:
@@ -200,28 +278,27 @@ class ContinuousScheduler:
             try:
                 self.state = self._pre_step(self.state)
                 return
-            except PoolExhausted:
+            except PoolExhausted as e:
                 if len(self._resident) <= 1:
                     raise  # pool below one request's worst case (validated
                            # at allocator construction; unreachable there)
-                self._preempt_youngest()
+                prefer = e.group if e.group in self._queues else None
+                self._preempt_youngest(prefer)
 
     def _evict_finished(self, now: float, read_slot) -> list[SlotResult]:
         if not self._resident:
             return []
-        finished = np.asarray(self.state.finished)
-        done, results = [s for s in self._resident
-                         if finished[s].all()], []
+        finished = self._finished(self.state)
+        done, results = [s for s in self._resident if finished[s]], []
         for slot in done:
             req = self._resident.pop(slot)
             fields = read_slot(self.state, slot)
             results.append(SlotResult(
-                rid=req.rid, arrival=req.arrival,
+                rid=req.rid, arrival=req.arrival, mode=req.mode,
                 admitted=self._admit_time.pop(slot), completed=now,
                 **fields))
             self.state = self._release(self.state, slot)
-            self._free.append(slot)
-        self._free.sort()
+            self._return_slot(slot)
         return results
 
     # ---------------------------------------------------------------- drive
@@ -243,17 +320,18 @@ class ContinuousScheduler:
                        + (self._skipped - skip0)))
         while self.queued or self._resident:
             now = clock()
-            if (not self._resident and self.queued and not realtime
-                    and self._peek().arrival > now):
+            nxt = self._next_arrival()
+            if (not self._resident and nxt is not None and not realtime
+                    and nxt > now):
                 # idle: fast-forward the clock to the next arrival (persisted
                 # in the offset so admitted/completed stamps stay monotone)
-                self._skipped += self._peek().arrival - now
+                self._skipped += nxt - now
                 now = clock()
             self._admit_ready(now)
             if not self._resident:
-                if realtime and self.queued:
+                if realtime and nxt is not None:
                     # nothing can change until the head arrives: sleep it off
-                    time.sleep(max(0.0, self._peek().arrival - now))
+                    time.sleep(max(0.0, nxt - now))
                 continue
             self._prepare()
             self.state = self._step(self.state)

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import functools
 import inspect
+import os
 import random
 import zlib
 from types import SimpleNamespace
@@ -58,7 +59,11 @@ def given(*strats: _Strategy):
         @functools.wraps(f)
         def wrapper(*args, **kwargs):
             n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
-            rng = random.Random(zlib.crc32(f.__qualname__.encode()))
+            # deterministic per test; HYPOTHESIS_SEED (pinned in CI, same
+            # env var the real-hypothesis conftest profile keys off) shifts
+            # the whole suite's example stream reproducibly
+            seed = int(os.environ.get("HYPOTHESIS_SEED", "0"))
+            rng = random.Random(zlib.crc32(f.__qualname__.encode()) ^ seed)
             for _ in range(n):
                 vals = tuple(s.example(rng) for s in strats)
                 try:

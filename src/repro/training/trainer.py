@@ -10,7 +10,7 @@ the same functions the multi-pod dry-run lowers.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Iterable
+from typing import Callable, Iterable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,64 @@
+"""Unit tests for the CI bench gate (benchmarks/check_regression.py):
+per-mode req/s floors incl. the mixed workload's per_mode entries, config
+drift detection, and missing-mode detection."""
+
+import importlib.util
+import pathlib
+
+_path = (pathlib.Path(__file__).resolve().parent.parent
+         / "benchmarks" / "check_regression.py")
+_spec = importlib.util.spec_from_file_location("check_regression", _path)
+check_regression = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_regression)
+compare = check_regression.compare
+
+
+def _payload(greedy=40.0, mixed=30.0, mixed_beam=10.0, cfg=None):
+    return {
+        "config": cfg or {"requests": 6, "max_new": 16, "seed": 0},
+        "modes": {
+            "greedy": {"rps": greedy, "p50": 0.1, "p95": 0.2},
+            "mixed": {
+                "rps": mixed,
+                "per_mode": {
+                    "greedy": {"rps": mixed, "p50": 0.1, "p95": 0.2},
+                    "beam": {"rps": mixed_beam, "p50": 0.3, "p95": 0.4},
+                },
+            },
+        },
+    }
+
+
+def test_identical_runs_pass():
+    assert compare(_payload(), _payload(), 0.30) == []
+
+
+def test_small_drift_tolerated():
+    # 20% drop everywhere stays under the 30% floor
+    got = compare(_payload(), _payload(greedy=32.0, mixed=24.0,
+                                       mixed_beam=8.0), 0.30)
+    assert got == []
+
+
+def test_per_mode_drop_fails_even_inside_mixed():
+    # the mixed aggregate holds up but its beam group collapsed: FAIL
+    got = compare(_payload(), _payload(mixed_beam=4.0), 0.30)
+    assert len(got) == 1 and "mixed/beam" in got[0]
+
+
+def test_single_mode_drop_fails():
+    got = compare(_payload(), _payload(greedy=20.0), 0.30)
+    assert len(got) == 1 and got[0].startswith("greedy")
+
+
+def test_missing_mode_fails():
+    new = _payload()
+    del new["modes"]["mixed"]
+    got = compare(_payload(), new, 0.30)
+    assert any("missing" in msg for msg in got)
+
+
+def test_config_drift_fails_loudly():
+    new = _payload(cfg={"requests": 12, "max_new": 16, "seed": 0})
+    got = compare(_payload(), new, 0.30)
+    assert len(got) == 1 and "configs differ" in got[0]

@@ -1,7 +1,6 @@
 """Data layer + drafting invariants (hypothesis property tests)."""
 
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st

@@ -3,7 +3,6 @@ single-device lower+compile of the step builders (the production-mesh
 equivalent runs in repro.launch.dryrun with 512 host devices)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import Mesh, PartitionSpec as P

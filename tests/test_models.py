@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, list_archs
+from repro.configs import get_config
 from repro.models import seq2seq as s2s
 from repro.models import transformer as tr
 

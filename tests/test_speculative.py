@@ -11,7 +11,6 @@ And SBS with DL=0 reduces exactly to standard beam search (the paper's
 "SBS, DL=0" control).
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
