@@ -39,8 +39,17 @@ def _flat_rps(payload: dict) -> dict[str, float]:
     return out
 
 
-def compare(baseline: dict, new: dict, threshold: float) -> list[str]:
-    """Return a list of human-readable gate failures (empty = pass)."""
+def compare(
+    baseline: dict, new: dict, threshold: float, require: list[str] | None = None
+) -> list[str]:
+    """Return a list of human-readable gate failures (empty = pass).
+
+    ``require``: gate keys (modes, or "mixed/<mode>" sub-modes) that must
+    be present in the NEW run even if the committed baseline predates them
+    — this is how CI pins the expected mode set, so a refactor that
+    silently drops a workload (e.g. the decoder-only modes) fails the gate
+    instead of shrinking its coverage.
+    """
     failures: list[str] = []
     cfg_b, cfg_n = baseline.get("config", {}), new.get("config", {})
     drift = {k for k in set(cfg_b) | set(cfg_n) if cfg_b.get(k) != cfg_n.get(k)}
@@ -52,6 +61,9 @@ def compare(baseline: dict, new: dict, threshold: float) -> list[str]:
         )
         return failures
     base_rps, new_rps = _flat_rps(baseline), _flat_rps(new)
+    for key in sorted(require or []):
+        if key not in new_rps:
+            failures.append(f"{key}: required mode missing from new run")
     for key, old in sorted(base_rps.items()):
         if key not in new_rps:
             failures.append(f"{key}: present in baseline but missing from new run")
@@ -81,6 +93,13 @@ def main() -> int:
         default=0.30,
         help="max tolerated fractional req/s drop per mode (default 0.30)",
     )
+    ap.add_argument(
+        "--require",
+        nargs="*",
+        default=[],
+        help="gate keys that must exist in the new run (e.g. decoder_greedy "
+        "mixed/beam) even if the baseline predates them",
+    )
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -89,7 +108,7 @@ def main() -> int:
         new = json.load(f)
 
     print(f"bench gate: {args.new_path} vs baseline {args.baseline}")
-    failures = compare(baseline, new, args.threshold)
+    failures = compare(baseline, new, args.threshold, require=args.require)
     if failures:
         print("\nbench gate FAILED:")
         for msg in failures:

@@ -10,17 +10,25 @@ step, so at equal slot count they clear the queue faster — the
 requests/sec column is the paper's Table 2/3 speedup restated as a
 serving metric.
 
-The run also exercises the paged KV cache: a second speculative pass uses
-a page pool deliberately smaller than the contiguous-row layout would
-need for the same slot count — admission gates on free pages, short
-requests release their pages early, and the session sustains more
-resident slots than the equivalent contiguous HBM budget allows.
+The run also exercises the paged KV cache with in-flight mode mixing: the
+oversubscription demo serves a MIXED session (greedy + speculative slot
+groups sharing one page pool) on a pool deliberately smaller than the
+contiguous-row layout would need for the same slot count — admission
+gates on free pages across both groups, short requests release their
+pages early, and the session sustains more slots than the equivalent
+contiguous HBM budget allows.
 
 ``--modes mixed`` (in the default set) adds the in-flight mode-mixing
 workload: ONE session with per-mode slot groups (greedy + speculative +
 beam) sharing a cache serves a round-robin request mix, reporting overall
 and per-mode req/s + latency — and asserting zero recompilation after the
 per-group warmup.
+
+``--modes decoder_greedy decoder_speculative`` (in the default set) runs
+the decoder-only backend: a reduced decoder-only LM served through the
+same StreamingEngine with prompt-lookup drafts and chunked ragged prefill
+(``repro.serving.backend.DecoderOnlyBackend``) — the bench gate tracks
+these modes like any other.
 
 Results are printed AND written as machine-readable ``BENCH_serving.json``
 (req/s, p50/p95 latency, peak/capacity cache bytes, slots resident) so the
@@ -47,21 +55,22 @@ from repro.core import SessionSpec
 from repro.serving import EngineConfig, StreamingEngine
 from repro.serving.engine import _mode_shape
 
-MODES = ("greedy", "speculative", "beam", "speculative_beam", "mixed")
+MODES = ("greedy", "speculative", "beam", "speculative_beam", "mixed",
+         "decoder_greedy", "decoder_speculative")
 # the mixed workload's slot groups: cheap greedy probes + speculative
 # forward predictions + beam retrosynthesis expansions in ONE session
 # (requests round-robin over the groups)
 MIXED_GROUPS = ("greedy", "speculative", "beam")
+# decoder-only workload: reduced arch served via DecoderOnlyBackend
+DECODER_ARCH = "smollm-135m"
+DECODER_EOS = 2
 
 
-def run_mode(mode: str, params, cfg, tok, queries, arrivals, args, *,
-             slots=None, paged=False, n_pages=None):
+def run_mode(mode: str, params, cfg, tok, queries, arrivals, args):
     ecfg = EngineConfig(mode=mode, draft_len=args.draft_len,
                         n_drafts=args.n_drafts, n_beams=args.n_beams,
                         max_new=args.max_new, max_src=96,
-                        n_slots=slots or args.slots,
-                        paged=paged, page_size=args.page_size,
-                        n_pages=n_pages)
+                        n_slots=args.slots)
     eng = StreamingEngine(params, cfg, tok, ecfg)
     # warmup: compile the step + admit once, on a throwaway session
     eng.submit(queries[0])
@@ -91,22 +100,26 @@ def run_mode(mode: str, params, cfg, tok, queries, arrivals, args, *,
     }
 
 
-def run_mixed(params, cfg, tok, queries, arrivals, args):
-    """In-flight mode mixing: one StreamingEngine session serves greedy,
-    speculative, and beam traffic concurrently through per-mode slot groups
-    sharing one cache. Reports overall AND per-mode req/s + latency (the
-    per-mode numbers are what the CI bench gate tracks)."""
-    groups = {"greedy": args.slots, "speculative": args.slots,
-              "beam": max(1, args.slots // 2)}
+def run_mixed(params, cfg, tok, queries, arrivals, args, *, groups=None,
+              label="mixed", paged=False, n_pages=None):
+    """In-flight mode mixing: one StreamingEngine session serves several
+    modes' traffic concurrently through per-mode slot groups sharing one
+    cache. Reports overall AND per-mode req/s + latency (the per-mode
+    numbers are what the CI bench gate tracks). The paged-oversubscription
+    demo reuses this harness with its own ``groups`` + an undersized
+    ``n_pages`` pool."""
+    groups = groups or {"greedy": args.slots, "speculative": args.slots,
+                        "beam": max(1, args.slots // 2)}
     ecfg = EngineConfig(mode="speculative", mode_groups=groups,
                         draft_len=args.draft_len, n_drafts=args.n_drafts,
                         n_beams=args.n_beams, max_new=args.max_new,
-                        max_src=96)
+                        max_src=96, paged=paged,
+                        page_size=args.page_size, n_pages=n_pages)
     eng = StreamingEngine(params, cfg, tok, ecfg)
-    modes = [MIXED_GROUPS[i % len(MIXED_GROUPS)]
-             for i in range(len(queries))]
+    names = list(groups)
+    modes = [names[i % len(names)] for i in range(len(queries))]
     # warmup: one trace per group step + admit, on a throwaway session
-    for m in MIXED_GROUPS:
+    for m in names:
         eng.submit(queries[0], mode=m)
     eng.serve()
     eng.reset()
@@ -117,10 +130,12 @@ def run_mixed(params, cfg, tok, queries, arrivals, args):
     results = list(eng.serve(realtime=True).values())
     assert dict(eng.n_traces) == traces0, \
         f"mixed traffic retraced after warmup: {traces0} -> {eng.n_traces}"
+    if paged:
+        eng.allocator.check()
 
     makespan = max(r.completed for r in results)
     per_mode = {}
-    for m in MIXED_GROUPS:
+    for m in names:
         rs = [r for r in results if r.mode == m]
         lat = np.sort([r.latency for r in rs]) if rs else np.zeros(1)
         per_mode[m] = {
@@ -130,7 +145,7 @@ def run_mixed(params, cfg, tok, queries, arrivals, args):
             "p95": float(np.percentile(lat, 95)),
         }
     return {
-        "mode": "mixed",
+        "mode": label,
         "groups": {m: int(n) for m, n in groups.items()},
         "rps": len(results) / makespan,
         "p50": float(np.percentile([r.latency for r in results], 50)),
@@ -140,6 +155,59 @@ def run_mixed(params, cfg, tok, queries, arrivals, args):
         "slots_resident": eng.scheduler.max_resident,
         "preemptions": eng.scheduler.n_preemptions,
         "per_mode": per_mode,
+        "cache": eng.cache_footprint(),
+    }
+
+
+def run_decoder_mode(mode: str, args):
+    """Decoder-only serving (DecoderOnlyBackend): ragged random-token
+    prompts admitted by chunked prefill, prompt-lookup drafts, same
+    Poisson open loop and reporting as the seq2seq modes."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as tr
+
+    cfg = get_config(DECODER_ARCH, reduced=True)
+    params = tr.init(jax.random.PRNGKey(0), cfg)
+    ecfg = EngineConfig(mode=mode.removeprefix("decoder_"),
+                        draft_len=args.draft_len, n_drafts=args.n_drafts,
+                        max_new=args.max_new, max_src=48,
+                        n_slots=args.slots, prefill_chunk=16,
+                        eos_id=DECODER_EOS)
+    eng = StreamingEngine(params, cfg, None, ecfg)
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(4, cfg.vocab_size,
+                            size=int(rng.integers(8, 48))).astype(np.int32)
+               for _ in range(args.requests)]
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    # warmup: compile step + admit/chunk/finish once, throwaway session
+    eng.submit(prompts[0])
+    eng.serve()
+    eng.reset()
+    traces0 = dict(eng.n_traces)
+
+    for p, t in zip(prompts, arrivals):
+        eng.submit(p, arrival=float(t))
+    results = list(eng.serve(realtime=True).values())
+    assert dict(eng.n_traces) == traces0, \
+        f"ragged decoder traffic retraced: {traces0} -> {eng.n_traces}"
+
+    lat = np.sort([r.latency for r in results])
+    makespan = max(r.completed for r in results)
+    acc = sum(r.accepted for r in results)
+    gen = sum(int(r.lengths[0]) for r in results)
+    return {
+        "mode": mode,
+        "arch": cfg.name,
+        "rps": len(results) / makespan,
+        "p50": float(np.percentile(lat, 50)),
+        "p95": float(np.percentile(lat, 95)),
+        "steps": eng.scheduler.n_steps,
+        "acceptance": acc / max(gen, 1),
+        "n_slots": ecfg.n_slots,
+        "slots_resident": eng.scheduler.max_resident,
+        "preemptions": eng.scheduler.n_preemptions,
         "cache": eng.cache_footprint(),
     }
 
@@ -188,7 +256,10 @@ def main() -> None:
                 print(f"  mixed/{m:11s} {pm['rps']:7.2f} {pm['p50']:8.2f}s "
                       f"{pm['p95']:8.2f}s {pm['requests']:5d}r")
             continue
-        r = run_mode(mode, params, cfg, tok, queries, arrivals, args)
+        if mode.startswith("decoder_"):
+            r = run_decoder_mode(mode, args)
+        else:
+            r = run_mode(mode, params, cfg, tok, queries, arrivals, args)
         rows[mode] = r
         print(f"{r['mode']:18s} {r['rps']:7.2f} {r['p50']:8.2f}s "
               f"{r['p95']:8.2f}s {r['steps']:6d} {r['acceptance']:7.2f}")
@@ -202,28 +273,32 @@ def main() -> None:
         print(f"speculative beam vs beam throughput:  {speedup:.2f}x")
 
     paged_demo = None
-    demo_modes = [m for m in args.modes if m != "mixed"]
-    if not args.no_paged_demo and demo_modes:
-        # pool sized to ~1.5 slots' worst case, serving 2x the slot count:
+    if not args.no_paged_demo:
+        # MIXED paged oversubscription: one session, greedy + speculative
+        # slot groups fighting over ONE page pool sized to ~1.5 primary
+        # slots' worst case while serving 2x the slot count per group —
         # the resident-slot high-water mark exceeds what contiguous rows
-        # would fit in the same HBM (the paged cache's acceptance criterion)
-        mode = "speculative" if "speculative" in demo_modes else demo_modes[0]
+        # would fit in the same HBM (the paged cache's acceptance
+        # criterion), now across mode groups
         demo_slots = 2 * args.slots
-        kind, K, N_d, DL = _mode_shape(EngineConfig(
-            mode=mode, draft_len=args.draft_len, n_drafts=args.n_drafts,
-            n_beams=args.n_beams))
+        groups = {"greedy": demo_slots, "speculative": demo_slots}
+        _, K, N_d, DL = _mode_shape(EngineConfig(
+            mode="speculative", draft_len=args.draft_len,
+            n_drafts=args.n_drafts, n_beams=args.n_beams))
         spec = SessionSpec(n_slots=demo_slots, n_beams=K, n_drafts=N_d,
                            draft_len=DL, max_new=args.max_new, eos_id=0,
-                           kind=kind)
+                           kind="greedy")
         blocks_per_slot = (spec.rows_per_slot
                            * (-(-spec.cache_len // args.page_size)))
         n_pages = 1 + blocks_per_slot + blocks_per_slot // 2
-        paged_demo = run_mode(mode, params, cfg, tok, queries, arrivals,
-                              args, slots=demo_slots, paged=True,
-                              n_pages=n_pages)
+        paged_demo = run_mixed(params, cfg, tok, queries, arrivals, args,
+                               groups=groups, label="mixed_paged",
+                               paged=True, n_pages=n_pages)
         fp = paged_demo["cache"]
-        print(f"\npaged demo ({mode}): {demo_slots} slots on a pool worth "
-              f"{fp['contiguous_equiv_slots']} contiguous slot(s) — "
+        n_slots = paged_demo["n_slots"]
+        print(f"\npaged demo (mixed greedy+speculative): {n_slots} "
+              f"slots on a pool worth {fp['contiguous_equiv_slots']} "
+              f"contiguous slot(s) — "
               f"{paged_demo['slots_resident']} resident at peak, "
               f"{paged_demo['preemptions']} preemption(s), "
               f"peak cache {fp['peak_bytes'] / 1024:.0f} KiB "

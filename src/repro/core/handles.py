@@ -8,6 +8,12 @@ A ``DecoderHandle`` closes over (params, cfg, memory…) and exposes:
 The speculative decoders are therefore identical for the Molecular
 Transformer (paper) and for all assigned decoder-only architectures —
 including recurrent families, whose commit performs real state rollback.
+
+The same two calls are also the serving engine's chunked-prefill
+primitive (``repro.serving.backend.DecoderOnlyBackend``): feeding a
+prompt chunk through ``decode_step`` at its absolute positions and
+committing ``n_valid`` checkpoints IS an architecture-agnostic prefill —
+attention caches fill in place, recurrent state threads chunk to chunk.
 """
 
 from __future__ import annotations

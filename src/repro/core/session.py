@@ -136,15 +136,29 @@ def release_slot(state: SessionState, slot) -> SessionState:
     return state._replace(active=state.active.at[slot].set(False))
 
 
+def paged_cache_entries(cache):
+    """Flatten ``cache`` treating ``PagedKVCache`` nodes as leaves:
+    (leaves, treedef, indices of the paged nodes). Works for any model
+    cache pytree — the seq2seq ``{"self": ..., "cross": ...}`` dict (one
+    paged node) and the decoder-only per-pattern-position tuple (one paged
+    node per "attn" position, all sharing one page-id space)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        cache, is_leaf=lambda x: isinstance(x, PagedKVCache))
+    idx = [i for i, leaf in enumerate(leaves)
+           if isinstance(leaf, PagedKVCache)]
+    return leaves, treedef, idx
+
+
 def unmap_cache_rows(cache, rows):
-    """Unmap block-table ``rows`` of a paged model cache (``rows`` may be
-    traced). Stale writes by the now-inactive rows fall through the -1
-    table entries into the trash page."""
-    sc = cache["self"]
-    cache = dict(cache)
-    cache["self"] = dataclasses.replace(
-        sc, block_tables=sc.block_tables.at[:, rows].set(-1))
-    return cache
+    """Unmap block-table ``rows`` of every paged node in a model cache
+    (``rows`` may be traced). Stale writes by the now-inactive rows fall
+    through the -1 table entries into the trash page."""
+    leaves, treedef, idx = paged_cache_entries(cache)
+    for i in idx:
+        sc = leaves[i]
+        leaves[i] = dataclasses.replace(
+            sc, block_tables=sc.block_tables.at[:, rows].set(-1))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def unmap_slot_pages(spec: SessionSpec, state: SessionState,
@@ -259,10 +273,19 @@ class PageAllocator:
     complete (deadlock-free) admission policy.
     """
 
-    def __init__(self, spec, *, n_pages: int, page_size: int):
+    def __init__(self, spec, *, n_pages: int, page_size: int,
+                 row_lens: dict | None = None,
+                 prefill_blocks: dict | None = None):
         # ``spec``: one SessionSpec, or an ordered {group_key: SessionSpec}
         # mapping for a grouped session (declaration order == row order,
         # matching GroupedState.groups)
+        # ``row_lens``: per-group logical row length when it exceeds
+        # spec.cache_len — decoder-only rows also hold the prompt
+        # (row_len = max_src + cache_len); default spec.cache_len.
+        # ``prefill_blocks``: per-group worst-case prompt blocks a chunked
+        # prefill maps into ONE row before the slot's siblings alias them
+        # (0 = monolithic admission writes no prompt into the paged cache,
+        # the seq2seq case).
         self.groups: dict = ({None: spec} if isinstance(spec, SessionSpec)
                              else dict(spec))
         self.spec = next(iter(self.groups.values()))   # primary (legacy API)
@@ -271,11 +294,29 @@ class PageAllocator:
         # linear block space: the allocator does not model the sliding-window
         # block ring of init_paged_kv_cache (callers must gate on
         # cfg.sliding_window == 0, as StreamingEngine does)
-        self._blocks = {k: -(-s.cache_len // self.page_size)
+        row_lens = row_lens or {}
+        self._blocks = {k: -(-int(row_lens.get(k, s.cache_len))
+                             // self.page_size)
                         for k, s in self.groups.items()}
+        self._prefill_blocks = {k: int((prefill_blocks or {}).get(k, 0))
+                                for k in self.groups}
         self.n_blocks = max(self._blocks.values())
-        need_one_slot = max(s.rows_per_slot * self._blocks[k]
-                            for k, s in self.groups.items())
+        # one slot's worst case: prompt pages are mapped once and shared by
+        # the slot's rows (only the draft-boundary page is ever
+        # copy-on-write-split per row), so a chunked-prefill group needs
+        # prefill_blocks + rows * (decode blocks + the split boundary). A
+        # single-row slot never shares (no copy-on-write transient), and
+        # monolithic groups write no prompt: both keep rows * blocks.
+        self._slot_worst = {}
+        for k, s in self.groups.items():
+            pb = self._prefill_blocks[k]
+            if pb and s.rows_per_slot > 1:
+                need = pb + s.rows_per_slot * (
+                    -(-s.cache_len // self.page_size) + 1)
+            else:
+                need = s.rows_per_slot * self._blocks[k]
+            self._slot_worst[k] = need
+        need_one_slot = max(self._slot_worst.values())
         if self.n_pages - 1 < need_one_slot:
             raise ValueError(
                 f"n_pages={n_pages} cannot hold one slot's worst case "
@@ -283,6 +324,10 @@ class PageAllocator:
                 f"no admission policy can make progress")
         self._free: list[int] = list(range(self.n_pages - 1, TRASH_PAGE, -1))
         self._used: set[int] = set()
+        # cache rows treated as live in every scan even while their slot is
+        # still inactive: a chunked prefill maps pages into a slot whose
+        # SessionState stays inactive until the prompt is fully written
+        self._pinned_rows: set[int] = set()
         self.peak_pages = 0
 
     # ---------------------------------------------------------------- state
@@ -309,13 +354,17 @@ class PageAllocator:
         """Pages a fresh ``group`` admission maps on its first step (window
         at pos 0), plus one window of headroom so resident rows'
         copy-on-write splits do not immediately preempt the newcomer.
-        Clamped to one slot's worst case so an empty pool can always admit
-        (no admission deadlock)."""
+        Chunked-prefill groups add their worst-case prompt blocks (mapped
+        into one row before decode starts). Clamped to one slot's worst
+        case — the bound the constructor validates the pool against — so
+        an empty pool can always admit (no admission deadlock)."""
         if group is None:
             group = next(iter(self.groups))
         per_row = len(self.window_blocks(0, group))
-        return self.groups[group].rows_per_slot * min(
-            2 * per_row, self._blocks[group])
+        want = self._prefill_blocks[group] + (
+            self.groups[group].rows_per_slot * min(
+                2 * per_row, self._blocks[group]))
+        return min(want, self._slot_worst[group])
 
     @property
     def admit_pages(self) -> int:
@@ -332,13 +381,42 @@ class PageAllocator:
 
     # ------------------------------------------------------------- host ops
     def _tables(self, state: SessionState):
-        sc = state.cache["self"]
-        if not isinstance(sc, PagedKVCache):
-            raise TypeError("PageAllocator requires a PagedKVCache 'self' "
-                            "cache (init_cache(..., paged=(n_pages, ps)))")
-        # layer copies of the table are identical by construction; read one
-        # (np.array: host copy — prepare_step mutates it as its worklist)
-        return sc, np.array(sc.block_tables[0])
+        """(paged leaves, treedef, paged indices, host table copy). Every
+        paged node of the cache carries an identical block table by
+        construction (layer copies along axis 0, one node per attention
+        pattern position sharing the page-id space); read one, update all.
+        The np.array is a host copy — prepare_step mutates it as its
+        worklist."""
+        leaves, treedef, idx = paged_cache_entries(state.cache)
+        if not idx:
+            raise TypeError("PageAllocator requires a PagedKVCache node in "
+                            "the model cache (init_cache(..., "
+                            "paged=(n_pages, ps)))")
+        return leaves, treedef, idx, np.array(leaves[idx[0]].block_tables[0])
+
+    def _rebuild(self, state, leaves, treedef, idx, *, tables=None,
+                 copy_src=None, copy_dst=None, fresh=None):
+        """Apply table/pos/page-copy updates to EVERY paged node and return
+        the state with the rebuilt cache. ``tables`` is a callable applied
+        per node (nodes share page ids but own distinct pools)."""
+        for i in idx:
+            sc = leaves[i]
+            kw = {}
+            if tables is not None:
+                kw["block_tables"] = tables(sc.block_tables)
+            pos_pool = sc.pos
+            if fresh is not None:
+                pos_pool = pos_pool.at[:, fresh].set(-1)
+            if copy_dst is not None:
+                kw["k_pool"] = sc.k_pool.at[:, copy_dst].set(
+                    sc.k_pool[:, copy_src])
+                kw["v_pool"] = sc.v_pool.at[:, copy_dst].set(
+                    sc.v_pool[:, copy_src])
+                pos_pool = pos_pool.at[:, copy_dst].set(pos_pool[:, copy_src])
+            kw["pos"] = pos_pool
+            leaves[i] = dataclasses.replace(sc, **kw)
+        cache = jax.tree_util.tree_unflatten(treedef, leaves)
+        return state._replace(cache=cache)
 
     def _group_views(self, state):
         """(group key, spec, row offset, pos (S,K), active (S,)) per group.
@@ -360,12 +438,14 @@ class PageAllocator:
 
     def _scan(self, state):
         """ONE device readback feeding reclaim, admission accounting, and
-        the prepare walk: (cache, tables, group views, refcounts). As a side
-        effect, returns every unreferenced page to the free list (rows of
-        released slots must already be unmapped — ``unmap_slot_pages``)."""
-        sc, bt = self._tables(state)
+        the prepare walk: (paged-leaf bundle, tables, group views,
+        refcounts). As a side effect, returns every unreferenced page to
+        the free list (rows of released slots must already be unmapped —
+        ``unmap_slot_pages``). Pinned rows (mid-prefill slots, inactive by
+        design) count as live."""
+        leaves, treedef, idx, bt = self._tables(state)
         views = list(self._group_views(state))
-        rows = [np.empty((0,), np.int64)]
+        rows = [np.fromiter(sorted(self._pinned_rows), np.int64)]
         for _, spec, lo, _, active in views:
             rps = spec.rows_per_slot
             rows.append((lo + np.flatnonzero(active)[:, None] * rps
@@ -375,7 +455,43 @@ class PageAllocator:
         for p in [p for p in self._used if refs[p] == 0]:
             self._used.remove(p)
             self._free.append(p)
-        return sc, bt, views, refs
+        return (leaves, treedef, idx), bt, views, refs
+
+    # -------------------------------------------------- chunked prefill ops
+    def pin_rows(self, rows) -> None:
+        """Mark cache rows live while their slot is still inactive (a
+        chunked prefill in flight); unpin when the slot activates or its
+        request is preempted/released."""
+        self._pinned_rows.update(int(r) for r in rows)
+
+    def unpin_rows(self, rows) -> None:
+        self._pinned_rows.difference_update(int(r) for r in rows)
+
+    def map_prefill(self, state, row: int, blocks, group=None):
+        """Map fresh pages for logical ``blocks`` of cache row ``row`` so
+        the next prefill chunk can write straight into the slot's block
+        table. Already-mapped blocks are skipped (the chunk boundary block
+        stays). Raises ``PoolExhausted`` on pool pressure — the scheduler
+        preempts and retries; pages allocated before the raise are
+        unreferenced and return to the free list on the next scan."""
+        leaves, treedef, idx, bt = self._tables(state)
+        set_j, set_p = [], []
+        for j in blocks:
+            if bt[row, j] >= 0:
+                continue
+            try:
+                set_p.append(self._alloc())
+            except PoolExhausted as e:
+                e.group = group
+                raise
+            set_j.append(j)
+        if not set_j:
+            return state
+        js = np.asarray(set_j)
+        ps_ids = np.asarray(set_p, np.int32)
+        return self._rebuild(
+            state, leaves, treedef, idx,
+            tables=lambda t: t.at[:, row, js].set(ps_ids), fresh=ps_ids)
 
     def reclaim(self, state) -> None:
         """Return every page unreferenced by a live row to the free list."""
@@ -409,7 +525,7 @@ class PageAllocator:
         (lazy growth + copy-on-write at the draft boundary). Returns the
         updated state; raises ``PoolExhausted`` (allocator self-heals via the
         next ``reclaim``) when the pool cannot cover the windows."""
-        sc, bt, views, refs = self._scan(state)
+        bundle, bt, views, refs = self._scan(state)
         ps = self.page_size
 
         set_r: list[int] = []; set_j: list[int] = []; set_p: list[int] = []
@@ -450,23 +566,17 @@ class PageAllocator:
 
         if not (set_r or fresh or copy_dst):
             return state
-        tables, pos_pool = sc.block_tables, sc.pos
-        k_pool, v_pool = sc.k_pool, sc.v_pool
+        leaves, treedef, idx = bundle
+        tables_fn = None
         if set_r:
-            tables = tables.at[:, np.asarray(set_r), np.asarray(set_j)].set(
-                np.asarray(set_p, np.int32))
-        if fresh:
-            pos_pool = pos_pool.at[:, np.asarray(fresh)].set(-1)
-        if copy_dst:
-            src = np.asarray(copy_src); dst = np.asarray(copy_dst)
-            k_pool = k_pool.at[:, dst].set(k_pool[:, src])
-            v_pool = v_pool.at[:, dst].set(v_pool[:, src])
-            pos_pool = pos_pool.at[:, dst].set(pos_pool[:, src])
-        cache = dict(state.cache)
-        cache["self"] = dataclasses.replace(
-            sc, block_tables=tables, pos=pos_pool, k_pool=k_pool,
-            v_pool=v_pool)
-        return state._replace(cache=cache)
+            r_ix, j_ix = np.asarray(set_r), np.asarray(set_j)
+            p_ix = np.asarray(set_p, np.int32)
+            tables_fn = lambda t: t.at[:, r_ix, j_ix].set(p_ix)
+        return self._rebuild(
+            state, leaves, treedef, idx, tables=tables_fn,
+            fresh=np.asarray(fresh) if fresh else None,
+            copy_src=np.asarray(copy_src) if copy_dst else None,
+            copy_dst=np.asarray(copy_dst) if copy_dst else None)
 
     # ------------------------------------------------------------ debugging
     def check(self) -> None:
@@ -493,7 +603,10 @@ def _accept_lengths(greedy_tok: jnp.ndarray, drafts: jnp.ndarray,
 
 def _forward(spec: SessionSpec, handle: DecoderHandle, state: SessionState):
     """One verify pass over all slots × beams × drafts (the paper's
-    effective-batch inflation, applied session-wide)."""
+    effective-batch inflation, applied session-wide). Inactive slots feed
+    position -1 so their cache writes land in the trash slot/page — a
+    freed (or mid-prefill, see ``serving.backend``) slot's rows are never
+    clobbered by the shared step."""
     S, K, N_d, DL = (spec.n_slots, spec.n_beams, spec.n_drafts,
                      spec.draft_len)
     rel = jnp.arange(DL + 1, dtype=jnp.int32)
@@ -502,6 +615,8 @@ def _forward(spec: SessionSpec, handle: DecoderHandle, state: SessionState):
         state.drafts[:, None], (S, K, N_d, DL)).reshape(S * K * N_d, DL)
     toks = jnp.concatenate([last_e[:, None], drafts_rows], axis=1)
     pos_e = jnp.repeat(state.pos.reshape(S * K), N_d)[:, None] + rel[None, :]
+    active_e = jnp.repeat(state.active, K * N_d)
+    pos_e = jnp.where(active_e[:, None], pos_e, -1)
     logits, cache = handle.decode_step(state.cache, toks, pos_e)
     return logits, cache, drafts_rows, rel
 

@@ -68,6 +68,37 @@ def gather_rows(cache, src_rows: jnp.ndarray):
         lambda a: jnp.take(a, src_rows.astype(jnp.int32), axis=1), cache)
 
 
+def dynamic_slice_rows(cache, start, n: int):
+    """Batch-row slice ``[start, start + n)`` on axis 1 with a *traced*
+    ``start`` (static ``n``): the chunked-prefill path carves one slot's
+    rows out of the session cache without recompiling per slot. Paged
+    nodes slice only their block tables — the sub-cache reads and writes
+    the one true page pool through its own table rows."""
+
+    def one(a):
+        if _is_paged(a):
+            return dataclasses.replace(a, block_tables=jax.lax.dynamic_slice_in_dim(
+                a.block_tables, start, n, axis=1))
+        return jax.lax.dynamic_slice_in_dim(a, start, n, axis=1)
+
+    return jax.tree_util.tree_map(one, cache, is_leaf=_is_paged)
+
+
+def dynamic_merge_rows(cache, sub, start):
+    """Write a ``dynamic_slice_rows`` sub-cache back after a model step.
+    Dense leaves scatter their row slice at ``start``; paged nodes adopt
+    the stepped pool wholesale and keep the full block tables (a decode
+    step writes pages, never tables)."""
+
+    def one(full, s):
+        if _is_paged(full):
+            return dataclasses.replace(s, block_tables=full.block_tables)
+        return jax.lax.dynamic_update_slice_in_dim(
+            full, s.astype(full.dtype), start, axis=1)
+
+    return jax.tree_util.tree_map(one, cache, sub, is_leaf=_is_paged)
+
+
 def slice_rows(cache, lo: int, hi: int):
     """Static batch-row slice ``[lo, hi)`` on axis 1: the per-group view a
     grouped session step operates on. Paged nodes slice only their block

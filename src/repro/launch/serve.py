@@ -5,18 +5,19 @@ via the serving engines — see examples/serve_retrosynthesis.py).
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
         --requests 4 --max-new 48
 
-Runs the one-shot greedy vs speculative comparison, then a
-continuous-batching demo: the same requests stream through a fixed-slot
-DecodeSession (``repro.core.session``) driven by the
-``ContinuousScheduler`` — staggered admissions, immediate eviction, one
-jitted step for the whole run. Skip it with --no-continuous.
+Runs the one-shot greedy vs speculative comparison, then the continuous
+serving pass: the same requests stream through a ``StreamingEngine`` on the
+``DecoderOnlyBackend`` (``repro.serving.backend``) — ragged prompts admitted
+by chunked prefill into fixed decode slots, one jitted step for the whole
+run, optional paged KV cache (``--paged``). The engine's outputs are
+asserted token-identical to the one-shot speculative pass, which is itself
+asserted identical to greedy. Skip the serving pass with --no-continuous.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -25,63 +26,41 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import (greedy_decode, prompt_lookup_drafts,
                         speculative_greedy_decode, transformer_handle)
-from repro.core.session import SessionSpec, init_state, reset_slot, session_step
-from repro.core.tree_batch import set_rows
 from repro.models import transformer as tr
-from repro.serving.scheduler import ContinuousScheduler
+from repro.serving import EngineConfig, StreamingEngine
+
+EOS_ID = 2
 
 
-def continuous_demo(params, cfg, prompts, args) -> None:
-    """Decoder-only continuous batching: admit each prompt into a freed
-    slot (prefill -> scatter cache rows), step all slots together."""
+def continuous_demo(params, cfg, prompts, args, expected=None) -> None:
+    """Decoder-only continuous batching through the StreamingEngine: each
+    prompt streams into a freed slot by chunked prefill (no per-admission
+    scratch cache), interleaved with the resident slots' decode steps."""
+    prompts = np.asarray(prompts)
     B, P = prompts.shape
-    n_slots = min(2, B)
-    DL, N_d = args.draft_len, args.n_drafts
-    spec = SessionSpec(n_slots=n_slots, n_beams=1, n_drafts=N_d,
-                       draft_len=DL, max_new=args.max_new, eos_id=2,
-                       kind="greedy")
-    cache = tr.init_cache(cfg, spec.n_rows, P + spec.cache_len)
-    state = init_state(spec, cache)
-
-    @partial(jax.jit, donate_argnums=(1,))
-    def step_fn(params, state):
-        return session_step(spec, transformer_handle(params, cfg), state)
-
-    @partial(jax.jit, donate_argnums=(1,))
-    def admit_fn(params, state, slot, prompt, drafts, dmask):
-        one = tr.init_cache(cfg, 1, P + spec.cache_len)
-        _, one = tr.prefill(params, cfg, one, prompt[None, :-1])
-        rows = slot * spec.rows_per_slot + jnp.arange(spec.rows_per_slot)
-        state = state._replace(
-            cache=set_rows(state.cache, rows, one))
-        return reset_slot(spec, state, slot, prompt[-1], P - 1, drafts, dmask)
-
-    sched = ContinuousScheduler(
-        spec, state,
-        admit=lambda st, slot, payload: admit_fn(params, st, jnp.int32(slot),
-                                                 *payload),
-        step=lambda st: step_fn(params, st))
-
-    def read_slot(state, slot):
-        return dict(tokens=np.asarray(state.tokens[slot]),
-                    lengths=np.asarray(state.n_out[slot]),
-                    logprobs=np.asarray(state.logp[slot]),
-                    n_calls=int(state.n_calls[slot]),
-                    accepted=int(state.accepted[slot]))
-
-    for i, row in enumerate(np.asarray(prompts)):
-        d, m = prompt_lookup_drafts(row, DL, N_d)
-        # stagger arrivals so admissions interleave with running decodes
-        sched.submit((jnp.asarray(row), jnp.asarray(d), jnp.asarray(m)),
-                     arrival=float(3 * i))
+    ecfg = EngineConfig(
+        mode="speculative", draft_len=args.draft_len, n_drafts=args.n_drafts,
+        max_new=args.max_new, max_src=P, n_slots=min(args.slots, B),
+        prefill_chunk=args.prefill_chunk, eos_id=EOS_ID,
+        paged=args.paged, page_size=args.page_size)
+    eng = StreamingEngine(params, cfg, None, ecfg)
+    # stagger arrivals so admissions interleave with running decodes
+    rids = [eng.submit(row, arrival=float(3 * i))
+            for i, row in enumerate(prompts)]
     t0 = time.time()
-    results = sched.run(read_slot)
+    results = eng.serve()
     dt = time.time() - t0
-    acc = sum(r.accepted for r in results)
-    gen = sum(int(r.lengths[0]) for r in results)
-    print(f"continuous  : {B} requests over {n_slots} slots, "
-          f"{sched.n_steps} steps, {dt:.2f}s, "
-          f"acceptance={acc / max(gen, 1):.2f}")
+    acc = sum(r.accepted for r in results.values())
+    gen = sum(int(r.lengths[0]) for r in results.values())
+    print(f"continuous  : {B} requests over {ecfg.n_slots} slots "
+          f"({'paged' if args.paged else 'dense'} cache, "
+          f"chunk={ecfg.prefill_chunk}), {eng.scheduler.n_steps} steps, "
+          f"{dt:.2f}s, acceptance={acc / max(gen, 1):.2f}")
+    if expected is not None:
+        for rid, want in zip(rids, expected):
+            np.testing.assert_array_equal(
+                np.asarray(results[rid].tokens[0]), np.asarray(want))
+        print("continuous == one-shot speculative: True")
 
 
 def main() -> None:
@@ -93,6 +72,11 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=48)
     ap.add_argument("--draft-len", type=int, default=8)
     ap.add_argument("--n-drafts", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through a paged KV cache (attention archs)")
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--no-continuous", action="store_true")
     args = ap.parse_args()
 
@@ -115,7 +99,7 @@ def main() -> None:
     pos = jnp.full((B,), P - 1, jnp.int32)
     t0 = time.time()
     g = greedy_decode(handle, fresh(), last, pos, max_new=args.max_new,
-                      eos_id=2)
+                      eos_id=EOS_ID)
     jax.block_until_ready(g.tokens)
     t_g = time.time() - t0
 
@@ -126,7 +110,7 @@ def main() -> None:
         handle, fresh(), last, pos,
         jnp.stack([jnp.asarray(d) for d in ds]),
         jnp.stack([jnp.asarray(m) for m in ms]),
-        max_new=args.max_new, eos_id=2)
+        max_new=args.max_new, eos_id=EOS_ID)
     jax.block_until_ready(s.tokens)
     t_s = time.time() - t0
 
@@ -136,7 +120,8 @@ def main() -> None:
           f"acceptance={float(s.acceptance_rate.mean()):.2f}")
     print(f"outputs identical: {bool((g.tokens == s.tokens).all())}")
     if not args.no_continuous:
-        continuous_demo(params, cfg, prompts, args)
+        continuous_demo(params, cfg, prompts, args,
+                        expected=np.asarray(s.tokens))
 
 
 if __name__ == "__main__":

@@ -112,8 +112,19 @@ def init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
 # caches
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32) -> tuple:
-    """Per-pattern-position caches, stacked over repeats (leading axis)."""
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32,
+               paged=None) -> tuple:
+    """Per-pattern-position caches, stacked over repeats (leading axis).
+
+    ``paged``: ``(n_pages, page_size)`` — allocate every "attn" position's
+    self-attention cache as a ``PagedKVCache`` (one pool per position,
+    stacked over repeats) instead of dense rows; the caller owns page
+    mapping (``repro.core.session.PageAllocator``). All paged positions
+    share one page-id space: the allocator keeps their block tables
+    identical, so a page id addresses the same logical block in every
+    position's pool. Recurrent (mamba/rwkv) and cross-attn caches stay
+    dense — their per-row state is O(1) in sequence length or written once.
+    """
 
     def stack(tree):
         return jax.tree_util.tree_map(
@@ -122,7 +133,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32) ->
     caches = []
     for kind in cfg.layer_pattern:
         if kind == "attn":
-            c = attn_mod.init_kv_cache(cfg, batch, max_len, dtype=dtype)
+            if paged is not None:
+                n_pages, page_size = paged
+                c = attn_mod.init_paged_kv_cache(
+                    cfg, batch, max_len, n_pages=n_pages,
+                    page_size=page_size, dtype=dtype)
+            else:
+                c = attn_mod.init_kv_cache(cfg, batch, max_len, dtype=dtype)
         elif kind == "xattn":
             M = max(cfg.memory_tokens, 1)
             c = {"mk": jnp.zeros((batch, M, cfg.n_heads, cfg.head_dim), dtype),

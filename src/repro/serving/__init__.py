@@ -1,7 +1,10 @@
+from repro.serving.backend import (DecoderOnlyBackend, Seq2SeqBackend,
+                                   make_backend)
 from repro.serving.engine import (EngineConfig, Prediction, ReactionEngine,
                                   StreamingEngine)
 from repro.serving.scheduler import (ContinuousScheduler, ScheduledRequest,
                                      SlotResult)
 
 __all__ = ["ReactionEngine", "StreamingEngine", "EngineConfig", "Prediction",
-           "ContinuousScheduler", "ScheduledRequest", "SlotResult"]
+           "ContinuousScheduler", "ScheduledRequest", "SlotResult",
+           "Seq2SeqBackend", "DecoderOnlyBackend", "make_backend"]

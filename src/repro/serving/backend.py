@@ -1,0 +1,336 @@
+"""ModelBackend — the architecture layer under ``StreamingEngine``.
+
+The continuous-batching scheduler and the DecodeSession step are already
+model-agnostic (they drive a ``DecoderHandle``); what was NOT agnostic was
+admission: how a request's context enters the slot's cache rows. The
+Molecular Transformer encodes the query once and scatters cross-attention
+K/V; a decoder-only LM must *prefill* its prompt into the self-attention
+cache (and recurrent state) before decoding can start. A ``ModelBackend``
+owns exactly that per-architecture surface:
+
+  - cache construction (``init_cache``) and its HBM accounting,
+  - the jit-side step handle (``step_handle``),
+  - host-side request preparation (``make_request`` — tokenization,
+    drafting, prefill chunking),
+  - the device-side admission pieces the engine wraps in its jitted
+    admit functions.
+
+Two admission shapes exist:
+
+``monolithic`` (``chunked = False``, the seq2seq backend): one jitted
+admit does all cache work — encode + scatter + slot reset — exactly the
+pre-backend StreamingEngine behavior, token-identical by construction.
+
+``chunked`` (``chunked = True``, the decoder-only backend): admission is
+*ragged chunked prefill*. The prompt (minus its final token, which seeds
+decoding) is split into fixed-size chunks on the host; each scheduler
+iteration writes ONE chunk per mid-prefill slot straight into the slot's
+cache rows — through the slot's block table when the cache is paged —
+interleaved with decode steps, so resident requests never stall behind a
+long admission. Chunks reuse the ``DecoderHandle`` contract itself
+(``decode_step`` + ``commit_cache``), which is what makes the prefill
+architecture-agnostic: attention positions write K/V at their absolute
+positions, recurrent positions thread state through per-step checkpoints
+and commit the chunk's final one. Only the slot's FIRST cache row is
+prefilled; at finish the siblings adopt it — dense rows by one broadcast
+copy, paged rows by aliasing the block table (the allocator's
+copy-on-write then privatizes the draft-boundary page, and committed
+prompt pages stay shared across all of the slot's rows).
+
+No per-admission scratch cache is allocated anywhere on this path — the
+old ``launch/serve.py`` demo built a fresh 1-row cache inside its jitted
+admit on every admission; chunks here write into the session cache rows
+the slot already owns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import (batch_drafts, prompt_lookup_drafts, seq2seq_handle,
+                        transformer_handle)
+from repro.core.handles import DecoderHandle
+from repro.core.session import SessionSpec, unmap_cache_rows
+from repro.core.tree_batch import (dynamic_merge_rows, dynamic_slice_rows,
+                                   set_rows)
+from repro.models import attention as attn_mod
+from repro.models import seq2seq as s2s
+from repro.models import transformer as tr
+from repro.models.attention import KVCache, PagedKVCache
+
+
+@dataclasses.dataclass
+class Request:
+    """One admission, backend-prepared on the host at ``submit()`` time.
+
+    ``args``: device arrays for the jitted admit (monolithic) or finish
+    (chunked) call — traced, so their *values* never retrace anything.
+    ``chunks``: ``[(tokens (C,), pos0, n_valid)]`` fixed-shape prefill
+    chunks (empty for monolithic backends and one-token prompts).
+    """
+
+    args: tuple
+    chunks: list
+
+
+def _clean_rows(cache, rows):
+    """Recycle cache ``rows`` for a fresh request (``rows`` may be traced):
+    dense KV rows become unreadable (stored position -1), paged rows are
+    unmapped (the allocator maps fresh pages), recurrent state / memory
+    rows reset to their zero initial state."""
+
+    def one(x):
+        if isinstance(x, PagedKVCache):
+            return dataclasses.replace(
+                x, block_tables=x.block_tables.at[:, rows].set(-1))
+        if isinstance(x, KVCache):
+            return KVCache(k=x.k, v=x.v, pos=x.pos.at[:, rows].set(-1))
+        return x.at[:, rows].set(jnp.zeros((), x.dtype))
+
+    return jax.tree_util.tree_map(
+        one, cache, is_leaf=lambda x: isinstance(x, (KVCache, PagedKVCache)))
+
+
+def _adopt_row0(cache, rows):
+    """Give every row of a slot the first row's prefilled context. Dense
+    leaves (K/V, stored positions, recurrent state) broadcast-copy row 0;
+    paged leaves alias its block table — committed prompt pages are shared
+    by all of the slot's rows, and ``PageAllocator.prepare_step``
+    copy-on-writes the draft-boundary page before the first decode step."""
+    r0 = rows[0]
+
+    def one(x):
+        if isinstance(x, PagedKVCache):
+            row_tab = jax.lax.dynamic_slice_in_dim(x.block_tables, r0, 1,
+                                                   axis=1)
+            return dataclasses.replace(
+                x, block_tables=x.block_tables.at[:, rows].set(row_tab))
+        return x.at[:, rows].set(
+            jax.lax.dynamic_slice_in_dim(x, r0, 1, axis=1))
+
+    return jax.tree_util.tree_map(
+        one, cache, is_leaf=lambda x: isinstance(x, PagedKVCache))
+
+
+class Seq2SeqBackend:
+    """Encoder–decoder (Molecular Transformer) backend: monolithic
+    admission — encode the query, scatter cross-attention K/V + memory
+    mask into the slot's cache rows. Token-identical to the pre-backend
+    StreamingEngine (``tests/test_session.py`` / ``test_mixed_mode.py``)."""
+
+    chunked = False
+
+    def __init__(self, cfg: ModelConfig, ecfg, tokenizer):
+        if tokenizer is None:
+            raise ValueError("Seq2SeqBackend requires a tokenizer")
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.tok = tokenizer
+
+    # ---- cache / step ----------------------------------------------------
+    def step_handle(self, params) -> DecoderHandle:
+        return seq2seq_handle(params, self.cfg)   # mask rides in the cache
+
+    def row_len(self, spec: SessionSpec) -> int:
+        return spec.cache_len
+
+    def init_cache(self, n_rows: int, row_len: int, paged=None):
+        return s2s.init_cache(
+            self.cfg, n_rows, row_len, memory_len=self.ecfg.max_src,
+            memory_mask=np.zeros((n_rows, self.ecfg.max_src), bool),
+            paged=paged)
+
+    def pageable(self) -> bool:
+        return True
+
+    def prefill_blocks(self, page_size: int) -> int:
+        return 0   # admission writes no prompt into the self-attn cache
+
+    def per_token_bytes(self) -> int:
+        cfg = self.cfg
+        return cfg.n_layers * 2 * cfg.n_kv_heads * cfg.head_dim * 4
+
+    # ---- host-side request prep ------------------------------------------
+    def make_request(self, query, spec: SessionSpec) -> Request:
+        ecfg = self.ecfg
+        if isinstance(query, str):
+            src = np.asarray(self.tok.encode_padded(query, ecfg.max_src,
+                                                    add_eos=True), np.int32)
+        else:
+            src = np.zeros((ecfg.max_src,), np.int32)
+            q = np.asarray(query, np.int32).reshape(-1)
+            src[:len(q)] = q[:ecfg.max_src]
+        if spec.draft_len > 0:
+            drafts_b, dmask_b = batch_drafts(src[None], spec.draft_len,
+                                             spec.n_drafts,
+                                             dilations=ecfg.dilations)
+            drafts, dmask = drafts_b[0], dmask_b[0]
+        else:
+            drafts = np.zeros((spec.n_drafts, 0), np.int32)
+            dmask = np.ones((spec.n_drafts,), bool)
+        return Request(args=(jnp.asarray(src), jnp.asarray(drafts),
+                             jnp.asarray(dmask)),
+                       chunks=[])
+
+    # ---- device-side admission (inside the engine's jitted admit) --------
+    def admit_cache(self, params, cache, rows, src, drafts, dmask):
+        cfg = self.cfg
+        memory, mask = s2s.encode(params, cfg, src[None])
+        mkv = jax.vmap(
+            lambda p: attn_mod.memory_kv(p, cfg, memory)
+        )(params["dec_blocks"]["cross_attn"])
+        cache = dict(cache)
+        cache["cross"] = set_rows(cache["cross"], rows, mkv)
+        cache["mmask"] = cache["mmask"].at[:, rows].set(mask[0])
+        # recycled rows: the evicted request's stale K/V must be
+        # unreadable. dense: pos=-1 marks every slot empty (attention
+        # masks on stored positions); paged: unmap the rows' block
+        # tables — the host allocator maps fresh pages before the step
+        sc = cache["self"]
+        if isinstance(sc, PagedKVCache):
+            cache = unmap_cache_rows(cache, rows)
+        else:
+            cache["self"] = KVCache(k=sc.k, v=sc.v,
+                                    pos=sc.pos.at[:, rows].set(-1))
+        return cache
+
+    def reset_args(self, src, drafts, dmask):
+        """(last_token, start_pos, drafts, dmask) for ``reset_slot``:
+        decoding starts from BOS at position 0."""
+        return self.tok.bos_id, 0, drafts, dmask
+
+
+class DecoderOnlyBackend:
+    """Decoder-only LM backend (``repro.models.transformer``: dense GQA,
+    MoE, SSM/hybrid, VLM patterns): chunked ragged prompt prefill with
+    prompt-lookup drafting — the paper's source-copy trick restated for
+    decoder-only serving (drafts are substrings of the prompt)."""
+
+    chunked = True
+
+    def __init__(self, cfg: ModelConfig, ecfg, tokenizer=None):
+        if cfg.family == "seq2seq":
+            raise ValueError("use Seq2SeqBackend for encoder-decoder models")
+        if cfg.family == "audio":
+            raise ValueError("encoder-only architecture: no decode step")
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.tok = tokenizer
+
+    # ---- cache / step ----------------------------------------------------
+    def step_handle(self, params) -> DecoderHandle:
+        return transformer_handle(params, self.cfg)
+
+    def row_len(self, spec: SessionSpec) -> int:
+        # the prompt shares the row with the generated tokens
+        return self.ecfg.max_src + spec.cache_len
+
+    def init_cache(self, n_rows: int, row_len: int, paged=None):
+        if paged is not None and not self.pageable():
+            raise ValueError(
+                f"{self.cfg.name}: no attention positions to page "
+                f"(layer_pattern={self.cfg.layer_pattern}); recurrent state "
+                f"is O(1) per row — serve this architecture dense")
+        return tr.init_cache(self.cfg, n_rows, row_len, paged=paged)
+
+    def pageable(self) -> bool:
+        return "attn" in self.cfg.layer_pattern
+
+    def prefill_blocks(self, page_size: int) -> int:
+        """Worst-case prompt blocks one admission maps into row 0 before
+        the slot's siblings alias them (PageAllocator accounting)."""
+        return -(-self.ecfg.max_src // page_size)
+
+    def per_token_bytes(self) -> int:
+        cfg = self.cfg
+        n_attn = sum(1 for k in cfg.layer_pattern if k == "attn")
+        return (cfg.n_repeats * n_attn
+                * 2 * cfg.n_kv_heads * cfg.head_dim * 4)
+
+    # ---- host-side request prep ------------------------------------------
+    def make_request(self, query, spec: SessionSpec) -> Request:
+        ecfg = self.ecfg
+        if isinstance(query, str):
+            if self.tok is None:
+                raise ValueError("string queries need a tokenizer; submit "
+                                 "token arrays instead")
+            prompt = np.asarray(self.tok.encode(query), np.int32)
+        else:
+            prompt = np.asarray(query, np.int32).reshape(-1)
+        P = int(prompt.shape[0])
+        if not 1 <= P <= ecfg.max_src:
+            raise ValueError(f"prompt length {P} outside [1, "
+                             f"max_src={ecfg.max_src}]")
+        if spec.draft_len > 0:
+            drafts, dmask = prompt_lookup_drafts(
+                prompt, spec.draft_len, spec.n_drafts,
+                dilations=ecfg.dilations)
+        else:
+            drafts = np.zeros((spec.n_drafts, 0), np.int32)
+            dmask = np.ones((spec.n_drafts,), bool)
+        # chunk the prompt minus its final token (which seeds decoding as
+        # ``last``); every chunk is the same fixed shape (C,), so a ragged
+        # stream of prompt lengths never retraces — only the chunk COUNT
+        # varies, on the host
+        C = max(1, int(ecfg.prefill_chunk))
+        body = prompt[:P - 1]
+        chunks = []
+        for c0 in range(0, P - 1, C):
+            seg = body[c0:c0 + C]
+            padded = np.zeros((C,), np.int32)
+            padded[:len(seg)] = seg
+            chunks.append((jnp.asarray(padded), c0, len(seg)))
+        return Request(
+            args=(jnp.int32(prompt[P - 1]), jnp.int32(P - 1),
+                  jnp.asarray(drafts), jnp.asarray(dmask)),
+            chunks=chunks)
+
+    # ---- device-side admission pieces -------------------------------------
+    def begin_cache(self, cache, rows):
+        return _clean_rows(cache, rows)
+
+    def prefill_chunk_cache(self, params, cache, row0, tokens, pos0,
+                            n_valid):
+        """Write one prompt chunk into cache row ``row0`` via the
+        DecoderHandle contract itself: ``decode_step`` scatters attention
+        K/V at absolute positions (through the block table when paged) and
+        checkpoints recurrent state; ``commit_cache`` keeps the state after
+        the chunk's ``n_valid`` real tokens. Pad positions are -1 — their
+        writes land in the trash slot/page, exactly the decode-pad
+        convention."""
+        sub = dynamic_slice_rows(cache, row0, 1)
+        C = tokens.shape[0]
+        rel = jnp.arange(C, dtype=jnp.int32)
+        positions = jnp.where(rel < n_valid, pos0 + rel, -1)[None]
+        handle = self.step_handle(params)
+        _, sub = handle.decode_step(sub, tokens[None].astype(jnp.int32),
+                                    positions)
+        sub = handle.commit_cache(sub, jnp.reshape(jnp.int32(n_valid), (1,)))
+        return dynamic_merge_rows(cache, sub, row0)
+
+    def finish_cache(self, cache, rows):
+        return _adopt_row0(cache, rows)
+
+    def reset_args(self, last, pos, drafts, dmask):
+        """Decoding resumes from the prompt's final token at its own
+        position — the engine's analogue of prefill-then-decode."""
+        return last, pos, drafts, dmask
+
+
+def make_backend(cfg: ModelConfig, ecfg, tokenizer=None):
+    """Default backend for a config: ``EngineConfig.backend`` may name one
+    explicitly ("seq2seq" | "decoder_only"); "auto" keys off the model
+    family."""
+    kind = getattr(ecfg, "backend", "auto")
+    if kind == "auto":
+        kind = "seq2seq" if cfg.family == "seq2seq" else "decoder_only"
+    if kind == "seq2seq":
+        return Seq2SeqBackend(cfg, ecfg, tokenizer)
+    if kind == "decoder_only":
+        return DecoderOnlyBackend(cfg, ecfg, tokenizer)
+    raise ValueError(f"unknown backend {kind!r}")

@@ -25,6 +25,19 @@ recompile), beams are batched across slots (no B=1 restriction), and
 finished sequences leave immediately. Outputs are token-identical to
 ``ReactionEngine`` — ``tests/test_session.py`` verifies all four modes.
 
+Architecture-agnostic serving: everything model-specific — cache
+construction, the step handle, and how a request's context enters its
+slot's cache rows — lives behind a ``ModelBackend``
+(``repro.serving.backend``). ``Seq2SeqBackend`` keeps the Molecular
+Transformer path token-identical (encode + cross-K/V scatter in one
+jitted admit); ``DecoderOnlyBackend`` serves every decoder-only family
+(dense GQA, MoE, SSM/hybrid) with prompt-lookup drafting and **chunked
+ragged prefill**: long prompts enter the slot's cache rows in fixed-size
+chunks interleaved with decode steps — through the slot's block table
+when the cache is paged — so resident requests never stall behind a new
+admission, and a ragged stream of prompt lengths never retraces
+(``tests/test_backend.py``).
+
 In-flight mode mixing: ``EngineConfig.mode_groups`` partitions the slot
 axis into per-mode slot groups — e.g. greedy×4, speculative×4, beam×2 —
 that share one model cache (one paged page pool, one ``PageAllocator``)
@@ -53,14 +66,12 @@ from repro.core import (
     batch_drafts, beam_search, extract_drafts, greedy_decode, seq2seq_handle,
     speculative_beam_search, speculative_greedy_decode,
 )
-from repro.core.session import (GroupedState, PageAllocator, SessionSpec,
-                                grouped_init_state, grouped_step,
+from repro.core.session import (GroupedState, PageAllocator, PoolExhausted,
+                                SessionSpec, grouped_init_state, grouped_step,
                                 release_slot, reset_slot, unmap_cache_rows)
-from repro.core.tree_batch import set_rows
 from repro.data.tokenizer import SmilesTokenizer
-from repro.models import attention as attn_mod
 from repro.models import seq2seq as s2s
-from repro.models.attention import KVCache, PagedKVCache
+from repro.serving.backend import make_backend
 from repro.serving.scheduler import ContinuousScheduler, SlotResult
 
 
@@ -86,6 +97,16 @@ class EngineConfig:
     page_size: int = 16              # tokens per page
     n_pages: int | None = None       # pool size; None = worst case (no
                                      # oversubscription, paged layout only)
+    # model backend: "auto" routes on cfg.family (seq2seq -> monolithic
+    # admission, anything else -> decoder-only chunked prefill)
+    backend: str = "auto"
+    # chunked ragged prefill (decoder-only): tokens written per scheduler
+    # iteration while a prompt streams into its slot's cache rows
+    prefill_chunk: int = 32
+    # decoder-only sessions have no chemistry tokenizer: special ids come
+    # from here when StreamingEngine is built with tokenizer=None
+    eos_id: int | None = None
+    pad_id: int = 0
 
 
 @dataclasses.dataclass
@@ -254,12 +275,19 @@ class StreamingEngine:
     """Continuous-batching engine: S decode slots in per-mode slot groups,
     one jitted step, one jitted admit/release per group."""
 
-    def __init__(self, params, cfg: ModelConfig, tokenizer: SmilesTokenizer,
-                 engine_cfg: EngineConfig | None = None):
+    def __init__(self, params, cfg: ModelConfig,
+                 tokenizer: SmilesTokenizer | None = None,
+                 engine_cfg: EngineConfig | None = None, *,
+                 backend=None):
         self.params = params
         self.cfg = cfg
         self.tok = tokenizer
         self.ecfg = ecfg = engine_cfg or EngineConfig()
+        self.backend = backend or make_backend(cfg, ecfg, tokenizer)
+        eos_id = tokenizer.eos_id if tokenizer is not None else ecfg.eos_id
+        pad_id = tokenizer.pad_id if tokenizer is not None else ecfg.pad_id
+        if eos_id is None:
+            raise ValueError("no tokenizer: set EngineConfig.eos_id")
         group_slots = (dict(ecfg.mode_groups) if ecfg.mode_groups
                        else {ecfg.mode: ecfg.n_slots})
         self._groups: dict[str, SessionSpec] = {}
@@ -267,8 +295,8 @@ class StreamingEngine:
             kind, K, N_d, DL = _mode_shape(ecfg, mode)
             self._groups[mode] = SessionSpec(
                 n_slots=int(n_slots), n_beams=K, n_drafts=N_d, draft_len=DL,
-                max_new=ecfg.max_new, eos_id=tokenizer.eos_id,
-                pad_id=tokenizer.pad_id, kind=kind)
+                max_new=ecfg.max_new, eos_id=eos_id,
+                pad_id=pad_id, kind=kind)
         self.mode_names = list(self._groups)
         self.default_mode = (ecfg.mode if ecfg.mode in self._groups
                              else self.mode_names[0])
@@ -283,17 +311,31 @@ class StreamingEngine:
             rows += spec.n_rows
             slots += spec.n_slots
         self.n_rows, self.n_slots = rows, slots
-        self.cache_len = max(s.cache_len for s in self._groups.values())
+        # per-row cache length: the backend may extend it past the decode
+        # window (decoder-only rows also hold the prompt)
+        self.cache_len = max(self.backend.row_len(s)
+                             for s in self._groups.values())
         # trace counters (incremented at TRACE time only): after one warmup
         # request per mode, mixed traffic must not grow any of these — the
         # zero-recompilation acceptance criterion tests assert on it
         self.n_traces = {"step": 0}
         self.n_traces.update({("admit", m): 0 for m in self._groups})
+        if self.backend.chunked:
+            self.n_traces.update({("chunk", m): 0 for m in self._groups})
+            self.n_traces.update({("finish", m): 0 for m in self._groups})
         # donate the session state: the scheduler threads it linearly, so
         # XLA updates the (dominant) cache buffers in place every step
         self._step_fn = jax.jit(self._step_impl, donate_argnums=(1,))
         self._admit_fns = {m: self._make_admit(m) for m in self._groups}
+        if self.backend.chunked:
+            self._chunk_fns = {m: self._make_chunk(m) for m in self._groups}
+            self._finish_fns = {m: self._make_finish(m) for m in self._groups}
         self._release_fns = {m: self._make_release(m) for m in self._groups}
+        # host-side chunked-prefill bookkeeping: global slot ->
+        # {mode, req, next-chunk cursor}; slots currently decoding
+        # (admission fully applied)
+        self._prefilling: dict[int, dict] = {}
+        self._decoding: set[int] = set()
         self.allocator: PageAllocator | None = None
         self.scheduler = self._new_scheduler()
 
@@ -301,46 +343,88 @@ class StreamingEngine:
     #    request and every slot of the group reuses them) -------------------
     def _step_impl(self, params, gstate):
         self.n_traces["step"] += 1
-        handle = seq2seq_handle(params, self.cfg)   # mask rides in the cache
+        handle = self.backend.step_handle(params)
         return grouped_step(tuple(self._groups.values()), handle, gstate)
 
+    def _slot_rows(self, mode: str, slot):
+        spec = self._groups[mode]
+        return (self._row_lo[mode] + slot * spec.rows_per_slot
+                + jnp.arange(spec.rows_per_slot))
+
+    def _swap_group(self, gstate, gi: int, gs):
+        groups = gstate.groups[:gi] + (gs,) + gstate.groups[gi + 1:]
+        return GroupedState(groups=groups, cache=gstate.cache)
+
     def _make_admit(self, mode: str):
-        """Jitted prefill request -> slot of ``mode``'s group: encode the
-        query, scatter its cross-attn K/V + memory mask into the slot's
-        cache rows, reset the slot's decode state. ``slot`` is a traced
-        LOCAL slot index — no recompilation per admission, and admitting
-        into this group never retraces the other groups' math."""
+        """Jitted admission into a slot of ``mode``'s group; ``slot`` is a
+        traced LOCAL slot index — no recompilation per admission, and
+        admitting into this group never retraces the other groups' math.
+
+        Monolithic backends (seq2seq) do all cache work here — encode the
+        query, scatter cross-attn K/V + memory mask, reset the slot's
+        decode state. Chunked backends only recycle the slot's cache rows;
+        the prompt then streams in via ``_make_chunk`` and the slot
+        activates in ``_make_finish``."""
         spec = self._groups[mode]
         gi = self.mode_names.index(mode)
-        lo = self._row_lo[mode]
+        be = self.backend
 
-        def admit(params, gstate, slot, src, drafts, dmask):
+        if be.chunked:
+            def admit(params, gstate, slot):
+                self.n_traces["admit", mode] += 1
+                rows = self._slot_rows(mode, slot)
+                cache = be.begin_cache(gstate.cache, rows)
+                return GroupedState(groups=gstate.groups, cache=cache)
+
+            return jax.jit(admit, donate_argnums=(1,))
+
+        def admit(params, gstate, slot, *args):
             self.n_traces["admit", mode] += 1
-            memory, mask = s2s.encode(params, self.cfg, src[None])
-            mkv = jax.vmap(
-                lambda p: attn_mod.memory_kv(p, self.cfg, memory)
-            )(params["dec_blocks"]["cross_attn"])
-            rows = (lo + slot * spec.rows_per_slot
-                    + jnp.arange(spec.rows_per_slot))
-            cache = dict(gstate.cache)
-            cache["cross"] = set_rows(cache["cross"], rows, mkv)
-            cache["mmask"] = cache["mmask"].at[:, rows].set(mask[0])
-            # recycled rows: the evicted request's stale K/V must be
-            # unreadable. dense: pos=-1 marks every slot empty (attention
-            # masks on stored positions); paged: unmap the rows' block
-            # tables — the host allocator maps fresh pages before the step
-            sc = cache["self"]
-            if isinstance(sc, PagedKVCache):
-                cache = unmap_cache_rows(cache, rows)
-            else:
-                cache["self"] = KVCache(k=sc.k, v=sc.v,
-                                        pos=sc.pos.at[:, rows].set(-1))
-            gs = reset_slot(spec, gstate.groups[gi], slot, self.tok.bos_id,
-                            0, drafts, dmask)
-            groups = gstate.groups[:gi] + (gs,) + gstate.groups[gi + 1:]
-            return GroupedState(groups=groups, cache=cache)
+            rows = self._slot_rows(mode, slot)
+            cache = be.admit_cache(params, gstate.cache, rows, *args)
+            last, pos0, drafts, dmask = be.reset_args(*args)
+            gs = reset_slot(spec, gstate.groups[gi], slot, last, pos0,
+                            drafts, dmask)
+            return self._swap_group(
+                GroupedState(groups=gstate.groups, cache=cache), gi, gs)
 
         return jax.jit(admit, donate_argnums=(1,))
+
+    def _make_chunk(self, mode: str):
+        """Jitted: one fixed-size prefill chunk into the slot's first cache
+        row (traced slot, traced chunk values — ragged prompt lengths only
+        change the chunk COUNT, on the host)."""
+        spec = self._groups[mode]
+        lo = self._row_lo[mode]
+        be = self.backend
+
+        def chunk(params, gstate, slot, tokens, pos0, n_valid):
+            self.n_traces["chunk", mode] += 1
+            row0 = lo + slot * spec.rows_per_slot
+            cache = be.prefill_chunk_cache(params, gstate.cache, row0,
+                                           tokens, pos0, n_valid)
+            return GroupedState(groups=gstate.groups, cache=cache)
+
+        return jax.jit(chunk, donate_argnums=(1,))
+
+    def _make_finish(self, mode: str):
+        """Jitted: prefill done — siblings adopt row 0's context (dense
+        broadcast / paged table alias) and the slot goes live."""
+        spec = self._groups[mode]
+        gi = self.mode_names.index(mode)
+        be = self.backend
+
+        def finish(params, gstate, slot, *args):
+            self.n_traces["finish", mode] += 1
+            rows = self._slot_rows(mode, slot)
+            cache = be.finish_cache(gstate.cache, rows)
+            last, pos0, drafts, dmask = be.reset_args(*args)
+            gs = reset_slot(spec, gstate.groups[gi], slot, last, pos0,
+                            drafts, dmask)
+            return self._swap_group(
+                GroupedState(groups=gstate.groups, cache=cache), gi, gs)
+
+        return jax.jit(finish, donate_argnums=(1,))
 
     def _make_release(self, mode: str):
         """Jitted evict + (paged) unmap of a LOCAL slot of ``mode``'s group
@@ -378,46 +462,152 @@ class StreamingEngine:
                 "paged serving sessions require sliding_window == 0: "
                 "PageAllocator maps a linear block space and does not model "
                 "the window's block ring")
+        if not self.backend.pageable():
+            raise ValueError(
+                f"{self.cfg.name}: backend has nothing to page — serve dense")
         ps = ecfg.page_size
-        worst = sum(s.n_rows * (-(-s.cache_len // ps))
+        worst = sum(s.n_rows * (-(-self.backend.row_len(s) // ps))
                     for s in self._groups.values())
         n_pages = ecfg.n_pages if ecfg.n_pages is not None else worst + 1
         return n_pages, ps
 
     def _finished_mask(self, gstate) -> np.ndarray:
         """(n_slots,) bool by global slot id (groups are slot-contiguous in
-        declaration order, matching ``_slot_base``)."""
-        return np.concatenate([np.asarray(gs.finished).all(axis=1)
+        declaration order, matching ``_slot_base``). Mid-prefill slots are
+        never finished — their SessionState is still the released one."""
+        mask = np.concatenate([np.asarray(gs.finished).all(axis=1)
                                for gs in gstate.groups])
+        for slot in self._prefilling:
+            mask[slot] = False
+        return mask
+
+    def _slot_row0(self, slot: int) -> int:
+        mode, local = self._slot_of(slot)
+        spec = self._groups[mode]
+        return self._row_lo[mode] + local * spec.rows_per_slot
+
+    def _pump_prefill(self, state):
+        """Advance every mid-prefill slot by ONE chunk (decode steps for
+        resident slots interleave between pumps — a long admission never
+        stalls the session), activating slots whose prompt is fully
+        written. Paged sessions map each chunk's pages into the slot's
+        block table first; ``PoolExhausted`` propagates to the scheduler,
+        which preempts a resident and retries."""
+        ps = self.ecfg.page_size
+        for slot in sorted(self._prefilling):
+            rec = self._prefilling[slot]
+            mode, req = rec["mode"], rec["req"]
+            local = slot - self._slot_base[mode]
+            if rec["next"] < len(req.chunks):
+                tokens, pos0, n_valid = req.chunks[rec["next"]]
+                if self.allocator is not None:
+                    blocks = range(pos0 // ps,
+                                   (pos0 + n_valid - 1) // ps + 1)
+                    try:
+                        state = self.allocator.map_prefill(
+                            state, self._slot_row0(slot), blocks, group=mode)
+                    except PoolExhausted:
+                        # dangling just-allocated pages are unreferenced;
+                        # reclaim before the scheduler preempts + retries
+                        self.allocator.reclaim(state)
+                        raise
+                state = self._chunk_fns[mode](
+                    self.params, state, jnp.int32(local), tokens,
+                    jnp.int32(pos0), jnp.int32(n_valid))
+                # the chunk call donated the previous state's buffers: keep
+                # the live state visible to the scheduler in case a later
+                # slot's mapping raises PoolExhausted mid-pump
+                self._prestep_state = state
+                # the cursor lives here, NOT on the Request: a preempted
+                # request requeues with its chunk plan intact and replays
+                # the whole prefill deterministically on readmission
+                rec["next"] += 1
+            if rec["next"] >= len(req.chunks):
+                state = self._finish_fns[mode](self.params, state,
+                                               jnp.int32(local), *req.args)
+                self._prestep_state = state
+                del self._prefilling[slot]
+                self._decoding.add(slot)
+                if self.allocator is not None:
+                    spec = self._groups[mode]
+                    row0 = self._slot_row0(slot)
+                    self.allocator.unpin_rows(
+                        range(row0, row0 + spec.rows_per_slot))
+        return state
 
     def _new_scheduler(self) -> ContinuousScheduler:
         ecfg = self.ecfg
         paged = self._paged_geometry() if ecfg.paged else None
-        cache = s2s.init_cache(
-            self.cfg, self.n_rows, self.cache_len, memory_len=ecfg.max_src,
-            memory_mask=np.zeros((self.n_rows, ecfg.max_src), bool),
-            paged=paged)
-        step = lambda state: self._step_fn(self.params, state)
+        cache = self.backend.init_cache(self.n_rows, self.cache_len,
+                                        paged=paged)
+        self._prefilling, self._decoding = {}, set()
+
+        def step(state):
+            if not self._decoding:   # every resident is still prefilling
+                return state
+            return self._step_fn(self.params, state)
 
         def admit(state, slot, payload):
-            mode, args = payload
+            mode, req = payload
             local = slot - self._slot_base[mode]
-            return self._admit_fns[mode](self.params, state,
-                                         jnp.int32(local), *args)
+            if not self.backend.chunked:
+                self._decoding.add(slot)
+                return self._admit_fns[mode](self.params, state,
+                                             jnp.int32(local), *req.args)
+            # chunked: recycle the rows now; the prompt streams in via the
+            # pre-step pump and the slot activates when it is fully written
+            state = self._admit_fns[mode](self.params, state,
+                                          jnp.int32(local))
+            self._prefilling[slot] = {"mode": mode, "req": req, "next": 0}
+            if self.allocator is not None:
+                spec = self._groups[mode]
+                row0 = self._slot_row0(slot)
+                self.allocator.pin_rows(range(row0,
+                                              row0 + spec.rows_per_slot))
+            return state
 
         def release(state, slot):
             mode, local = self._slot_of(slot)
+            self._decoding.discard(slot)
+            if slot in self._prefilling:   # preempted mid-prefill
+                del self._prefilling[slot]
+            if self.allocator is not None:
+                spec = self._groups[mode]
+                row0 = self._slot_row0(slot)
+                self.allocator.unpin_rows(range(row0,
+                                               row0 + spec.rows_per_slot))
             return self._release_fns[mode](state, jnp.int32(local))
+
+        def pre_step(state):
+            # the prefill pump donates state buffers chunk by chunk; if a
+            # later mapping raises PoolExhausted the scheduler must preempt
+            # against the partially-advanced state, not the donated one
+            self._prestep_state = state
+            try:
+                if self.backend.chunked:
+                    state = self._pump_prefill(state)
+                if self.allocator is not None:
+                    state = self.allocator.prepare_step(state)
+                return state
+            except PoolExhausted:
+                self.scheduler.state = self._prestep_state
+                raise
 
         groups = {mode: list(range(base, base + self._groups[mode].n_slots))
                   for mode, base in self._slot_base.items()}
         hooks: dict = {"release": release, "groups": groups,
                        "finished": self._finished_mask}
         if ecfg.paged:
-            self.allocator = PageAllocator(self._groups, n_pages=paged[0],
-                                           page_size=paged[1])
-            hooks.update(admit_ok=self.allocator.can_admit,
-                         pre_step=self.allocator.prepare_step)
+            be = self.backend
+            self.allocator = PageAllocator(
+                self._groups, n_pages=paged[0], page_size=paged[1],
+                row_lens={m: be.row_len(s)
+                          for m, s in self._groups.items()},
+                prefill_blocks={m: be.prefill_blocks(paged[1])
+                                for m in self._groups})
+            hooks.update(admit_ok=self.allocator.can_admit)
+        if ecfg.paged or self.backend.chunked:
+            hooks["pre_step"] = pre_step
         state = grouped_init_state(tuple(self._groups.values()), cache)
         return ContinuousScheduler(self.spec, state, admit=admit, step=step,
                                    **hooks)
@@ -434,9 +624,9 @@ class StreamingEngine:
         session serves ``n_slots`` > this when oversubscribed (the
         acceptance criterion).
         """
-        spec, cfg = self.spec, self.cfg
-        per_token = cfg.n_layers * 2 * cfg.n_kv_heads * cfg.head_dim * 4
-        row_bytes = spec.cache_len * per_token
+        spec = self.spec
+        per_token = self.backend.per_token_bytes()
+        row_bytes = self.backend.row_len(spec) * per_token
         if self.ecfg.paged:
             n_pages, ps = self._paged_geometry()
             page_bytes = ps * per_token
@@ -454,20 +644,8 @@ class StreamingEngine:
                 "contiguous_equiv_slots": self.n_slots}
 
     # -- request plumbing ----------------------------------------------------
-    def _payload(self, query: str, mode: str):
-        spec, ecfg = self._groups[mode], self.ecfg
-        src = np.asarray(self.tok.encode_padded(query, ecfg.max_src,
-                                                add_eos=True), np.int32)
-        if spec.draft_len > 0:
-            drafts_b, dmask_b = batch_drafts(src[None], spec.draft_len,
-                                             spec.n_drafts,
-                                             dilations=ecfg.dilations)
-            drafts, dmask = drafts_b[0], dmask_b[0]
-        else:
-            drafts = np.zeros((spec.n_drafts, 0), np.int32)
-            dmask = np.ones((spec.n_drafts,), bool)
-        return (mode, (jnp.asarray(src), jnp.asarray(drafts),
-                       jnp.asarray(dmask)))
+    def _payload(self, query, mode: str):
+        return (mode, self.backend.make_request(query, self._groups[mode]))
 
     def _read_slot(self, state, slot: int) -> dict:
         mode, local = self._slot_of(slot)
@@ -485,6 +663,9 @@ class StreamingEngine:
         )
 
     def _prediction(self, r: SlotResult, wall_s: float) -> Prediction:
+        if self.tok is None:
+            raise ValueError("predict()/predict_topn() need a tokenizer; "
+                             "use submit() + serve() for raw-token sessions")
         smiles = [self.tok.decode(r.tokens[k])
                   for k in range(r.tokens.shape[0])]
         kind = self._groups[r.mode].kind if r.mode in self._groups else "greedy"
@@ -501,12 +682,14 @@ class StreamingEngine:
         The jitted step/admit functions (and their compilations) survive."""
         self.scheduler = self._new_scheduler()
 
-    def submit(self, query: str, *, arrival: float = 0.0,
+    def submit(self, query, *, arrival: float = 0.0,
                mode: str | None = None) -> int:
-        """Enqueue a request; returns its id. ``arrival`` delays admission
-        (steps in closed-loop serve(), seconds in realtime serve());
-        ``mode`` routes the request to that slot group (default: the
-        engine's primary mode)."""
+        """Enqueue a request; returns its id. ``query`` is a string
+        (tokenized by the engine's tokenizer) or a 1-D array of token ids
+        (decoder-only sessions without a chemistry tokenizer). ``arrival``
+        delays admission (steps in closed-loop serve(), seconds in
+        realtime serve()); ``mode`` routes the request to that slot group
+        (default: the engine's primary mode)."""
         mode = self.default_mode if mode is None else mode
         if mode not in self._groups:
             raise KeyError(f"engine serves {self.mode_names}, got {mode!r}")

@@ -33,6 +33,17 @@ the group that exhausted the pool (``PoolExhausted.group``) before
 falling back to the globally youngest resident, and a preempted request
 requeues at the head of *its own* group's queue with its mode tag intact.
 
+Backend-agnostic admission: the scheduler never interprets payloads, so
+the engine may admit in phases. Chunked ragged prefill (the decoder-only
+``ModelBackend``) registers the slot at ``admit`` time, then advances one
+prompt chunk per iteration inside ``pre_step`` — interleaved with the
+resident slots' decode step — and reports the slot as unfinished via the
+``finished`` hook until its prompt is fully written. A ``pre_step`` that
+raises ``PoolExhausted`` mid-pump must leave the scheduler's ``state``
+attribute pointing at the live (partially-advanced) state if it already
+consumed the previous one (jit donation), so the preemption path releases
+against valid buffers.
+
 Memory-aware mode (paged KV cache): three optional hooks turn slot-count
 admission into page-count admission. ``admit_ok`` gates each admission on
 free *pages* (so ``n_slots`` may exceed what contiguous cache rows would

@@ -62,3 +62,20 @@ def test_config_drift_fails_loudly():
     new = _payload(cfg={"requests": 12, "max_new": 16, "seed": 0})
     got = compare(_payload(), new, 0.30)
     assert len(got) == 1 and "configs differ" in got[0]
+
+
+def test_required_mode_missing_from_new_run_fails():
+    """--require pins the expected mode set: a refactor that silently drops
+    a workload (e.g. decoder_greedy) fails even when the committed baseline
+    predates that mode."""
+    got = compare(_payload(), _payload(), 0.30,
+                  require=["greedy", "decoder_greedy", "mixed/beam"])
+    assert len(got) == 1
+    assert "decoder_greedy" in got[0] and "required" in got[0]
+
+
+def test_required_modes_present_pass():
+    base = _payload()
+    base["modes"]["decoder_greedy"] = {"rps": 25.0, "p50": 0.1, "p95": 0.2}
+    assert compare(base, base, 0.30,
+                   require=["greedy", "decoder_greedy", "mixed/beam"]) == []

@@ -7,7 +7,7 @@ try:
 except ImportError:  # hermetic env: in-repo fallback (see pyproject [dev])
     from repro.testing import given, settings, strategies as st
 
-from repro.core.drafting import extract_drafts
+from repro.core.drafting import extract_drafts, prompt_lookup_drafts
 from repro.data.synthetic import SyntheticReactionDataset, make_reaction
 from repro.data.tokenizer import SmilesTokenizer, tokenize_smiles
 from repro.data.pipeline import lm_batch, padded_batch
@@ -71,6 +71,63 @@ def test_extract_drafts_dilated():
     drafts, mask = extract_drafts(toks, 4, 100, dilations=(1, 2))
     assert int(mask.sum()) == 17 + 14  # stride-1 + dilation-2 windows
     np.testing.assert_array_equal(drafts[17], toks[0:7:2])
+
+
+def test_prompt_lookup_shorter_than_dilated_span():
+    """A prompt shorter than the dilation-2 window span ((dl-1)*2 + 1)
+    yields only stride-1 windows — the dilated pass contributes nothing
+    rather than fabricating out-of-range windows."""
+    toks = list(range(4, 10))  # 6 tokens; dl=4 -> dilated span 7 > 6
+    drafts, mask = prompt_lookup_drafts(toks, 4, 100, dilations=(1, 2))
+    assert int(mask.sum()) == 3  # 6 - 4 + 1 stride-1 windows only
+    for i in range(3):
+        np.testing.assert_array_equal(drafts[i], toks[i:i + 4])
+    # even shorter than the stride-1 window: one truncated, padded draft
+    drafts, mask = prompt_lookup_drafts(toks[:2], 4, 100, dilations=(1, 2))
+    assert int(mask.sum()) == 1
+    np.testing.assert_array_equal(drafts[0], [4, 5, 0, 0])
+
+
+def test_prompt_lookup_all_pad_prompt():
+    """An all-pad prompt produces no drafts: every mask entry False, every
+    draft row pad — the speculative step then accepts nothing and the
+    request degrades to greedy instead of verifying garbage."""
+    drafts, mask = prompt_lookup_drafts(np.zeros((12,), np.int32), 5, 8)
+    assert not mask.any()
+    assert (drafts == 0).all()
+    # same through the dilated path
+    drafts, mask = prompt_lookup_drafts(np.zeros((12,), np.int32), 5, 8,
+                                        dilations=(1, 2))
+    assert not mask.any()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 40), min_size=0, max_size=40),
+       st.integers(2, 6), st.integers(1, 24))
+def test_prompt_lookup_is_extract_drafts_with_dilations(tokens, dl, nd):
+    """prompt_lookup_drafts IS source-copy extraction applied to the prompt
+    (the paper's drafting trick restated for decoder-only LMs): outputs
+    must stay byte-identical for every dilation set, so the two entry
+    points can never drift apart."""
+    toks = np.asarray(tokens, np.int32)
+    for dilations in ((1,), (1, 2), (2,)):
+        pd, pm = prompt_lookup_drafts(toks, dl, nd, dilations=dilations)
+        ed, em = extract_drafts(toks, dl, nd, dilations=dilations)
+        np.testing.assert_array_equal(pd, ed)
+        np.testing.assert_array_equal(pm, em)
+
+
+def test_prompt_lookup_dilated_windows_dedup_order():
+    """dilations=(1, 2): stride-1 windows fill the draft buffer first, the
+    dilation-2 windows append after them (matching extract_drafts); with a
+    tight n_drafts cap the dilated tail is dropped, never interleaved."""
+    toks = list(range(4, 16))  # 12 tokens, dl=4: 9 stride-1 + 6 dilated
+    drafts, mask = prompt_lookup_drafts(toks, 4, 11, dilations=(1, 2))
+    assert int(mask.sum()) == 11
+    for i in range(9):
+        np.testing.assert_array_equal(drafts[i], toks[i:i + 4])
+    np.testing.assert_array_equal(drafts[9], toks[0:7:2])
+    np.testing.assert_array_equal(drafts[10], toks[1:8:2])
 
 
 def test_padded_batch_layout():
