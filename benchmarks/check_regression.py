@@ -1,14 +1,16 @@
 """CI bench gate: diff a fresh ``BENCH_serving.json`` against the committed
-baseline and fail on a per-mode requests/sec collapse.
+baseline and fail on a per-mode requests/sec collapse or p95 latency blow-up.
 
 The serving scheduler is the part of this repo a refactor can silently
 slow down (admission stalls, extra host syncs, accidental retraces), so CI
 reruns the throughput benchmark and compares per-mode ``rps`` — including
 every ``per_mode`` entry of the mixed-mode workload — against the baseline
-committed at the repo root. The gate is deliberately loose (default: fail
-only on a >30% drop) because CI runners are noisy; it exists to catch
-step-function regressions, not single-digit drift. Latency is reported for
-context but never gated (it is far noisier than throughput).
+committed at the repo root. Since the request front door added per-request
+deadlines/SLOs, p95 end-to-end latency is gated too (its own, looser,
+threshold: tail latency is noisier than throughput but a step-function
+regression — an admission stall, a serialized admit — must not land
+silently). Both gates are deliberately loose because CI runners are noisy;
+they exist to catch step-function regressions, not single-digit drift.
 
 Policy (see ROADMAP.md): any PR that legitimately shifts throughput
 regenerates the committed baseline with the same command CI runs, in the
@@ -18,7 +20,7 @@ make the comparison meaningless.
 
     python benchmarks/check_regression.py \
         --baseline BENCH_serving.json --new BENCH_serving.new.json \
-        [--threshold 0.30]
+        [--threshold 0.30] [--latency-threshold 1.0]
 """
 
 from __future__ import annotations
@@ -28,27 +30,36 @@ import json
 import sys
 
 
-def _flat_rps(payload: dict) -> dict[str, float]:
-    """{gate key: req/s} — one entry per single-mode run, plus one per mode
+def _flat_metric(payload: dict, metric: str) -> dict[str, float]:
+    """{gate key: metric} — one entry per single-mode run, plus one per mode
     inside the mixed workload ("mixed/<mode>")."""
     out: dict[str, float] = {}
     for mode, row in payload.get("modes", {}).items():
-        out[mode] = float(row["rps"])
+        if metric in row:
+            out[mode] = float(row[metric])
         for sub, pm in row.get("per_mode", {}).items():
-            out[f"{mode}/{sub}"] = float(pm["rps"])
+            if metric in pm:
+                out[f"{mode}/{sub}"] = float(pm[metric])
     return out
 
 
 def compare(
-    baseline: dict, new: dict, threshold: float, require: list[str] | None = None
+    baseline: dict,
+    new: dict,
+    threshold: float,
+    require: list[str] | None = None,
+    latency_threshold: float | None = None,
 ) -> list[str]:
     """Return a list of human-readable gate failures (empty = pass).
 
     ``require``: gate keys (modes, or "mixed/<mode>" sub-modes) that must
     be present in the NEW run even if the committed baseline predates them
     — this is how CI pins the expected mode set, so a refactor that
-    silently drops a workload (e.g. the decoder-only modes) fails the gate
-    instead of shrinking its coverage.
+    silently drops a workload (e.g. the decoder-only modes or the
+    priority-mix demo) fails the gate instead of shrinking its coverage.
+
+    ``latency_threshold``: max tolerated fractional p95 latency INCREASE
+    per mode (None disables the latency gate).
     """
     failures: list[str] = []
     cfg_b, cfg_n = baseline.get("config", {}), new.get("config", {})
@@ -60,7 +71,7 @@ def compare(
             f"or regenerate the committed baseline"
         )
         return failures
-    base_rps, new_rps = _flat_rps(baseline), _flat_rps(new)
+    base_rps, new_rps = _flat_metric(baseline, "rps"), _flat_metric(new, "rps")
     for key in sorted(require or []):
         if key not in new_rps:
             failures.append(f"{key}: required mode missing from new run")
@@ -80,6 +91,26 @@ def compare(
                 f"{key}: {now:.2f} req/s is more than "
                 f"{threshold:.0%} below baseline {old:.2f} req/s"
             )
+    if latency_threshold is not None:
+        base_p95 = _flat_metric(baseline, "p95")
+        new_p95 = _flat_metric(new, "p95")
+        for key, old in sorted(base_p95.items()):
+            if key not in new_p95 or old <= 0.0:
+                # missing-mode failures are already reported by the rps
+                # pass; a zero/absent baseline p95 has no meaningful ratio
+                continue
+            now = new_p95[key]
+            ceiling = (1.0 + latency_threshold) * old
+            verdict = "FAIL" if now > ceiling else "ok"
+            print(
+                f"  {key:24s} baseline {old:8.2f} s p95   new {now:8.2f} s p95   "
+                f"ceiling {ceiling:6.2f}   {verdict}"
+            )
+            if now > ceiling:
+                failures.append(
+                    f"{key}: p95 latency {now:.2f}s is more than "
+                    f"{latency_threshold:.0%} above baseline {old:.2f}s"
+                )
     return failures
 
 
@@ -94,11 +125,18 @@ def main() -> int:
         help="max tolerated fractional req/s drop per mode (default 0.30)",
     )
     ap.add_argument(
+        "--latency-threshold",
+        type=float,
+        default=1.0,
+        help="max tolerated fractional p95 latency increase per mode "
+        "(default 1.0 = p95 may double; pass a negative value to disable)",
+    )
+    ap.add_argument(
         "--require",
         nargs="*",
         default=[],
         help="gate keys that must exist in the new run (e.g. decoder_greedy "
-        "mixed/beam) even if the baseline predates them",
+        "mixed/beam priority_mix) even if the baseline predates them",
     )
     args = ap.parse_args()
 
@@ -108,7 +146,15 @@ def main() -> int:
         new = json.load(f)
 
     print(f"bench gate: {args.new_path} vs baseline {args.baseline}")
-    failures = compare(baseline, new, args.threshold, require=args.require)
+    failures = compare(
+        baseline,
+        new,
+        args.threshold,
+        require=args.require,
+        latency_threshold=(
+            None if args.latency_threshold < 0 else args.latency_threshold
+        ),
+    )
     if failures:
         print("\nbench gate FAILED:")
         for msg in failures:

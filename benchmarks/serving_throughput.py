@@ -30,10 +30,18 @@ same StreamingEngine with prompt-lookup drafts and chunked ragged prefill
 (``repro.serving.backend.DecoderOnlyBackend``) — the bench gate tracks
 these modes like any other.
 
+``--modes priority_mix`` (in the default set) exercises the request front
+door's priority scheduling: one session, one slot group, the same Poisson
+stream split into high- and low-priority halves. The per-class
+``queue_delay`` percentiles make the SLO behavior visible in the perf
+trajectory — high-priority requests overtake the low-priority backlog at
+every admission.
+
 Results are printed AND written as machine-readable ``BENCH_serving.json``
-(req/s, p50/p95 latency, peak/capacity cache bytes, slots resident) so the
-perf trajectory is tracked across PRs; ``benchmarks/check_regression.py``
-diffs a fresh run against the committed baseline in CI (the bench gate).
+(req/s, p50/p95 latency + queue delay, peak/capacity cache bytes, slots
+resident) so the perf trajectory is tracked across PRs;
+``benchmarks/check_regression.py`` diffs a fresh run against the committed
+baseline in CI (the bench gate: req/s floors AND p95 latency ceilings).
 
     PYTHONPATH=src python benchmarks/serving_throughput.py \
         [--requests 16] [--rate 2.0] [--slots 2] [--seed 0] \
@@ -56,7 +64,7 @@ from repro.serving import EngineConfig, StreamingEngine
 from repro.serving.engine import _mode_shape
 
 MODES = ("greedy", "speculative", "beam", "speculative_beam", "mixed",
-         "decoder_greedy", "decoder_speculative")
+         "decoder_greedy", "decoder_speculative", "priority_mix")
 # the mixed workload's slot groups: cheap greedy probes + speculative
 # forward predictions + beam retrosynthesis expansions in ONE session
 # (requests round-robin over the groups)
@@ -66,37 +74,87 @@ DECODER_ARCH = "smollm-135m"
 DECODER_EOS = 2
 
 
+def _latency_stats(results) -> dict:
+    """p50/p95 end-to-end latency AND queue delay (arrival -> admission)
+    for a result set — queue delay is the SLO-facing half of latency."""
+    lat = np.sort([r.latency for r in results]) if results else np.zeros(1)
+    qd = np.sort([r.queue_delay for r in results]) if results else np.zeros(1)
+    return {
+        "p50": float(np.percentile(lat, 50)),
+        "p95": float(np.percentile(lat, 95)),
+        "queue_delay_p50": float(np.percentile(qd, 50)),
+        "queue_delay_p95": float(np.percentile(qd, 95)),
+    }
+
+
+def _warmup(eng, query) -> None:
+    """Compile the step + admit once, on a throwaway session."""
+    eng.submit(query)
+    eng.serve()
+    eng.reset()
+
+
+def _engine_row(eng, results) -> dict:
+    """The per-mode result row every single-session workload shares:
+    throughput, latency/queue-delay percentiles, acceptance, residency."""
+    makespan = max(r.completed for r in results)
+    acc = sum(r.accepted for r in results)
+    gen = sum(int(r.lengths[0]) for r in results)
+    return {
+        "rps": len(results) / makespan,
+        **_latency_stats(results),
+        "steps": eng.scheduler.n_steps,
+        "acceptance": acc / max(gen, 1),
+        "n_slots": eng.n_slots,
+        "slots_resident": eng.scheduler.max_resident,
+        "preemptions": eng.scheduler.n_preemptions,
+        "cache": eng.cache_footprint(),
+    }
+
+
 def run_mode(mode: str, params, cfg, tok, queries, arrivals, args):
     ecfg = EngineConfig(mode=mode, draft_len=args.draft_len,
                         n_drafts=args.n_drafts, n_beams=args.n_beams,
                         max_new=args.max_new, max_src=96,
                         n_slots=args.slots)
     eng = StreamingEngine(params, cfg, tok, ecfg)
-    # warmup: compile the step + admit once, on a throwaway session
-    eng.submit(queries[0])
-    eng.serve()
-    eng.reset()
+    _warmup(eng, queries[0])
 
     for q, t in zip(queries, arrivals):
         eng.submit(q, arrival=float(t))
     results = list(eng.serve(realtime=True).values())
+    return {"mode": mode, **_engine_row(eng, results)}
 
-    lat = np.sort([r.latency for r in results])
-    makespan = max(r.completed for r in results)
-    acc = sum(r.accepted for r in results)
-    gen = sum(int(r.lengths[0]) for r in results)
-    fp = eng.cache_footprint()
+
+def run_priority_mix(params, cfg, tok, queries, arrivals, args):
+    """Priority/SLO demo: ONE speculative session, the same Poisson
+    stream, alternating high/low priority. High-priority arrivals
+    overtake the queued low-priority backlog at every admission, which
+    shows up as a lower queue-delay p95 for the high class — the number
+    the bench gate tracks."""
+    ecfg = EngineConfig(mode="speculative", draft_len=args.draft_len,
+                        n_drafts=args.n_drafts, max_new=args.max_new,
+                        max_src=96, n_slots=args.slots)
+    eng = StreamingEngine(params, cfg, tok, ecfg)
+    _warmup(eng, queries[0])
+
+    classes = ["high" if i % 2 == 0 else "low"
+               for i in range(len(queries))]
+    cls_of = {}
+    for q, t, cls in zip(queries, arrivals, classes):
+        h = eng.submit(q, arrival=float(t),
+                       priority=1 if cls == "high" else 0)
+        cls_of[int(h)] = cls
+    by_rid = eng.serve(realtime=True)
+    results = list(by_rid.values())
+    per_cls = {cls: [r for rid, r in by_rid.items() if cls_of[rid] == cls]
+               for cls in ("high", "low")}
     return {
-        "mode": mode,
-        "rps": len(results) / makespan,
-        "p50": float(np.percentile(lat, 50)),
-        "p95": float(np.percentile(lat, 95)),
-        "steps": eng.scheduler.n_steps,
-        "acceptance": acc / max(gen, 1),
-        "n_slots": ecfg.n_slots,
-        "slots_resident": eng.scheduler.max_resident,
-        "preemptions": eng.scheduler.n_preemptions,
-        "cache": fp,
+        "mode": "priority_mix",
+        **_engine_row(eng, results),
+        "per_priority": {
+            cls: {"requests": len(rs), **_latency_stats(rs)}
+            for cls, rs in per_cls.items()},
     }
 
 
@@ -137,19 +195,16 @@ def run_mixed(params, cfg, tok, queries, arrivals, args, *, groups=None,
     per_mode = {}
     for m in names:
         rs = [r for r in results if r.mode == m]
-        lat = np.sort([r.latency for r in rs]) if rs else np.zeros(1)
         per_mode[m] = {
             "requests": len(rs),
             "rps": len(rs) / makespan,
-            "p50": float(np.percentile(lat, 50)),
-            "p95": float(np.percentile(lat, 95)),
+            **_latency_stats(rs),
         }
     return {
         "mode": label,
         "groups": {m: int(n) for m, n in groups.items()},
         "rps": len(results) / makespan,
-        "p50": float(np.percentile([r.latency for r in results], 50)),
-        "p95": float(np.percentile([r.latency for r in results], 95)),
+        **_latency_stats(results),
         "steps": eng.scheduler.n_steps,
         "n_slots": eng.n_slots,
         "slots_resident": eng.scheduler.max_resident,
@@ -181,10 +236,7 @@ def run_decoder_mode(mode: str, args):
                             size=int(rng.integers(8, 48))).astype(np.int32)
                for _ in range(args.requests)]
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
-    # warmup: compile step + admit/chunk/finish once, throwaway session
-    eng.submit(prompts[0])
-    eng.serve()
-    eng.reset()
+    _warmup(eng, prompts[0])   # compiles step + admit/chunk/finish once
     traces0 = dict(eng.n_traces)
 
     for p, t in zip(prompts, arrivals):
@@ -192,24 +244,7 @@ def run_decoder_mode(mode: str, args):
     results = list(eng.serve(realtime=True).values())
     assert dict(eng.n_traces) == traces0, \
         f"ragged decoder traffic retraced: {traces0} -> {eng.n_traces}"
-
-    lat = np.sort([r.latency for r in results])
-    makespan = max(r.completed for r in results)
-    acc = sum(r.accepted for r in results)
-    gen = sum(int(r.lengths[0]) for r in results)
-    return {
-        "mode": mode,
-        "arch": cfg.name,
-        "rps": len(results) / makespan,
-        "p50": float(np.percentile(lat, 50)),
-        "p95": float(np.percentile(lat, 95)),
-        "steps": eng.scheduler.n_steps,
-        "acceptance": acc / max(gen, 1),
-        "n_slots": ecfg.n_slots,
-        "slots_resident": eng.scheduler.max_resident,
-        "preemptions": eng.scheduler.n_preemptions,
-        "cache": eng.cache_footprint(),
-    }
+    return {"mode": mode, "arch": cfg.name, **_engine_row(eng, results)}
 
 
 def main() -> None:
@@ -255,6 +290,16 @@ def main() -> None:
             for m, pm in r["per_mode"].items():
                 print(f"  mixed/{m:11s} {pm['rps']:7.2f} {pm['p50']:8.2f}s "
                       f"{pm['p95']:8.2f}s {pm['requests']:5d}r")
+            continue
+        if mode == "priority_mix":
+            r = run_priority_mix(params, cfg, tok, queries, arrivals, args)
+            rows[mode] = r
+            print(f"{r['mode']:18s} {r['rps']:7.2f} {r['p50']:8.2f}s "
+                  f"{r['p95']:8.2f}s {r['steps']:6d} {'':>7s}")
+            for cls, pc in r["per_priority"].items():
+                print(f"  prio/{cls:12s} queue delay p50 "
+                      f"{pc['queue_delay_p50']:6.2f}s  p95 "
+                      f"{pc['queue_delay_p95']:6.2f}s  {pc['requests']:3d}r")
             continue
         if mode.startswith("decoder_"):
             r = run_decoder_mode(mode, args)

@@ -45,7 +45,14 @@ _NEG = -1e30
 
 
 class SessionSpec(NamedTuple):
-    """Static shape/mode bundle; hashable, so one jit per spec."""
+    """Static shape/mode bundle; hashable, so one jit per spec.
+
+    The spec fixes the COMPILE-SHAPE CEILINGS of its slots: every request
+    admitted into the session may use up to ``max_new`` tokens, ``n_beams``
+    beams, ``n_drafts`` drafts of ``draft_len`` tokens, and ``n_stop``
+    extra stop ids. Per-request values below these ceilings ride in
+    ``SessionState`` device arrays (``max_out``/``eff_dl``/``eff_beams``/
+    ``stop_ids``) so ragged generation params change ZERO traced shapes."""
 
     n_slots: int                 # S — concurrent requests
     n_beams: int                 # K — rows per request (1 = greedy family)
@@ -55,6 +62,7 @@ class SessionSpec(NamedTuple):
     eos_id: int
     pad_id: int = 0
     kind: str = "greedy"         # "greedy" (argmax accept) | "beam" (top-k)
+    n_stop: int = 0              # per-slot extra stop ids (0 = eos only)
 
     @property
     def rows_per_slot(self) -> int:
@@ -84,6 +92,14 @@ class SessionState(NamedTuple):
     draft_mask: jnp.ndarray  # (S, N_d) bool
     n_calls: jnp.ndarray     # (S,) decoder forward passes while resident
     accepted: jnp.ndarray    # (S,) committed draft tokens (beam-0 path)
+    # per-request generation params (<= the spec's ceilings; ragged values
+    # never change a traced shape). Equal-to-ceiling values make every
+    # consumer below an algebraic no-op, so default sessions stay
+    # byte-identical to the pre-params step.
+    max_out: jnp.ndarray     # (S,) per-slot token budget (<= spec.max_new)
+    stop_ids: jnp.ndarray    # (S, n_stop) extra stop ids, -1 = unused
+    eff_dl: jnp.ndarray      # (S,) effective draft length (<= DL)
+    eff_beams: jnp.ndarray   # (S,) effective beam width (<= K)
     cache: Any               # model cache, batch rows = S*K*N_d
 
 
@@ -103,18 +119,34 @@ def init_state(spec: SessionSpec, cache: Any) -> SessionState:
         draft_mask=jnp.zeros((S, spec.n_drafts), bool),
         n_calls=jnp.zeros((S,), jnp.int32),
         accepted=jnp.zeros((S,), jnp.int32),
+        max_out=jnp.full((S,), spec.max_new, jnp.int32),
+        stop_ids=jnp.full((S, spec.n_stop), -1, jnp.int32),
+        eff_dl=jnp.full((S,), spec.draft_len, jnp.int32),
+        eff_beams=jnp.full((S,), spec.n_beams, jnp.int32),
         cache=cache,
     )
 
 
 def reset_slot(spec: SessionSpec, state: SessionState, slot,
-               last_token, start_pos, drafts, draft_mask) -> SessionState:
+               last_token, start_pos, drafts, draft_mask, *,
+               max_out=None, stop_ids=None, eff_dl=None,
+               eff_beams=None) -> SessionState:
     """Prefill a slot's algorithm state (the caller populates the model
     cache rows). ``slot`` may be a traced scalar — no recompilation per
     admission. ``last_token``/``start_pos`` are scalars; ``drafts`` is
-    (N_d, DL), ``draft_mask`` (N_d,)."""
+    (N_d, DL), ``draft_mask`` (N_d,). The generation params are optional
+    traced scalars / a (n_stop,) array; omitted values default to the
+    spec's ceilings (the pre-params behavior)."""
     K = spec.n_beams
     beam0 = jnp.where(jnp.arange(K) == 0, 0.0, _NEG).astype(jnp.float32)
+    if max_out is None:
+        max_out = spec.max_new
+    if stop_ids is None:
+        stop_ids = jnp.full((spec.n_stop,), -1, jnp.int32)
+    if eff_dl is None:
+        eff_dl = spec.draft_len
+    if eff_beams is None:
+        eff_beams = spec.n_beams
     return state._replace(
         tokens=state.tokens.at[slot].set(spec.pad_id),
         logp=state.logp.at[slot].set(beam0),
@@ -127,6 +159,11 @@ def reset_slot(spec: SessionSpec, state: SessionState, slot,
         draft_mask=state.draft_mask.at[slot].set(draft_mask),
         n_calls=state.n_calls.at[slot].set(0),
         accepted=state.accepted.at[slot].set(0),
+        max_out=state.max_out.at[slot].set(jnp.int32(max_out)),
+        stop_ids=state.stop_ids.at[slot].set(
+            jnp.asarray(stop_ids, jnp.int32)),
+        eff_dl=state.eff_dl.at[slot].set(jnp.int32(eff_dl)),
+        eff_beams=state.eff_beams.at[slot].set(jnp.int32(eff_beams)),
     )
 
 
@@ -589,6 +626,21 @@ class PageAllocator:
             "page leaked"
 
 
+def _is_stop_token(spec: SessionSpec, tok: jnp.ndarray,
+                   stop_ids: jnp.ndarray) -> jnp.ndarray:
+    """True where ``tok`` terminates its slot's sequence: the session-wide
+    EOS, or one of the slot's per-request ``stop_ids``. ``tok`` is
+    (S, ...); ``stop_ids`` is (S, n_stop) with -1 = unused (token ids are
+    non-negative, so -1 never matches). n_stop == 0 reduces exactly to the
+    EOS-only check."""
+    hit = tok == spec.eos_id
+    if spec.n_stop:
+        extra = jnp.expand_dims(tok, -1) == jnp.expand_dims(
+            stop_ids, tuple(range(1, tok.ndim)))
+        hit = hit | jnp.any(extra, axis=-1)
+    return hit
+
+
 def _accept_lengths(greedy_tok: jnp.ndarray, drafts: jnp.ndarray,
                     draft_mask: jnp.ndarray) -> jnp.ndarray:
     """greedy_tok: (..., N_d, DL+1) argmax predictions; drafts:
@@ -626,30 +678,40 @@ def _greedy_family_step(spec: SessionSpec, handle: DecoderHandle,
     """Speculative greedy (and with DL=0, plain greedy): accept the longest
     argmax-matching draft prefix + one bonus token per slot. K == 1."""
     S, N_d, DL = spec.n_slots, spec.n_drafts, spec.draft_len
-    max_new, eos_id, pad_id = spec.max_new, spec.eos_id, spec.pad_id
+    max_new, pad_id = spec.max_new, spec.pad_id
     logits, cache, _, rel = _forward(spec, handle, state)
 
     finished = state.finished[:, 0] | ~state.active
     last, pos = state.last[:, 0], state.pos[:, 0]
     n_out, out = state.n_out[:, 0], state.tokens[:, 0]
+    max_out = state.max_out                                      # (S,)
 
     greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     greedy_tok = greedy_tok.reshape(S, N_d, DL + 1)
 
     # --- accept / select best draft --------------------------------------
+    # per-request draft windows: clamping the accept length to the slot's
+    # eff_dl BEFORE best-draft selection makes a padded (N_d, DL) draft
+    # matrix behave exactly like a DL'=eff_dl session (causal logits at
+    # positions <= eff_dl are unaffected by the extra fed draft tokens)
     n_acc = _accept_lengths(greedy_tok, state.drafts, state.draft_mask)
+    n_acc = jnp.minimum(n_acc, state.eff_dl[:, None])
     best = jnp.argmax(n_acc, axis=-1).astype(jnp.int32)          # (S,)
+    # inactive slots must not MOVE rows either (their writes already land
+    # in the trash slot/page): a garbage best != 0 would make sync_winner
+    # clobber row 0 of a mid-prefill slot with a sibling's garbage row
+    best = jnp.where(state.active, best, 0)
     n_acc_b = jnp.take_along_axis(n_acc, best[:, None], axis=1)[:, 0]
     new_toks = jnp.take_along_axis(
         greedy_tok, best[:, None, None], axis=1)[:, 0]           # (S, DL+1)
 
-    # --- EOS + budget truncation ------------------------------------------
+    # --- EOS/stop + budget truncation -------------------------------------
     within = rel[None, :] <= n_acc_b[:, None]
-    is_eos = (new_toks == eos_id) & within
+    is_eos = _is_stop_token(spec, new_toks, state.stop_ids) & within
     any_eos = jnp.any(is_eos, axis=1)
     first_eos = jnp.argmax(is_eos, axis=1)
     n_prop = jnp.where(any_eos, first_eos + 1, n_acc_b + 1)
-    budget = max_new - n_out
+    budget = max_out - n_out
     n_app = jnp.minimum(n_prop, budget)
     n_app = jnp.where(finished, 0, n_app)
     hit_eos = any_eos & (first_eos + 1 <= budget) & ~finished
@@ -670,7 +732,7 @@ def _greedy_family_step(spec: SessionSpec, handle: DecoderHandle,
     last = jnp.where(n_app > 0, new_last, last)
     pos = pos + n_app
     n_out = n_out + n_app
-    new_finished = finished | hit_eos | (n_out >= max_new)
+    new_finished = finished | hit_eos | (n_out >= max_out)
     acc_used = jnp.minimum(n_acc_b, n_app)
     return state._replace(
         tokens=out[:, None], last=last[:, None], pos=pos[:, None],
@@ -687,11 +749,12 @@ def _beam_family_step(spec: SessionSpec, handle: DecoderHandle,
     S, K, N_d, DL = (spec.n_slots, spec.n_beams, spec.n_drafts,
                      spec.draft_len)
     A = DL + 1
-    max_new, eos_id, pad_id = spec.max_new, spec.eos_id, spec.pad_id
+    max_new, pad_id = spec.max_new, spec.pad_id
     V = handle.vocab_size
     logits, cache, drafts_rows, rel = _forward(spec, handle, state)
 
     fin = state.finished | ~state.active[:, None]                # (S, K)
+    max_out = state.max_out                                      # (S,)
 
     lp_all = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     lp_all = lp_all.at[:, :, pad_id].set(_NEG)   # pad is never a real emission
@@ -702,7 +765,13 @@ def _beam_family_step(spec: SessionSpec, handle: DecoderHandle,
     d4 = drafts_rows.reshape(S, K, N_d, DL)
     dm = jnp.broadcast_to(state.draft_mask[:, None], (S, K, N_d))
     n_acc = _accept_lengths(greedy_tok, d4, dm)                  # (S, K, N_d)
+    # per-request draft window (see the greedy-family step): clamp BEFORE
+    # best-draft selection so padded drafts act like eff_dl-length ones
+    n_acc = jnp.minimum(n_acc, state.eff_dl[:, None, None])
     best = jnp.argmax(n_acc, axis=-1).astype(jnp.int32)          # (S, K)
+    # inactive slots must not MOVE rows (mid-prefill row-0 protection,
+    # same as the greedy family): identity winner ...
+    best = jnp.where(state.active[:, None], best, 0)
 
     def take_best(x):
         idx = best.reshape(S, K, 1, *([1] * (x.ndim - 3)))
@@ -722,15 +791,25 @@ def _beam_family_step(spec: SessionSpec, handle: DecoderHandle,
     topv, topi = jax.lax.top_k(lp_best, K)                       # (S, K, A, K)
     cand_lp = state.logp[:, :, None, None] + cum[..., None] + topv
     valid_a = rel[None, None, :] <= n_acc_b[..., None]           # (S, K, A)
-    # budget: a+1 tokens must fit the remaining buffer
-    valid_a &= (state.n_out[..., None] + rel[None, None, :] + 1) <= max_new
-    # prefixes may not extend past a draft EOS token
-    draft_eos = jnp.cumsum((draft_best == eos_id).astype(jnp.int32), axis=-1)
+    # budget: a+1 tokens must fit the slot's remaining per-request budget
+    valid_a &= ((state.n_out[..., None] + rel[None, None, :] + 1)
+                <= max_out[:, None, None])
+    # prefixes may not extend past a draft EOS/stop token
+    draft_eos = jnp.cumsum(
+        _is_stop_token(spec, draft_best, state.stop_ids).astype(jnp.int32),
+        axis=-1)
     no_eos_in_prefix = jnp.concatenate(
         [jnp.ones((S, K, 1), jnp.int32), (draft_eos == 0).astype(jnp.int32)],
         axis=-1)
     valid_a &= no_eos_in_prefix.astype(bool)
     cand_lp = jnp.where(valid_a[..., None], cand_lp, _NEG)
+    # per-request beam width: an eff_beams < K request only ever extends
+    # with the top-eff_beams tokens per (parent, prefix) — the candidate
+    # multiset of a true eff_beams-wide search (ranks >= eff_beams at _NEG)
+    k_rank = jnp.arange(K, dtype=jnp.int32)
+    cand_lp = jnp.where(
+        k_rank[None, None, None, :] < state.eff_beams[:, None, None, None],
+        cand_lp, _NEG)
 
     # Same-path dedup: (a, w=draft[a]) with a < n_acc is a strict prefix of a
     # longer candidate in this set; keeping it would crowd out genuine
@@ -750,6 +829,9 @@ def _beam_family_step(spec: SessionSpec, handle: DecoderHandle,
     flat = cand_lp.reshape(S, K * A * K)
     new_logp, flat_idx = jax.lax.top_k(flat, K)                  # (S, K)
     parent = (flat_idx // (A * K)).astype(jnp.int32)
+    # ... and identity parents, so the beam gather below can never pull a
+    # garbage sibling row over a mid-prefill slot's row 0
+    parent = jnp.where(state.active[:, None], parent, k_rank[None, :])
     a_len = ((flat_idx // K) % A).astype(jnp.int32)
     w_tok = jnp.take_along_axis(topi.reshape(S, K * A * K), flat_idx, axis=1)
     was_fin = jnp.take_along_axis(fin, parent, axis=1)
@@ -774,8 +856,14 @@ def _beam_family_step(spec: SessionSpec, handle: DecoderHandle,
     k_ix = jnp.arange(K)[None, :, None]
     out_new = out_p.at[s_ix, k_ix, idx].set(seg, mode="drop")
 
-    new_finished = (was_fin | (w_tok == eos_id)
-                    | (nout_p + n_new >= max_new))
+    new_finished = (was_fin | _is_stop_token(spec, w_tok, state.stop_ids)
+                    | (nout_p + n_new >= max_out[:, None]))
+    # beams past the slot's eff_beams are parked: _NEG log-prob + finished,
+    # so they never spawn candidates and sort last at read-out — the slot
+    # behaves as a true eff_beams-wide search (no-op when eff_beams == K)
+    parked = k_rank[None, :] >= state.eff_beams[:, None]
+    new_logp = jnp.where(parked, _NEG, new_logp)
+    new_finished = new_finished | parked
     new_last = jnp.where(was_fin,
                          jnp.take_along_axis(state.last, parent, axis=1),
                          w_tok)

@@ -7,11 +7,16 @@ via the serving engines — see examples/serve_retrosynthesis.py).
 
 Runs the one-shot greedy vs speculative comparison, then the continuous
 serving pass: the same requests stream through a ``StreamingEngine`` on the
-``DecoderOnlyBackend`` (``repro.serving.backend``) — ragged prompts admitted
-by chunked prefill into fixed decode slots, one jitted step for the whole
-run, optional paged KV cache (``--paged``). The engine's outputs are
-asserted token-identical to the one-shot speculative pass, which is itself
-asserted identical to greedy. Skip the serving pass with --no-continuous.
+``DecoderOnlyBackend`` (``repro.serving.backend``) via the request front
+door (``repro.serving.api``) — ragged prompts admitted by chunked prefill
+into fixed decode slots, one jitted step for the whole run, optional paged
+KV cache (``--paged``). Request 0's tokens are consumed INCREMENTALLY
+through ``handle.stream()`` while the other slots keep decoding, one extra
+request demonstrates per-request ``GenerationParams`` (a private token
+budget under the session ceiling) + ``cancel()``, and every engine output
+is asserted token-identical to the one-shot speculative pass, which is
+itself asserted identical to greedy. Skip the serving pass with
+--no-continuous.
 """
 
 from __future__ import annotations
@@ -27,7 +32,8 @@ from repro.configs import get_config
 from repro.core import (greedy_decode, prompt_lookup_drafts,
                         speculative_greedy_decode, transformer_handle)
 from repro.models import transformer as tr
-from repro.serving import EngineConfig, StreamingEngine
+from repro.serving import (EngineConfig, GenerationParams, RequestCancelled,
+                           StreamingEngine)
 
 EOS_ID = 2
 
@@ -45,22 +51,44 @@ def continuous_demo(params, cfg, prompts, args, expected=None) -> None:
         paged=args.paged, page_size=args.page_size)
     eng = StreamingEngine(params, cfg, None, ecfg)
     # stagger arrivals so admissions interleave with running decodes
-    rids = [eng.submit(row, arrival=float(3 * i))
-            for i, row in enumerate(prompts)]
+    handles = [eng.submit(row, arrival=float(3 * i))
+               for i, row in enumerate(prompts)]
+    # per-request params: a low-budget probe sharing the session, plus a
+    # cancelled request that never runs (queued -> dequeued)
+    probe = eng.submit(prompts[0],
+                       params=GenerationParams(max_new=args.max_new // 2))
+    doomed = eng.submit(prompts[0], arrival=float(3 * B))
+    assert doomed.cancel() and doomed.status == "cancelled"
     t0 = time.time()
-    results = eng.serve()
+    # request 0 consumed incrementally: each delta is committed tokens from
+    # one scheduler iteration (the other slots decode in between)
+    deltas = list(handles[0].stream())
+    results = eng.serve()      # drain the rest of the queue
     dt = time.time() - t0
-    acc = sum(r.accepted for r in results.values())
-    gen = sum(int(r.lengths[0]) for r in results.values())
-    print(f"continuous  : {B} requests over {ecfg.n_slots} slots "
+    ok = [r for r in results.values() if r.status == "ok"]
+    acc = sum(r.accepted for r in ok)
+    gen = sum(int(r.lengths[0]) for r in ok)
+    print(f"continuous  : {B + 1} requests over {ecfg.n_slots} slots "
           f"({'paged' if args.paged else 'dense'} cache, "
           f"chunk={ecfg.prefill_chunk}), {eng.scheduler.n_steps} steps, "
-          f"{dt:.2f}s, acceptance={acc / max(gen, 1):.2f}")
+          f"{dt:.2f}s, acceptance={acc / max(gen, 1):.2f}, "
+          f"{len(deltas)} stream deltas for request 0")
+    r0 = handles[0].result()
+    np.testing.assert_array_equal(
+        np.concatenate(deltas) if deltas else np.zeros((0,), np.int32),
+        r0.tokens[0][:int(r0.lengths[0])])
+    assert int(probe.result().lengths[0]) <= args.max_new // 2
+    try:
+        doomed.result()
+        raise AssertionError("cancelled request returned a result")
+    except RequestCancelled:
+        pass
     if expected is not None:
-        for rid, want in zip(rids, expected):
+        for h, want in zip(handles, expected):
             np.testing.assert_array_equal(
-                np.asarray(results[rid].tokens[0]), np.asarray(want))
-        print("continuous == one-shot speculative: True")
+                np.asarray(results[h].tokens[0]), np.asarray(want))
+        print("continuous == one-shot speculative: True "
+              "(stream deltas == committed tokens)")
 
 
 def main() -> None:

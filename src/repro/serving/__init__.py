@@ -1,3 +1,5 @@
+from repro.serving.api import (MAX_STOP_IDS, GenerationParams,
+                               RequestCancelled, RequestHandle, RequestSpec)
 from repro.serving.backend import (DecoderOnlyBackend, Seq2SeqBackend,
                                    make_backend)
 from repro.serving.engine import (EngineConfig, Prediction, ReactionEngine,
@@ -7,4 +9,6 @@ from repro.serving.scheduler import (ContinuousScheduler, ScheduledRequest,
 
 __all__ = ["ReactionEngine", "StreamingEngine", "EngineConfig", "Prediction",
            "ContinuousScheduler", "ScheduledRequest", "SlotResult",
-           "Seq2SeqBackend", "DecoderOnlyBackend", "make_backend"]
+           "Seq2SeqBackend", "DecoderOnlyBackend", "make_backend",
+           "GenerationParams", "RequestSpec", "RequestHandle",
+           "RequestCancelled", "MAX_STOP_IDS"]

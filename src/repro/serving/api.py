@@ -1,0 +1,204 @@
+"""Request-level serving API — the StreamingEngine's front door.
+
+The engine's compile-time surface (``EngineConfig`` + per-group
+``SessionSpec``) fixes CEILINGS: slot counts, the widest beam, the longest
+draft, the largest token budget. Real CASP traffic — a retrosynthesis
+search tree firing thousands of single-step calls with wildly different
+beam widths, token budgets, and urgencies, abandoning branches as soon as
+a better route appears — needs *per-request* control under those ceilings.
+This module is that contract:
+
+``GenerationParams``
+    Per-request decode knobs (``max_new``, ``draft_len``, ``n_drafts``,
+    ``n_beams``, extra ``stop_ids``), each validated against the owning
+    slot group's ceilings at submit time. Ragged values ride in
+    ``SessionState`` device arrays (``repro.core.session``), so they
+    change ZERO traced shapes — a stream of heterogeneous params never
+    recompiles anything after the per-group warmup.
+
+``RequestSpec``
+    A full request: payload + params + scheduling metadata (``priority``
+    — higher admitted first among arrived requests; ``deadline`` — the
+    request expires, queued or resident, once the serving clock passes
+    it; ``arrival`` — open/closed-loop arrival time).
+
+``RequestHandle``
+    Returned by ``StreamingEngine.submit()``. An ``int`` subclass (it IS
+    the request id, so every pre-existing ``{rid: SlotResult}`` workflow
+    keeps working) exposing the per-request control surface:
+
+      ``.result()``   drive the engine until this request finishes and
+                      return its ``SlotResult`` (raises
+                      ``RequestCancelled`` if it was cancelled/expired)
+      ``.stream()``   iterate incremental committed-token deltas as
+                      scheduler iterations complete (greedy-family modes
+                      stream mid-flight; beam modes deliver the winning
+                      beam once, at completion — beams reorder freely
+                      until then, so mid-flight deltas would lie)
+      ``.cancel()``   queued: dequeue; resident: evict the slot and
+                      reclaim its pages mid-flight — co-resident requests
+                      are unaffected (row-independence invariant)
+      ``.status``     "queued" | "running" | "done" | "cancelled" |
+                      "expired" | "unknown" (not in this session: the
+                      engine was reset() or the terminal record aged out)
+
+The blocking calls all drive ONE engine pump (``serve_steps``), so
+``h.result()``, ``h.stream()``, and ``engine.serve()`` compose freely on
+a single session.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+# per-slot extra stop ids the engine compiles room for (SessionSpec.n_stop
+# ceiling); requests may use any subset, -1 marks unused entries
+MAX_STOP_IDS = 4
+
+
+class RequestCancelled(RuntimeError):
+    """Raised by ``RequestHandle.result()``/``.stream()`` when the request
+    was cancelled (``reason="cancelled"``) or missed its deadline
+    (``reason="expired"``) instead of finishing."""
+
+    def __init__(self, rid: int, reason: str):
+        super().__init__(f"request {rid} {reason}")
+        self.rid = rid
+        self.reason = reason
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationParams:
+    """Per-request decode knobs; ``None`` = the owning group's ceiling.
+
+    Every value must fit under the group's compile-shape ceiling
+    (``resolve`` validates), which is what keeps ragged params free: a
+    smaller ``max_new`` / ``draft_len`` / ``n_drafts`` / ``n_beams`` is a
+    masked no-op inside the same jitted step, never a new trace."""
+
+    max_new: int | None = None        # token budget
+    draft_len: int | None = None      # speculative draft window
+    n_drafts: int | None = None       # drafts verified per step
+    n_beams: int | None = None        # beam width (beam-family groups)
+    stop_ids: tuple[int, ...] = ()    # extra stop tokens (EOS always stops)
+
+    def resolve(self, spec) -> "ResolvedParams":
+        """Validate against a ``SessionSpec``'s ceilings and fill defaults."""
+
+        def pick(name, value, ceiling, lo):
+            if value is None:
+                return ceiling
+            if not lo <= value <= ceiling:
+                raise ValueError(
+                    f"GenerationParams.{name}={value} outside "
+                    f"[{lo}, {ceiling}] (the slot group's compile-shape "
+                    f"ceiling; raise EngineConfig.{name} to serve larger "
+                    f"requests)")
+            return int(value)
+
+        stop = tuple(int(t) for t in self.stop_ids)
+        if len(stop) > spec.n_stop:
+            raise ValueError(
+                f"{len(stop)} stop_ids exceed the session's n_stop="
+                f"{spec.n_stop} ceiling")
+        if any(t < 0 for t in stop):
+            raise ValueError(f"stop_ids must be non-negative, got {stop}")
+        return ResolvedParams(
+            max_new=pick("max_new", self.max_new, spec.max_new, 1),
+            draft_len=pick("draft_len", self.draft_len, spec.draft_len, 0),
+            n_drafts=pick("n_drafts", self.n_drafts, spec.n_drafts, 1),
+            n_beams=pick("n_beams", self.n_beams, spec.n_beams, 1),
+            stop_ids=stop)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedParams:
+    """``GenerationParams`` with defaults filled from a group's spec —
+    what backends consume for host-side prep (draft extraction) and what
+    the jitted admit writes into the slot's device params."""
+
+    max_new: int
+    draft_len: int
+    n_drafts: int
+    n_beams: int
+    stop_ids: tuple[int, ...]
+
+    def device_args(self, spec) -> tuple:
+        """The fixed-shape traced args for ``reset_slot``: (max_out (),
+        stop_ids (n_stop,), eff_dl (), eff_beams ()). Shapes/dtypes never
+        vary, so heterogeneous params reuse one admit trace."""
+        stop = np.full((spec.n_stop,), -1, np.int32)
+        stop[:len(self.stop_ids)] = self.stop_ids
+        return (jnp.int32(self.max_new), jnp.asarray(stop),
+                jnp.int32(self.draft_len), jnp.int32(self.n_beams))
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestSpec:
+    """One fully-specified request for ``StreamingEngine.submit_spec``.
+
+    ``priority``: higher runs first among arrived requests (FIFO within a
+    priority class). ``deadline``: serving-clock time (steps closed-loop,
+    seconds realtime) after which the request expires instead of running.
+    """
+
+    query: Any
+    params: GenerationParams = GenerationParams()
+    mode: str | None = None
+    priority: int = 0
+    deadline: float | None = None
+    arrival: float = 0.0
+
+
+class RequestHandle(int):
+    """The live view of a submitted request. ``int(handle)`` is the
+    request id (and the handle hashes/compares as that id), so it drops
+    into every ``{rid: SlotResult}`` map the engine returns."""
+
+    def __new__(cls, rid: int, engine, *, mode=None,
+                params: "ResolvedParams | None" = None):
+        self = super().__new__(cls, rid)
+        self._engine = engine
+        self.mode = mode
+        self.params = params
+        return self
+
+    @property
+    def rid(self) -> int:
+        return int(self)
+
+    # ------------------------------------------------------------- queries
+    @property
+    def status(self) -> str:
+        return self._engine.request_status(self.rid)
+
+    def done(self) -> bool:
+        """True once the request can make no further progress — finished,
+        cancelled, expired, or no longer part of the session ("unknown",
+        e.g. after ``engine.reset()``)."""
+        return self.status not in ("queued", "running")
+
+    # ------------------------------------------------------------- control
+    def result(self):
+        """Drive the engine until this request terminates; return its
+        ``SlotResult``. Raises ``RequestCancelled`` on cancel/expiry."""
+        r = self._engine.wait(self.rid)
+        if r.status != "ok":
+            raise RequestCancelled(self.rid, r.status)
+        return r
+
+    def stream(self) -> Iterator[np.ndarray]:
+        """Yield committed-token deltas (1-D int32 arrays) as scheduler
+        iterations complete, ending when the request finishes. Concatenated
+        deltas equal ``result().tokens[0][:lengths[0]]`` exactly."""
+        return self._engine.stream(self.rid)
+
+    def cancel(self) -> bool:
+        """Abandon the request: dequeue if queued, evict + reclaim pages
+        if resident. Returns False when it already reached a terminal
+        state (finished results stay available)."""
+        return self._engine.cancel(self.rid)

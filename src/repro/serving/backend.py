@@ -56,6 +56,7 @@ from repro.core import (batch_drafts, prompt_lookup_drafts, seq2seq_handle,
                         transformer_handle)
 from repro.core.handles import DecoderHandle
 from repro.core.session import SessionSpec, unmap_cache_rows
+from repro.serving.api import GenerationParams
 from repro.core.tree_batch import (dynamic_merge_rows, dynamic_slice_rows,
                                    set_rows)
 from repro.models import attention as attn_mod
@@ -72,10 +73,29 @@ class Request:
     (chunked) call — traced, so their *values* never retrace anything.
     ``chunks``: ``[(tokens (C,), pos0, n_valid)]`` fixed-shape prefill
     chunks (empty for monolithic backends and one-token prompts).
+    ``gen``: the request's generation-param bundle for ``reset_slot``
+    (``ResolvedParams.device_args`` — fixed shapes, ragged values).
+    ``params``: the host-side ``ResolvedParams`` (read-out trimming).
     """
 
     args: tuple
     chunks: list
+    gen: tuple = ()
+    params: object = None
+
+
+def _pad_drafts(drafts: np.ndarray, dmask: np.ndarray, spec: SessionSpec):
+    """Pad a per-request (n_d', dl') draft matrix to the group's
+    compile-shape (N_d, DL) ceiling. Pad rows are masked out and pad
+    columns sit beyond the slot's ``eff_dl`` clamp, so the device step
+    treats the padded matrix exactly like the smaller one."""
+    if drafts.shape == (spec.n_drafts, spec.draft_len):
+        return drafts, dmask
+    out = np.zeros((spec.n_drafts, spec.draft_len), np.int32)
+    mask = np.zeros((spec.n_drafts,), bool)
+    out[:drafts.shape[0], :drafts.shape[1]] = drafts
+    mask[:dmask.shape[0]] = dmask
+    return out, mask
 
 
 def _clean_rows(cache, rows):
@@ -156,8 +176,15 @@ class Seq2SeqBackend:
         return cfg.n_layers * 2 * cfg.n_kv_heads * cfg.head_dim * 4
 
     # ---- host-side request prep ------------------------------------------
-    def make_request(self, query, spec: SessionSpec) -> Request:
+    def make_request(self, query, spec: SessionSpec, params=None) -> Request:
+        """``params`` is a resolved ``GenerationParams`` (defaults = the
+        group's ceilings). Drafts are extracted at the REQUEST's draft
+        window — a shorter window yields different source substrings, so
+        extraction must match what a draft_len=params.draft_len engine
+        would do — then padded to the group's (N_d, DL) compile shape."""
         ecfg = self.ecfg
+        if params is None:
+            params = GenerationParams().resolve(spec)
         if isinstance(query, str):
             src = np.asarray(self.tok.encode_padded(query, ecfg.max_src,
                                                     add_eos=True), np.int32)
@@ -165,17 +192,19 @@ class Seq2SeqBackend:
             src = np.zeros((ecfg.max_src,), np.int32)
             q = np.asarray(query, np.int32).reshape(-1)
             src[:len(q)] = q[:ecfg.max_src]
-        if spec.draft_len > 0:
-            drafts_b, dmask_b = batch_drafts(src[None], spec.draft_len,
-                                             spec.n_drafts,
+        dl, nd = params.draft_len, params.n_drafts
+        if dl > 0:
+            drafts_b, dmask_b = batch_drafts(src[None], dl, nd,
                                              dilations=ecfg.dilations)
             drafts, dmask = drafts_b[0], dmask_b[0]
         else:
-            drafts = np.zeros((spec.n_drafts, 0), np.int32)
-            dmask = np.ones((spec.n_drafts,), bool)
+            drafts = np.zeros((nd, 0), np.int32)
+            dmask = np.ones((nd,), bool)
+        drafts, dmask = _pad_drafts(drafts, dmask, spec)
         return Request(args=(jnp.asarray(src), jnp.asarray(drafts),
                              jnp.asarray(dmask)),
-                       chunks=[])
+                       chunks=[], gen=params.device_args(spec),
+                       params=params)
 
     # ---- device-side admission (inside the engine's jitted admit) --------
     def admit_cache(self, params, cache, rows, src, drafts, dmask):
@@ -253,8 +282,10 @@ class DecoderOnlyBackend:
                 * 2 * cfg.n_kv_heads * cfg.head_dim * 4)
 
     # ---- host-side request prep ------------------------------------------
-    def make_request(self, query, spec: SessionSpec) -> Request:
+    def make_request(self, query, spec: SessionSpec, params=None) -> Request:
         ecfg = self.ecfg
+        if params is None:
+            params = GenerationParams().resolve(spec)
         if isinstance(query, str):
             if self.tok is None:
                 raise ValueError("string queries need a tokenizer; submit "
@@ -266,13 +297,14 @@ class DecoderOnlyBackend:
         if not 1 <= P <= ecfg.max_src:
             raise ValueError(f"prompt length {P} outside [1, "
                              f"max_src={ecfg.max_src}]")
-        if spec.draft_len > 0:
+        dl, nd = params.draft_len, params.n_drafts
+        if dl > 0:
             drafts, dmask = prompt_lookup_drafts(
-                prompt, spec.draft_len, spec.n_drafts,
-                dilations=ecfg.dilations)
+                prompt, dl, nd, dilations=ecfg.dilations)
         else:
-            drafts = np.zeros((spec.n_drafts, 0), np.int32)
-            dmask = np.ones((spec.n_drafts,), bool)
+            drafts = np.zeros((nd, 0), np.int32)
+            dmask = np.ones((nd,), bool)
+        drafts, dmask = _pad_drafts(drafts, dmask, spec)
         # chunk the prompt minus its final token (which seeds decoding as
         # ``last``); every chunk is the same fixed shape (C,), so a ragged
         # stream of prompt lengths never retraces — only the chunk COUNT
@@ -288,7 +320,7 @@ class DecoderOnlyBackend:
         return Request(
             args=(jnp.int32(prompt[P - 1]), jnp.int32(P - 1),
                   jnp.asarray(drafts), jnp.asarray(dmask)),
-            chunks=chunks)
+            chunks=chunks, gen=params.device_args(spec), params=params)
 
     # ---- device-side admission pieces -------------------------------------
     def begin_cache(self, cache, rows):

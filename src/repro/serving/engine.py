@@ -49,6 +49,18 @@ admitting one mode never retraces another group, and page-gated
 admission/preemption arbitrate the shared pool across all groups.
 ``tests/test_mixed_mode.py`` verifies every request in a mixed session is
 token-identical to the corresponding single-mode engine run.
+
+Request front door (``repro.serving.api``): ``submit()`` returns a
+``RequestHandle`` (an ``int`` — the request id — so legacy
+``{rid: SlotResult}`` flows are untouched) and accepts per-request
+``GenerationParams`` (validated against the group's compile-shape
+ceilings; ragged values ride in device arrays, changing zero traced
+shapes), a ``priority``, and a ``deadline``. ``serve_steps()`` is the
+step-driven generator the blocking ``serve()`` wraps; between iterations
+it feeds committed-token deltas to any ``handle.stream()`` consumers.
+``handle.cancel()`` dequeues a queued request or evicts a resident one
+mid-flight, reclaiming its pages. ``predict``/``predict_topn`` are thin
+compatibility wrappers over this surface.
 """
 
 from __future__ import annotations
@@ -71,6 +83,8 @@ from repro.core.session import (GroupedState, PageAllocator, PoolExhausted,
                                 release_slot, reset_slot, unmap_cache_rows)
 from repro.data.tokenizer import SmilesTokenizer
 from repro.models import seq2seq as s2s
+from repro.serving.api import (MAX_STOP_IDS, GenerationParams,
+                               RequestCancelled, RequestHandle, RequestSpec)
 from repro.serving.backend import make_backend
 from repro.serving.scheduler import ContinuousScheduler, SlotResult
 
@@ -107,6 +121,30 @@ class EngineConfig:
     # from here when StreamingEngine is built with tokenizer=None
     eos_id: int | None = None
     pad_id: int = 0
+
+    def __post_init__(self):
+        """Fail at construction, not as a deep shape/assert error later."""
+        for name, lo in (("max_new", 1), ("max_src", 1), ("draft_len", 0),
+                         ("n_drafts", 1), ("n_beams", 1), ("n_slots", 1),
+                         ("prefill_chunk", 1), ("page_size", 1)):
+            if getattr(self, name) < lo:
+                raise ValueError(f"EngineConfig.{name}={getattr(self, name)} "
+                                 f"must be >= {lo}")
+        if self.n_pages is not None and self.n_pages < 2:
+            raise ValueError(
+                f"EngineConfig.n_pages={self.n_pages}: a paged pool needs at "
+                f"least the reserved trash page plus one usable page "
+                f"(PageAllocator additionally validates the pool against one "
+                f"slot's worst case)")
+        modes = (dict(self.mode_groups) if self.mode_groups
+                 else {self.mode: self.n_slots})
+        for mode, n in modes.items():
+            if mode not in ("greedy", "speculative", "beam",
+                            "speculative_beam"):
+                raise ValueError(f"unknown decode mode {mode!r}")
+            if int(n) < 1:
+                raise ValueError(f"mode group {mode!r} needs >= 1 slot, "
+                                 f"got {n}")
 
 
 @dataclasses.dataclass
@@ -287,7 +325,9 @@ class StreamingEngine:
         eos_id = tokenizer.eos_id if tokenizer is not None else ecfg.eos_id
         pad_id = tokenizer.pad_id if tokenizer is not None else ecfg.pad_id
         if eos_id is None:
-            raise ValueError("no tokenizer: set EngineConfig.eos_id")
+            raise ValueError(
+                "StreamingEngine built with tokenizer=None needs "
+                "EngineConfig.eos_id so sequences can terminate")
         group_slots = (dict(ecfg.mode_groups) if ecfg.mode_groups
                        else {ecfg.mode: ecfg.n_slots})
         self._groups: dict[str, SessionSpec] = {}
@@ -296,7 +336,7 @@ class StreamingEngine:
             self._groups[mode] = SessionSpec(
                 n_slots=int(n_slots), n_beams=K, n_drafts=N_d, draft_len=DL,
                 max_new=ecfg.max_new, eos_id=eos_id,
-                pad_id=pad_id, kind=kind)
+                pad_id=pad_id, kind=kind, n_stop=MAX_STOP_IDS)
         self.mode_names = list(self._groups)
         self.default_mode = (ecfg.mode if ecfg.mode in self._groups
                              else self.mode_names[0])
@@ -337,7 +377,22 @@ class StreamingEngine:
         self._prefilling: dict[int, dict] = {}
         self._decoding: set[int] = set()
         self.allocator: PageAllocator | None = None
+        # request-level front door state: terminal records by rid (the
+        # handles' view; reset() drops it), the current serve() epoch's
+        # records, live stream cursors/buffers, and the single step pump
+        # every blocking call drives
+        self._done: dict[int, SlotResult] = {}
+        self._epoch: dict[int, SlotResult] = {}
+        self._streams: dict[int, dict] = {}
+        self._pump = None
+        self._pump_realtime = False
         self.scheduler = self._new_scheduler()
+
+    # terminal records kept for RequestHandle.result()/.status after their
+    # serve() epoch: bounded so an hours-long session (the search-tree
+    # workload) cannot grow without limit — oldest insertions evict first,
+    # and an evicted rid reports "unknown" (consume results promptly)
+    _DONE_CAP = 4096
 
     # -- jitted session functions (compiled ONCE per engine group, every
     #    request and every slot of the group reuses them) -------------------
@@ -364,7 +419,11 @@ class StreamingEngine:
         query, scatter cross-attn K/V + memory mask, reset the slot's
         decode state. Chunked backends only recycle the slot's cache rows;
         the prompt then streams in via ``_make_chunk`` and the slot
-        activates in ``_make_finish``."""
+        activates in ``_make_finish``.
+
+        ``gen`` is the request's fixed-shape generation-param bundle
+        (``ResolvedParams.device_args``): traced VALUES, so heterogeneous
+        per-request params reuse this one trace."""
         spec = self._groups[mode]
         gi = self.mode_names.index(mode)
         be = self.backend
@@ -378,13 +437,16 @@ class StreamingEngine:
 
             return jax.jit(admit, donate_argnums=(1,))
 
-        def admit(params, gstate, slot, *args):
+        def admit(params, gstate, slot, gen, *args):
             self.n_traces["admit", mode] += 1
             rows = self._slot_rows(mode, slot)
             cache = be.admit_cache(params, gstate.cache, rows, *args)
             last, pos0, drafts, dmask = be.reset_args(*args)
+            max_out, stop_ids, eff_dl, eff_beams = gen
             gs = reset_slot(spec, gstate.groups[gi], slot, last, pos0,
-                            drafts, dmask)
+                            drafts, dmask, max_out=max_out,
+                            stop_ids=stop_ids, eff_dl=eff_dl,
+                            eff_beams=eff_beams)
             return self._swap_group(
                 GroupedState(groups=gstate.groups, cache=cache), gi, gs)
 
@@ -414,13 +476,16 @@ class StreamingEngine:
         gi = self.mode_names.index(mode)
         be = self.backend
 
-        def finish(params, gstate, slot, *args):
+        def finish(params, gstate, slot, gen, *args):
             self.n_traces["finish", mode] += 1
             rows = self._slot_rows(mode, slot)
             cache = be.finish_cache(gstate.cache, rows)
             last, pos0, drafts, dmask = be.reset_args(*args)
+            max_out, stop_ids, eff_dl, eff_beams = gen
             gs = reset_slot(spec, gstate.groups[gi], slot, last, pos0,
-                            drafts, dmask)
+                            drafts, dmask, max_out=max_out,
+                            stop_ids=stop_ids, eff_dl=eff_dl,
+                            eff_beams=eff_beams)
             return self._swap_group(
                 GroupedState(groups=gstate.groups, cache=cache), gi, gs)
 
@@ -524,7 +589,8 @@ class StreamingEngine:
                 rec["next"] += 1
             if rec["next"] >= len(req.chunks):
                 state = self._finish_fns[mode](self.params, state,
-                                               jnp.int32(local), *req.args)
+                                               jnp.int32(local), req.gen,
+                                               *req.args)
                 self._prestep_state = state
                 del self._prefilling[slot]
                 self._decoding.add(slot)
@@ -553,7 +619,8 @@ class StreamingEngine:
             if not self.backend.chunked:
                 self._decoding.add(slot)
                 return self._admit_fns[mode](self.params, state,
-                                             jnp.int32(local), *req.args)
+                                             jnp.int32(local), req.gen,
+                                             *req.args)
             # chunked: recycle the rows now; the prompt streams in via the
             # pre-step pump and the slot activates when it is fully written
             state = self._admit_fns[mode](self.params, state,
@@ -644,8 +711,11 @@ class StreamingEngine:
                 "contiguous_equiv_slots": self.n_slots}
 
     # -- request plumbing ----------------------------------------------------
-    def _payload(self, query, mode: str):
-        return (mode, self.backend.make_request(query, self._groups[mode]))
+    def _payload(self, query, mode: str,
+                 params: GenerationParams | None = None):
+        spec = self._groups[mode]
+        rp = (params or GenerationParams()).resolve(spec)
+        return (mode, self.backend.make_request(query, spec, rp))
 
     def _read_slot(self, state, slot: int) -> dict:
         mode, local = self._slot_of(slot)
@@ -654,10 +724,18 @@ class StreamingEngine:
         order = (np.argsort(-np.asarray(gs.logp[local]), kind="stable")
                  if spec.kind == "beam"
                  else np.arange(spec.n_beams))
+        # per-request params trim the read-out to the request's own shape
+        # (spec-ceiling requests read the full buffers — the legacy view)
+        eff_k, eff_new = spec.n_beams, spec.max_new
+        sreq = self.scheduler._resident.get(slot)
+        if sreq is not None:
+            rp = sreq.payload[1].params
+            if rp is not None:
+                eff_k, eff_new = rp.n_beams, rp.max_new
         return dict(
-            tokens=np.asarray(gs.tokens[local])[order],
-            lengths=np.asarray(gs.n_out[local])[order],
-            logprobs=np.asarray(gs.logp[local])[order],
+            tokens=np.asarray(gs.tokens[local])[order][:eff_k, :eff_new],
+            lengths=np.asarray(gs.n_out[local])[order][:eff_k],
+            logprobs=np.asarray(gs.logp[local])[order][:eff_k],
             n_calls=int(gs.n_calls[local]),
             accepted=int(gs.accepted[local]),
         )
@@ -681,25 +759,211 @@ class StreamingEngine:
         """Drop all queued/resident requests and start a fresh session.
         The jitted step/admit functions (and their compilations) survive."""
         self.scheduler = self._new_scheduler()
+        self._done, self._epoch, self._streams = {}, {}, {}
+        self._pump = None
+        self._pump_realtime = False
 
     def submit(self, query, *, arrival: float = 0.0,
-               mode: str | None = None) -> int:
-        """Enqueue a request; returns its id. ``query`` is a string
-        (tokenized by the engine's tokenizer) or a 1-D array of token ids
-        (decoder-only sessions without a chemistry tokenizer). ``arrival``
-        delays admission (steps in closed-loop serve(), seconds in
-        realtime serve()); ``mode`` routes the request to that slot group
-        (default: the engine's primary mode)."""
+               mode: str | None = None,
+               params: GenerationParams | None = None,
+               priority: int = 0,
+               deadline: float | None = None) -> RequestHandle:
+        """Enqueue a request; returns its ``RequestHandle`` (an ``int`` —
+        the request id — exposing ``.result()``/``.stream()``/
+        ``.cancel()``). ``query`` is a string (tokenized by the engine's
+        tokenizer) or a 1-D array of token ids (decoder-only sessions
+        without a chemistry tokenizer). ``arrival`` delays admission
+        (steps in closed-loop serve(), seconds in realtime serve());
+        ``mode`` routes the request to that slot group (default: the
+        engine's primary mode); ``params`` sets per-request generation
+        knobs under the group's ceilings; higher ``priority`` admits
+        first among arrived requests; past its ``deadline`` (serving
+        clock) the request expires instead of running."""
         mode = self.default_mode if mode is None else mode
         if mode not in self._groups:
             raise KeyError(f"engine serves {self.mode_names}, got {mode!r}")
-        return self.scheduler.submit(self._payload(query, mode),
-                                     arrival=arrival, mode=mode)
+        payload = self._payload(query, mode, params)
+        rid = self.scheduler.submit(payload, arrival=arrival, mode=mode,
+                                    priority=priority, deadline=deadline)
+        return RequestHandle(rid, self, mode=mode,
+                             params=payload[1].params)
+
+    def submit_spec(self, rspec: RequestSpec) -> RequestHandle:
+        """Submit a fully-specified ``RequestSpec`` (the planner-facing
+        form of ``submit``)."""
+        return self.submit(rspec.query, arrival=rspec.arrival,
+                           mode=rspec.mode, params=rspec.params,
+                           priority=rspec.priority, deadline=rspec.deadline)
+
+    # -- step pump: one drive shared by serve()/result()/stream() -----------
+    def serve_steps(self, *, realtime: bool = False):
+        """Step-driven serving: a generator yielding the list of terminal
+        ``SlotResult``s after every scheduler iteration (often empty)
+        until the queue drains. Streaming token deltas are collected
+        between iterations.
+
+        Returns THE session's shared pump — the same drive that
+        ``serve()`` and ``RequestHandle.result()``/``.stream()`` advance —
+        so external stepping composes with the blocking calls instead of
+        racing a second drive (and a second clock) against them. Once a
+        drive drains, get a fresh generator for later submissions rather
+        than resuming a kept reference."""
+        return self._ensure_pump(realtime=realtime)
+
+    def _serve_steps_impl(self, realtime: bool):
+        for events in self.scheduler.steps(self._read_slot,
+                                           realtime=realtime):
+            self._collect_streams()
+            for r in events:
+                self._finish_result(r)
+            yield events
+
+    def _ensure_pump(self, realtime: bool = False):
+        if self._pump is None:
+            self._pump = self._serve_steps_impl(realtime)
+            self._pump_realtime = realtime
+        return self._pump
+
+    def _pump_once(self) -> bool:
+        """Advance the shared pump one scheduler iteration; False once the
+        queue is drained. A pump whose drive has drained (nothing queued or
+        resident) is disposed EAGERLY — not just on StopIteration — so
+        work submitted after a completed drive starts a fresh one that can
+        pick its own clock mode (serve(realtime=...))."""
+        pump = self._ensure_pump()
+        try:
+            next(pump)
+        except StopIteration:
+            self._pump = None
+            return False
+        if not self.scheduler.pending:
+            self._pump = None
+        return True
+
+    def _finish_result(self, r: SlotResult) -> None:
+        self._done[r.rid] = r
+        self._epoch[r.rid] = r
+        # both stores are bounded (oldest insertion evicts): a session
+        # driven purely through handles never calls serve(), so the epoch
+        # dict must not grow with total requests served either
+        while len(self._done) > self._DONE_CAP:
+            self._done.pop(next(iter(self._done)))
+        while len(self._epoch) > self._DONE_CAP:
+            self._epoch.pop(next(iter(self._epoch)))
+        st = self._streams.get(r.rid)
+        if st is not None and not st["done"]:
+            self._flush_stream_tail(st, r)
+
+    def _flush_stream_tail(self, st: dict, r: SlotResult) -> None:
+        """Final stream chunk: greedy-family tails from the cursor; beam
+        modes deliver the winning beam whole (beams reorder mid-flight,
+        so only the terminal ranking is truthful)."""
+        if r.status == "ok" and r.tokens.shape[0]:
+            kind = self._groups[r.mode].kind if r.mode in self._groups \
+                else "greedy"
+            lo = st["n"] if kind == "greedy" else 0
+            tail = np.asarray(r.tokens[0][lo:int(r.lengths[0])])
+            if tail.size:
+                st["buf"].append(tail)
+        st["done"] = True
+
+    def _collect_streams(self) -> None:
+        """Read committed-token deltas for every resident request with a
+        live ``stream()`` consumer (greedy-family slots stream mid-flight;
+        beam slots deliver at completion via the tail flush)."""
+        live = {rid: st for rid, st in self._streams.items()
+                if not st["done"]}
+        if not live:
+            return
+        state = self.scheduler.state
+        for slot, sreq in list(self.scheduler._resident.items()):
+            st = live.get(sreq.rid)
+            if st is None or slot in self._prefilling:
+                continue
+            mode, local = self._slot_of(slot)
+            if self._groups[mode].kind != "greedy":
+                continue
+            gs = state.groups[self.mode_names.index(mode)]
+            n = int(gs.n_out[local, 0])
+            if n > st["n"]:
+                st["buf"].append(np.asarray(gs.tokens[local, 0, st["n"]:n]))
+                st["n"] = n
+
+    # -- request-level control (the RequestHandle surface) -------------------
+    def request_status(self, rid: int) -> str:
+        r = self._done.get(rid)
+        if r is not None:
+            return {"ok": "done"}.get(r.status, r.status)
+        if any(sr.rid == rid for sr in self.scheduler._resident.values()):
+            return "running"
+        if rid in self.scheduler._queued_by_rid:
+            return "queued"
+        # not in this session: reset() dropped it, it belongs to another
+        # engine, or its terminal record aged out of the bounded store —
+        # never "queued", so a done() poller cannot spin forever
+        return "unknown"
+
+    def wait(self, rid: int) -> SlotResult:
+        """Drive the pump until ``rid`` reaches a terminal record."""
+        while rid not in self._done:
+            if not self._pump_once() and rid not in self._done:
+                raise KeyError(f"request {rid} is not part of this session "
+                               f"(reset() drops pending requests)")
+        return self._done[rid]
+
+    def stream(self, rid: int):
+        """Generator behind ``RequestHandle.stream()``."""
+        st = self._streams.get(rid)
+        if st is None:
+            st = self._streams[rid] = {"buf": [], "n": 0, "done": False}
+            r = self._done.get(rid)
+            if r is not None:      # finished before anyone listened
+                self._flush_stream_tail(st, r)
+        try:
+            while True:
+                while st["buf"]:
+                    yield st["buf"].pop(0)
+                if st["done"]:
+                    break
+                if rid in self._done:   # terminal but tail not flushed
+                    self._flush_stream_tail(st, self._done[rid])
+                    continue
+                if not self._pump_once() and rid not in self._done:
+                    raise KeyError(f"request {rid} is not part of this "
+                                   f"session")
+        finally:
+            self._streams.pop(rid, None)
+        r = self._done[rid]
+        if r.status != "ok":
+            raise RequestCancelled(rid, r.status)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued (dequeue) or resident (evict + reclaim pages)
+        request. Returns False once the request is already terminal."""
+        r = self.scheduler.cancel(rid)
+        if r is None:
+            return False
+        self._finish_result(r)
+        return True
 
     def serve(self, *, realtime: bool = False) -> dict[int, SlotResult]:
-        """Drain the queue with continuous batching; {rid: SlotResult}."""
-        results = self.scheduler.run(self._read_slot, realtime=realtime)
-        return {r.rid: r for r in results}
+        """Drain the queue with continuous batching; {rid: SlotResult} of
+        every request that reached a terminal state since the last
+        serve() (finished, cancelled, or expired). A drive's clock mode is
+        fixed at its first pump — ``handle.result()``/``.stream()`` start
+        closed-loop drives — so a mismatched ``realtime`` here is an error
+        rather than a silent unit change."""
+        if self._pump is not None and realtime != self._pump_realtime:
+            raise RuntimeError(
+                f"a {'realtime' if self._pump_realtime else 'closed-loop'} "
+                f"drive is already in flight (handle.result()/stream() "
+                f"pumps start closed-loop); serve(realtime={realtime}) "
+                f"cannot switch clocks mid-drive — drain it first")
+        self._ensure_pump(realtime=realtime)
+        while self._pump_once():
+            pass
+        out, self._epoch = self._epoch, {}
+        return out
 
     def _require_idle(self, caller: str) -> None:
         # the one-shot APIs drain the queue; running them with foreign
@@ -710,26 +974,32 @@ class StreamingEngine:
                 f"submit()ed request(s); call serve() first")
 
     def predict(self, queries: Sequence[str]) -> list[Prediction]:
-        """Drop-in for ReactionEngine.predict (greedy/speculative), served
-        through the continuous scheduler."""
+        """Compatibility wrapper (drop-in for ReactionEngine.predict,
+        greedy/speculative): a thin batch loop over the request front door
+        — ``submit()`` handles + a draining ``serve()``. New code should
+        submit ``RequestSpec``s directly for per-request params, priority,
+        streaming, and cancellation."""
         if self.ecfg.mode not in ("greedy", "speculative"):
             raise ValueError(f"predict() supports greedy/speculative, "
                              f"got {self.ecfg.mode}")
         self._require_idle("predict()")
         t0 = time.time()
-        rids = [self.submit(q) for q in queries]
+        handles = [self.submit(q) for q in queries]
+        # read the drained epoch dict, not handle.result(): a batch larger
+        # than the bounded terminal store must not lose early results
         done = self.serve()
         wall = (time.time() - t0) / max(len(queries), 1)
-        return [self._prediction(done[rid], wall) for rid in rids]
+        return [self._prediction(done[int(h)], wall) for h in handles]
 
     def predict_topn(self, query: str) -> Prediction:
-        """Drop-in for ReactionEngine.predict_topn (beam modes) — one
-        query, n_beams candidates sorted by log-probability."""
+        """Compatibility wrapper (drop-in for ReactionEngine.predict_topn,
+        beam modes) — one query, n_beams candidates sorted by
+        log-probability, via one front-door handle."""
         if self.spec.kind != "beam":
             raise ValueError(f"predict_topn() needs a beam mode, "
                              f"got {self.ecfg.mode}")
         self._require_idle("predict_topn()")
         t0 = time.time()
-        rid = self.submit(query)
+        handle = self.submit(query)
         done = self.serve()
-        return self._prediction(done[rid], time.time() - t0)
+        return self._prediction(done[int(handle)], time.time() - t0)

@@ -7,7 +7,8 @@ member. This scheduler instead keeps S fixed decode slots stepping
 forever:
 
   - ``submit()`` enqueues a request (optionally with a future arrival
-    time for open-loop load generation);
+    time for open-loop load generation, a ``priority``, and a
+    ``deadline``);
   - each host iteration admits queued requests into free slots (one
     jitted admit with a *traced* slot index — no recompilation), runs ONE
     shared jitted ``session_step`` for all slots, and evicts finished
@@ -15,61 +16,71 @@ forever:
   - eviction frees the slot for the next queued request while the other
     slots keep decoding — no head-of-line blocking.
 
+Priority + deadline scheduling: admission is no longer earliest-arrival.
+Among ARRIVED requests, the scheduler admits by ``(-priority,
+earliest-deadline, arrival)`` — a high-priority burst overtakes a low-
+priority backlog, and within a priority class earlier deadlines go first
+(EDF), then FIFO. Requests whose deadline has passed while QUEUED are
+expired at admission time (a terminal ``status="expired"`` record, never
+a slot); a RESIDENT request whose deadline passes mid-flight is evicted,
+its pages reclaimed, without perturbing co-resident slots.
+
+Cancellation: ``cancel(rid)`` removes a queued request immediately or
+evicts a resident one mid-flight (slot released + pages unmapped so the
+allocator's next reclaim returns its whole footprint). Both produce a
+terminal ``status="cancelled"`` record.
+
+``steps()`` is the step-driven core: a generator yielding the iteration's
+terminal ``SlotResult``s after every scheduler cycle — the engine's
+streaming token delivery hooks in between iterations. ``run()`` is the
+blocking wrapper that drains the queue.
+
 The scheduler is model-agnostic: it drives two callables (``admit``,
 ``step``) plus a ``read_slot`` extractor, all supplied by the engine
-(``repro.serving.engine.StreamingEngine`` for the Molecular Transformer).
-Because the session step is row-independent, a request's output is
-byte-identical whether it runs alone or is admitted mid-stream next to
-strangers — the invariant ``tests/test_session.py`` enforces.
+(``repro.serving.engine.StreamingEngine``). Because the session step is
+row-independent, a request's output is byte-identical whether it runs
+alone or is admitted mid-stream next to strangers — the invariant
+``tests/test_session.py`` enforces.
 
 In-flight mode mixing: the slot axis may be partitioned into named *slot
 groups* (``groups={mode: [slot ids]}``) so one session serves e.g. greedy
 probes and beam retrosynthesis expansions concurrently. Each group keeps
-its own free list and its own arrival-ordered queue — a request routes to
-its mode's slots (``submit(..., mode=...)``) and a full group never blocks
-another group's admissions — while page-gated admission and preemption
-operate over the one shared KV pool. Preemption prefers a victim inside
-the group that exhausted the pool (``PoolExhausted.group``) before
-falling back to the globally youngest resident, and a preempted request
-requeues at the head of *its own* group's queue with its mode tag intact.
+its own free list and its own queue — a request routes to its mode's
+slots (``submit(..., mode=...)``) and a full group never blocks another
+group's admissions — while page-gated admission and preemption operate
+over the one shared KV pool. Preemption prefers a victim inside the group
+that exhausted the pool (``PoolExhausted.group``) before falling back to
+the globally youngest resident, and a preempted request requeues at the
+head of its own priority class with its mode tag intact.
 
 Backend-agnostic admission: the scheduler never interprets payloads, so
-the engine may admit in phases. Chunked ragged prefill (the decoder-only
-``ModelBackend``) registers the slot at ``admit`` time, then advances one
-prompt chunk per iteration inside ``pre_step`` — interleaved with the
-resident slots' decode step — and reports the slot as unfinished via the
-``finished`` hook until its prompt is fully written. A ``pre_step`` that
-raises ``PoolExhausted`` mid-pump must leave the scheduler's ``state``
-attribute pointing at the live (partially-advanced) state if it already
-consumed the previous one (jit donation), so the preemption path releases
-against valid buffers.
+the engine may admit in phases (chunked ragged prefill advances inside
+``pre_step``; see ``repro.serving.backend``). A ``pre_step`` that raises
+``PoolExhausted`` mid-pump must leave the scheduler's ``state`` attribute
+pointing at the live (partially-advanced) state if it already consumed
+the previous one (jit donation), so the preemption path releases against
+valid buffers.
 
 Memory-aware mode (paged KV cache): three optional hooks turn slot-count
 admission into page-count admission. ``admit_ok`` gates each admission on
-free *pages* (so ``n_slots`` may exceed what contiguous cache rows would
-fit in the same HBM), ``pre_step`` runs the host page-table maintenance
-(lazy growth + copy-on-write) before every step, and when the pool is
-truly exhausted mid-decode the scheduler *preempts* a youngest resident
-request — releasing its pages and requeuing it at the head of its queue
-for a deterministic from-scratch restart — rather than crashing. The
-oldest resident always fits (``PageAllocator`` validates the pool covers
-one slot's worst case), so the policy is deadlock-free.
+free *pages*, ``pre_step`` runs the host page-table maintenance before
+every step, and when the pool is truly exhausted mid-decode the scheduler
+*preempts* a youngest resident request rather than crashing. The oldest
+resident always fits (``PageAllocator`` validates the pool covers one
+slot's worst case), so the policy is deadlock-free.
 """
 
 from __future__ import annotations
 
-import bisect
 import dataclasses
+import heapq
+import math
 import time
 from typing import Any, Callable, Hashable
 
 import numpy as np
 
 from repro.core.session import PoolExhausted, SessionSpec, release_slot
-
-# compact the consumed queue prefix once it grows past this many entries
-# (amortized O(1) head-pops without unbounded memory on long open-loop runs)
-_COMPACT_AT = 4096
 
 
 @dataclasses.dataclass
@@ -83,11 +94,27 @@ class ScheduledRequest:
     payload: Any
     arrival: float = 0.0   # run()-relative: steps (closed loop) | s (realtime)
     mode: Hashable = None
+    priority: int = 0      # higher admitted first among arrived requests
+    deadline: float | None = None   # serving-clock expiry (None = never)
+    seq: int = 0           # submission order (FIFO tie-break)
+    boost: int = 0         # preemption requeue: head of its priority class
+    cancelled: bool = False
+
+    @property
+    def key(self):
+        """Ready-queue ordering: priority desc, preempted-first, EDF,
+        then FIFO."""
+        return (-self.priority, -self.boost,
+                math.inf if self.deadline is None else self.deadline,
+                self.arrival, self.seq)
 
 
 @dataclasses.dataclass
 class SlotResult:
-    """A finished request, read out of its slot at eviction time.
+    """A terminal request record. ``status="ok"`` rows are read out of the
+    slot at eviction; ``"cancelled"``/``"expired"`` rows carry empty token
+    buffers (the request never finished — ``admitted``/``completed`` stamp
+    when it left the system).
 
     Timestamps (and thus ``latency``/``queue_delay``) are relative to
     run() start, in the run's clock unit: wall-clock seconds when
@@ -103,6 +130,7 @@ class SlotResult:
     admitted: float
     completed: float
     mode: Hashable = None         # slot group the request was served by
+    status: str = "ok"            # "ok" | "cancelled" | "expired"
 
     @property
     def latency(self) -> float:
@@ -157,34 +185,40 @@ class ContinuousScheduler:
         self._finished = finished or _default_finished
         if groups is None:
             groups = {None: list(range(spec.n_slots))}
-        # per-group free lists + arrival-ordered queues, each consumed from
-        # a head cursor: submissions use bisect on the unconsumed suffix and
-        # head-pops are O(1), so an open-loop stream of thousands of queued
-        # requests stays linear. A full group's backlog never blocks another
-        # group's admissions (per-mode head-of-line only).
         self._slot_key = {s: k for k, slots in groups.items() for s in slots}
         if len(self._slot_key) != sum(len(v) for v in groups.values()):
             raise ValueError("slot groups must be disjoint")
         self._free = {k: sorted(slots) for k, slots in groups.items()}
-        self._queues: dict[Hashable, list[ScheduledRequest]] = {
-            k: [] for k in groups}
-        self._heads: dict[Hashable, int] = {k: 0 for k in groups}
+        # two-stage per-group queues: ``_future`` holds not-yet-arrived
+        # requests ordered by arrival; once arrived they promote into
+        # ``_ready`` ordered by the scheduling key (priority/EDF/FIFO).
+        # Cancellation is lazy (flag + live counter), so cancelling deep in
+        # a backlog is O(1) and stale entries drop at the next head pop.
+        self._future: dict[Hashable, list] = {k: [] for k in groups}
+        self._ready: dict[Hashable, list] = {k: [] for k in groups}
+        self._n_queued: dict[Hashable, int] = {k: 0 for k in groups}
         self._resident: dict[int, ScheduledRequest] = {}   # slot -> request
         self._admit_time: dict[int, float] = {}
+        self._queued_by_rid: dict[int, ScheduledRequest] = {}
         self._next_rid = 0
+        self._next_seq = 0
         self.n_steps = 0
         self.n_preemptions = 0
+        self.n_cancelled = 0
+        self.n_expired = 0
         self.max_resident = 0
         self._skipped = 0.0   # closed-loop clock offset from idle jumps
+        self._now = 0.0       # last serving-clock reading (for cancel())
 
     # ------------------------------------------------------------------ API
     def submit(self, payload, *, arrival: float = 0.0, rid=None,
-               mode: Hashable = None) -> int:
-        if mode is None and len(self._queues) == 1:
-            mode = next(iter(self._queues))
-        if mode not in self._queues:
+               mode: Hashable = None, priority: int = 0,
+               deadline: float | None = None) -> int:
+        if mode is None and len(self._future) == 1:
+            mode = next(iter(self._future))
+        if mode not in self._future:
             raise KeyError(f"unknown mode {mode!r}; "
-                           f"groups: {list(self._queues)}")
+                           f"groups: {list(self._future)}")
         if rid is None:
             rid = self._next_rid
         elif rid < self._next_rid:
@@ -193,60 +227,159 @@ class ContinuousScheduler:
             raise ValueError(f"rid {rid} may already be in use; "
                              f"pass rid >= {self._next_rid} or omit it")
         self._next_rid = max(self._next_rid, rid) + 1
-        # keep each queue arrival-ordered (stable for ties), so an
-        # already-arrived request never stalls behind a later arrival
-        bisect.insort(self._queues[mode],
-                      ScheduledRequest(rid=rid, payload=payload,
-                                       arrival=arrival, mode=mode),
-                      lo=self._heads[mode], key=lambda r: r.arrival)
+        req = ScheduledRequest(rid=rid, payload=payload, arrival=arrival,
+                               mode=mode, priority=priority,
+                               deadline=deadline, seq=self._next_seq)
+        self._next_seq += 1
+        self._enqueue(req)
         return rid
+
+    def _enqueue(self, req: ScheduledRequest) -> None:
+        if req.arrival > self._now:
+            heapq.heappush(self._future[req.mode],
+                           (req.arrival, req.seq, req))
+        else:
+            heapq.heappush(self._ready[req.mode], (req.key, req.seq, req))
+        self._n_queued[req.mode] += 1
+        self._queued_by_rid[req.rid] = req
 
     @property
     def queued(self) -> int:
-        return sum(len(q) - self._heads[k] for k, q in self._queues.items())
+        return sum(self._n_queued.values())
 
     @property
     def pending(self) -> int:
         return self.queued + len(self._resident)
 
+    def cancel(self, rid: int) -> SlotResult | None:
+        """Abandon a request: a queued one is dequeued immediately, a
+        resident one is evicted (slot released, pages unmapped for the
+        allocator's next reclaim). Returns the terminal
+        ``status="cancelled"`` record, or None when the rid is unknown or
+        already terminal — finished results are never retracted."""
+        req = self._queued_by_rid.get(rid)
+        if req is not None:
+            req.cancelled = True
+            del self._queued_by_rid[rid]
+            self._n_queued[req.mode] -= 1
+            self.n_cancelled += 1
+            return self._terminal(req, "cancelled", now=self._now)
+        for slot, req in self._resident.items():
+            if req.rid == rid:
+                req, admitted = self._evict(slot)
+                self.n_cancelled += 1
+                return self._terminal(req, "cancelled", now=self._now,
+                                      admitted=admitted)
+        return None
+
     # ------------------------------------------------------------ internals
-    def _heads_ready(self):
-        """Current head request of every non-empty group queue with a free
-        slot, earliest arrival first (group declaration order for ties)."""
+    def _evict(self, slot: int) -> tuple[ScheduledRequest, float]:
+        """Remove a resident request from its slot: release the session
+        state (paged engines unmap the slot's rows here, so the
+        allocator's next reclaim returns its whole footprint) and return
+        the slot to its group's free list. The single eviction sequence
+        behind cancellation, deadline expiry, and preemption."""
+        req = self._resident.pop(slot)
+        admitted = self._admit_time.pop(slot)
+        self.state = self._release(self.state, slot)
+        self._return_slot(slot)
+        return req, admitted
+
+    def _terminal(self, req: ScheduledRequest, status: str, *, now: float,
+                  admitted: float | None = None) -> SlotResult:
+        # a never-admitted request (cancelled/expired in the queue) stamps
+        # admitted/completed no earlier than its arrival, so queue_delay
+        # and latency are never negative in aggregate views
+        floor = max(now, req.arrival)
+        return SlotResult(
+            rid=req.rid, tokens=np.zeros((1, 0), np.int32),
+            lengths=np.zeros((1,), np.int32),
+            logprobs=np.zeros((1,), np.float32), n_calls=0, accepted=0,
+            arrival=req.arrival,
+            admitted=floor if admitted is None else admitted,
+            completed=floor, mode=req.mode, status=status)
+
+    def _promote(self, now: float) -> None:
+        """Move arrived requests from the arrival-ordered stage into the
+        priority-ordered ready stage (dropping cancelled ones)."""
+        for mode, fut in self._future.items():
+            while fut and fut[0][0] <= now:
+                _, _, req = heapq.heappop(fut)
+                if req.cancelled:
+                    continue
+                heapq.heappush(self._ready[mode], (req.key, req.seq, req))
+
+    def _ready_head(self, mode, now: float,
+                    events: list | None = None) -> ScheduledRequest | None:
+        """Live head of a group's ready queue: drops cancelled entries and
+        expires deadline-passed ones (appending their terminal records to
+        ``events``) until a runnable request (or nothing) remains."""
+        q = self._ready[mode]
+        while q:
+            req = q[0][2]
+            if req.cancelled:
+                heapq.heappop(q)
+                continue
+            if req.deadline is not None and req.deadline <= now:
+                heapq.heappop(q)
+                self._queued_by_rid.pop(req.rid, None)
+                self._n_queued[mode] -= 1
+                self.n_expired += 1
+                if events is not None:
+                    events.append(self._terminal(req, "expired", now=now))
+                continue
+            return req
+        return None
+
+    def _heads_ready(self, now: float, events: list):
+        """Admissible head request of every group with a free slot, best
+        scheduling key first (priority desc / EDF / FIFO; group declaration
+        order only breaks exact ties)."""
         out = []
-        for gi, (k, q) in enumerate(self._queues.items()):
-            if len(q) > self._heads[k] and self._free[k]:
-                out.append((q[self._heads[k]].arrival, gi, k))
+        for gi, mode in enumerate(self._future):
+            if not self._free[mode]:
+                continue
+            req = self._ready_head(mode, now, events)
+            if req is not None:
+                out.append((req.key, gi, mode))
         out.sort()
         return out
 
     def _next_arrival(self) -> float | None:
-        arr = [q[self._heads[k]].arrival
-               for k, q in self._queues.items() if len(q) > self._heads[k]]
+        """Earliest time anything queued could be admitted (ready heads
+        count as their own arrival, which is already <= now)."""
+        arr = []
+        for mode in self._future:
+            fut = self._future[mode]
+            while fut and fut[0][2].cancelled:
+                heapq.heappop(fut)
+            if fut:
+                arr.append(fut[0][0])
+            req = self._ready_head(mode, -math.inf)  # no expiry side effects
+            if req is not None:
+                arr.append(req.arrival)
         return min(arr) if arr else None
 
     def _pop_head(self, mode) -> ScheduledRequest:
-        q = self._queues[mode]
-        req = q[self._heads[mode]]
-        self._heads[mode] += 1
-        if self._heads[mode] >= _COMPACT_AT:
-            del q[:self._heads[mode]]
-            self._heads[mode] = 0
+        _, _, req = heapq.heappop(self._ready[mode])
+        self._queued_by_rid.pop(req.rid, None)
+        self._n_queued[mode] -= 1
         return req
 
     def _requeue_front(self, req: ScheduledRequest) -> None:
-        """Requeue at the head of the request's OWN group queue — the mode
-        tag rides on the request, so a preempted beam expansion can never
-        restart in a greedy slot."""
-        self._queues[req.mode].insert(self._heads[req.mode], req)
+        """Requeue a preempted request at the head of its own priority
+        class (``boost``) in its OWN group's queue — the mode tag rides on
+        the request, so a preempted beam expansion can never restart in a
+        greedy slot, and a same-priority newcomer can never leapfrog it."""
+        req.boost = 1
+        self._enqueue(req)
 
-    def _admit_ready(self, now: float) -> None:
+    def _admit_ready(self, now: float, events: list) -> None:
+        self._promote(now)
         admitted = True
         while admitted:
             admitted = False
-            for arrival, _, mode in self._heads_ready():
-                if arrival > now:
-                    continue
+            for _, _, mode in self._heads_ready(now, events):
                 if (self._admit_ok is not None
                         and not self._admit_ok(self.state, mode)):
                     continue   # pool pressure: try the other groups' heads
@@ -259,6 +392,18 @@ class ContinuousScheduler:
                 break
         self.max_resident = max(self.max_resident, len(self._resident))
 
+    def _expire_residents(self, now: float, events: list) -> None:
+        """Evict resident requests whose deadline has passed — their slot
+        (and pages) free up for the backlog; co-resident slots never
+        notice (row independence)."""
+        expired = [s for s, r in self._resident.items()
+                   if r.deadline is not None and r.deadline <= now]
+        for slot in expired:
+            req, admitted = self._evict(slot)
+            self.n_expired += 1
+            events.append(self._terminal(req, "expired", now=now,
+                                         admitted=admitted))
+
     def _preempt_youngest(self, prefer: Hashable | None = None) -> None:
         """Kick a most recently admitted request back to its queue head;
         its pages are reclaimed and it restarts from scratch later (decoding
@@ -270,10 +415,7 @@ class ContinuousScheduler:
         if not pool:
             pool = list(self._resident)
         slot = max(pool, key=lambda s: (self._admit_time[s], s))
-        req = self._resident.pop(slot)
-        self._admit_time.pop(slot)
-        self.state = self._release(self.state, slot)
-        self._return_slot(slot)
+        req, _ = self._evict(slot)
         self._requeue_front(req)
         self.n_preemptions += 1
 
@@ -293,7 +435,7 @@ class ContinuousScheduler:
                 if len(self._resident) <= 1:
                     raise  # pool below one request's worst case (validated
                            # at allocator construction; unreachable there)
-                prefer = e.group if e.group in self._queues else None
+                prefer = e.group if e.group in self._future else None
                 self._preempt_youngest(prefer)
 
     def _evict_finished(self, now: float, read_slot) -> list[SlotResult]:
@@ -302,50 +444,85 @@ class ContinuousScheduler:
         finished = self._finished(self.state)
         done, results = [s for s in self._resident if finished[s]], []
         for slot in done:
-            req = self._resident.pop(slot)
+            # read while the slot is still resident: the engine's read_slot
+            # looks up the request's per-request params to trim the view
             fields = read_slot(self.state, slot)
+            req, admitted = self._evict(slot)
             results.append(SlotResult(
                 rid=req.rid, arrival=req.arrival, mode=req.mode,
-                admitted=self._admit_time.pop(slot), completed=now,
-                **fields))
-            self.state = self._release(self.state, slot)
-            self._return_slot(slot)
+                admitted=admitted, completed=now, **fields))
         return results
 
+    def _rewind_clock(self) -> None:
+        """Each drive restarts the serving clock at 0, but submissions made
+        between drives were staged against the PREVIOUS drive's final
+        clock. Re-stage them: anything with a future arrival (relative to
+        the new clock origin) moves back to the arrival-ordered stage so
+        its delay is honored."""
+        self._now = 0.0
+        for mode, q in self._ready.items():
+            keep = []
+            while q:
+                req = heapq.heappop(q)[2]
+                if not req.cancelled:
+                    keep.append(req)
+            for req in keep:
+                if req.arrival > 0.0 and not req.boost:
+                    heapq.heappush(self._future[mode],
+                                   (req.arrival, req.seq, req))
+                else:
+                    heapq.heappush(q, (req.key, req.seq, req))
+
     # ---------------------------------------------------------------- drive
-    def run(self, read_slot: Callable, *,
-            realtime: bool = False) -> list[SlotResult]:
-        """Drive admissions/steps/evictions until the queue drains.
+    def steps(self, read_slot: Callable, *, realtime: bool = False):
+        """Step-driven serving core: one scheduler iteration per ``next()``
+        — expiry, admissions, page maintenance, ONE jitted session step,
+        evictions — yielding the iteration's terminal ``SlotResult``s
+        (often empty). The engine's streaming layer reads committed-token
+        deltas between iterations; ``run()`` is the draining wrapper.
 
         ``realtime=False``: closed loop — arrival times are DECODE-STEP
         counts (deterministic mid-stream admission, the unit tests' mode),
         and the clock fast-forwards over idle gaps.
         ``realtime=True``: open loop — arrival times are wall-clock seconds
-        since run() start; requests are held back until they "arrive" (the
-        throughput benchmark's Poisson stream)."""
-        results: list[SlotResult] = []
+        since the drive started; requests are held back until they
+        "arrive" (the throughput benchmark's Poisson stream)."""
         t0 = time.perf_counter()
-        step0, skip0 = self.n_steps, self._skipped   # run()-relative clock
+        step0, skip0 = self.n_steps, self._skipped   # drive-relative clock
         clock = ((lambda: time.perf_counter() - t0) if realtime
                  else (lambda: float(self.n_steps - step0)
                        + (self._skipped - skip0)))
+        self._rewind_clock()
         while self.queued or self._resident:
-            now = clock()
+            self._now = now = clock()
+            events: list[SlotResult] = []
+            self._expire_residents(now, events)
             nxt = self._next_arrival()
             if (not self._resident and nxt is not None and not realtime
                     and nxt > now):
                 # idle: fast-forward the clock to the next arrival (persisted
                 # in the offset so admitted/completed stamps stay monotone)
                 self._skipped += nxt - now
-                now = clock()
-            self._admit_ready(now)
+                self._now = now = clock()
+            self._admit_ready(now, events)
             if not self._resident:
                 if realtime and nxt is not None:
                     # nothing can change until the head arrives: sleep it off
                     time.sleep(max(0.0, nxt - now))
+                if events:
+                    yield events
                 continue
             self._prepare()
             self.state = self._step(self.state)
             self.n_steps += 1
-            results.extend(self._evict_finished(clock(), read_slot))
-        return results
+            self._now = done_t = clock()
+            events.extend(self._evict_finished(done_t, read_slot))
+            yield events
+
+    def run(self, read_slot: Callable, *,
+            realtime: bool = False) -> list[SlotResult]:
+        """Drain the queue: drive ``steps()`` to exhaustion and return
+        every terminal record (finished, cancelled-while-running via the
+        engine, expired)."""
+        return [r for events in self.steps(read_slot, realtime=realtime)
+                for r in events]

@@ -1,0 +1,580 @@
+"""Request front door (repro.serving.api): per-request GenerationParams,
+priority/deadline scheduling, streaming token delivery, and cancellation.
+
+The contract that makes the API redesign safe to ship:
+
+  1. requests submitted with params EQUAL to the engine-global config are
+     byte-identical to default submissions (all four modes, both
+     backends, dense + paged) — the params plumbing is a no-op at the
+     ceilings;
+  2. params BELOW the ceilings match a dedicated engine built with those
+     values as its global config (draft_len/n_drafts/n_beams/max_new) —
+     per-request raggedness is real, not approximate;
+  3. ragged per-request params cause ZERO recompilation after the
+     per-group warmup (``n_traces`` asserted) — they ride in device
+     arrays, never in traced shapes;
+  4. streaming: concatenated ``handle.stream()`` deltas equal the final
+     committed tokens exactly, while co-resident slots keep decoding;
+  5. cancellation/expiry of queued AND resident requests reclaims the
+     slot (and all its pages — hypothesis allocator invariants: no leak,
+     no double-alloc) and never perturbs co-resident requests' tokens;
+  6. priority + deadline admission: higher priority overtakes an arrived
+     backlog, EDF breaks ties inside a class, expired requests terminate
+     with ``status="expired"`` instead of occupying a slot.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.mt import tiny_config
+from repro.data import SyntheticReactionDataset
+from repro.models import seq2seq as s2s
+from repro.models import transformer as tr
+from repro.serving import (EngineConfig, GenerationParams, RequestCancelled,
+                           RequestSpec, StreamingEngine)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except Exception:                                    # pragma: no cover
+    from repro.testing import given, settings, strategies as st
+
+MAX_NEW = 16
+MODES = ("greedy", "speculative", "beam", "speculative_beam")
+
+
+_TOY = None
+
+
+def _get_toy():
+    """Module-cached toy model — a plain helper (not a fixture) so the
+    hypothesis-decorated test can use it too (the repro.testing fallback's
+    ``given`` does not thread pytest fixtures)."""
+    global _TOY
+    if _TOY is None:
+        ds = SyntheticReactionDataset(12, seed=0)
+        cfg = tiny_config(ds.tokenizer.vocab_size, depth=2, d_model=64,
+                          max_len=192)
+        params = s2s.init(jax.random.PRNGKey(0), cfg)
+        _TOY = (ds, cfg, params)
+    return _TOY
+
+
+@pytest.fixture(scope="module")
+def toy():
+    return _get_toy()
+
+
+@pytest.fixture(scope="module")
+def decoder():
+    cfg = get_config("smollm-135m", reduced=True)
+    return cfg, tr.init(jax.random.PRNGKey(0), cfg)
+
+
+def _engine(toy, mode, **kw):
+    ds, cfg, params = toy
+    base = dict(mode=mode, max_new=MAX_NEW, max_src=96, draft_len=4,
+                n_drafts=6, n_beams=3, n_slots=2)
+    base.update(kw)
+    return StreamingEngine(params, cfg, ds.tokenizer, EngineConfig(**base))
+
+
+def _decoder_engine(decoder, mode, **kw):
+    cfg, params = decoder
+    base = dict(mode=mode, max_new=MAX_NEW, max_src=28, draft_len=4,
+                n_drafts=5, n_slots=2, prefill_chunk=5, eos_id=2)
+    base.update(kw)
+    return StreamingEngine(params, cfg, None, EngineConfig(**base))
+
+
+def _decoder_prompts(n=4):
+    rng = np.random.default_rng(3)
+    return [rng.integers(4, 500, size=int(L)).astype(np.int32)
+            for L in rng.integers(2, 28, size=n)]
+
+
+# ---------------------------------------------------------------------------
+# 1. ceiling params == default submissions (identity of the plumbing)
+
+
+def _ceiling_params(mode):
+    """Explicit ceiling params per mode (greedy/beam families have
+    different DL/N_d/K ceilings under the fixture's EngineConfig)."""
+    return {
+        "greedy": GenerationParams(max_new=MAX_NEW, draft_len=0,
+                                   n_drafts=1, n_beams=1),
+        "speculative": GenerationParams(max_new=MAX_NEW, draft_len=4,
+                                        n_drafts=6, n_beams=1),
+        "beam": GenerationParams(max_new=MAX_NEW, draft_len=0,
+                                 n_drafts=1, n_beams=3),
+        "speculative_beam": GenerationParams(max_new=MAX_NEW, draft_len=4,
+                                             n_drafts=6, n_beams=3),
+    }[mode]
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_ceiling_params_identical_to_default_seq2seq(toy, paged):
+    ds, _, _ = toy
+    queries = [ds.pair(i)[0] for i in range(6)]
+    groups = {m: 1 for m in MODES}
+    ref = _engine(toy, "speculative", mode_groups=groups, paged=paged,
+                  page_size=8)
+    new = _engine(toy, "speculative", mode_groups=groups, paged=paged,
+                  page_size=8)
+    hr, hn = [], []
+    for i, q in enumerate(queries):
+        m = MODES[i % 4]
+        hr.append(ref.submit(q, mode=m))
+        hn.append(new.submit(q, mode=m, params=_ceiling_params(m)))
+    res_r, res_n = ref.serve(), new.serve()
+    for a, b in zip(hr, hn):
+        np.testing.assert_array_equal(res_r[a].tokens, res_n[b].tokens)
+        np.testing.assert_array_equal(res_r[a].lengths, res_n[b].lengths)
+
+
+@pytest.mark.parametrize("mode", ["greedy", "speculative"])
+def test_ceiling_params_identical_to_default_decoder(decoder, mode):
+    prompts = _decoder_prompts()
+    ref = _decoder_engine(decoder, mode)
+    new = _decoder_engine(decoder, mode)
+    dl, nd = (4, 5) if mode == "speculative" else (0, 1)
+    p = GenerationParams(max_new=MAX_NEW, draft_len=dl, n_drafts=nd)
+    hr = [ref.submit(q) for q in prompts]
+    hn = [new.submit(q, params=p) for q in prompts]
+    res_r, res_n = ref.serve(), new.serve()
+    for a, b in zip(hr, hn):
+        np.testing.assert_array_equal(res_r[a].tokens, res_n[b].tokens)
+
+
+# ---------------------------------------------------------------------------
+# 2. sub-ceiling params == a dedicated engine with that global config
+
+
+def test_per_request_draft_params_match_global_engine(toy):
+    """draft_len=2, n_drafts=3 submitted into a (4, 6)-ceiling session must
+    reproduce a draft_len=2, n_drafts=3 engine token for token — host
+    draft extraction AND device accept-clamping both honor the request."""
+    ds, _, _ = toy
+    queries = [ds.pair(i)[0] for i in range(4)]
+    small = _engine(toy, "speculative", draft_len=2, n_drafts=3)
+    big = _engine(toy, "speculative")          # ceilings (4, 6)
+    hs = [small.submit(q) for q in queries]
+    hb = [big.submit(q, params=GenerationParams(draft_len=2, n_drafts=3))
+          for q in queries]
+    res_s, res_b = small.serve(), big.serve()
+    for a, b in zip(hs, hb):
+        np.testing.assert_array_equal(res_s[a].tokens, res_b[b].tokens)
+
+
+def test_per_request_n_beams_matches_global_engine(toy):
+    ds, _, _ = toy
+    queries = [ds.pair(i)[0] for i in range(3)]
+    narrow = _engine(toy, "beam", n_beams=2)
+    wide = _engine(toy, "beam", n_beams=4)
+    hn = [narrow.submit(q) for q in queries]
+    hw = [wide.submit(q, params=GenerationParams(n_beams=2))
+          for q in queries]
+    res_n, res_w = narrow.serve(), wide.serve()
+    for a, b in zip(hn, hw):
+        assert res_w[b].tokens.shape[0] == 2     # trimmed to the request
+        np.testing.assert_array_equal(res_n[a].tokens, res_w[b].tokens)
+        np.testing.assert_allclose(res_n[a].logprobs, res_w[b].logprobs,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_per_request_max_new_is_prefix_of_full_run(toy):
+    ds, _, _ = toy
+    q = ds.pair(0)[0]
+    eng = _engine(toy, "greedy")
+    full = eng.submit(q).result()
+    short = eng.submit(q, params=GenerationParams(max_new=5)).result()
+    assert short.tokens.shape == (1, 5)
+    n = int(short.lengths[0])
+    assert n <= 5
+    np.testing.assert_array_equal(short.tokens[0][:n], full.tokens[0][:n])
+
+
+def test_stop_ids_truncate_at_first_hit(toy):
+    ds, _, _ = toy
+    q = ds.pair(1)[0]
+    eng = _engine(toy, "greedy")
+    full = eng.submit(q).result()
+    toks = full.tokens[0][:int(full.lengths[0])]
+    assert len(toks) >= 2
+    stop_t = int(toks[1])
+    r = eng.submit(q, params=GenerationParams(stop_ids=(stop_t,))).result()
+    got = r.tokens[0][:int(r.lengths[0])]
+    first = int(np.flatnonzero(toks == stop_t)[0])
+    np.testing.assert_array_equal(got, toks[:first + 1])
+
+
+def test_params_ceiling_violations_rejected(toy):
+    eng = _engine(toy, "speculative")
+    for bad in (GenerationParams(max_new=MAX_NEW + 1),
+                GenerationParams(draft_len=5),
+                GenerationParams(n_drafts=7),
+                GenerationParams(n_beams=2),      # greedy-family ceiling is 1
+                GenerationParams(max_new=0),
+                GenerationParams(stop_ids=(1, 2, 3, 4, 5))):
+        with pytest.raises(ValueError):
+            eng.submit("CCO", params=bad)
+
+
+def test_early_finisher_never_corrupts_midprefill_coresidents(decoder):
+    """Regression: a short-budget request finishing early frees its slot
+    while a stranger's chunked prefill is in flight next door. The shared
+    step's winner-sync / beam-gather must not MOVE rows of inactive
+    (mid-prefill) slots — a garbage winner index used to clobber row 0's
+    freshly mapped pages (dense content respectively), corrupting the
+    incoming request's prompt."""
+    cfg, params = decoder
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(4, 500, size=24).astype(np.int32)
+               for _ in range(4)]
+
+    def run(paged):
+        eng = _decoder_engine(decoder, "speculative", max_src=24,
+                              draft_len=8, n_drafts=16, prefill_chunk=7,
+                              paged=paged, page_size=16)
+        hs = [eng.submit(p, arrival=float(3 * i))
+              for i, p in enumerate(prompts)]
+        eng.submit(prompts[0], params=GenerationParams(max_new=8))
+        res = eng.serve()
+        return [np.asarray(res[h].tokens[0]) for h in hs]
+
+    dense, paged = run(False), run(True)
+    for i, (d, p) in enumerate(zip(dense, paged)):
+        np.testing.assert_array_equal(d, p, err_msg=f"request {i}")
+
+
+# ---------------------------------------------------------------------------
+# 3. ragged params never recompile after warmup
+
+
+def test_ragged_params_zero_recompile(toy):
+    ds, _, _ = toy
+    queries = [ds.pair(i)[0] for i in range(8)]
+    eng = _engine(toy, "speculative")
+    eng.submit(queries[0])
+    eng.serve()
+    eng.reset()
+    warm = dict(eng.n_traces)
+    assert warm["step"] == 1 and warm["admit", "speculative"] == 1
+
+    ragged = [GenerationParams(),
+              GenerationParams(max_new=3),
+              GenerationParams(draft_len=1, n_drafts=2),
+              GenerationParams(stop_ids=(5, 9)),
+              GenerationParams(max_new=9, draft_len=3, stop_ids=(7,)),
+              GenerationParams(draft_len=0, n_drafts=1),
+              GenerationParams(max_new=MAX_NEW),
+              GenerationParams(n_drafts=5)]
+    hs = [eng.submit(q, params=p, arrival=float(i % 3))
+          for i, (q, p) in enumerate(zip(queries, ragged))]
+    res = eng.serve()
+    assert len(res) == len(hs)
+    assert dict(eng.n_traces) == warm, \
+        f"ragged params retraced after warmup: {warm} -> {eng.n_traces}"
+
+
+def test_ragged_params_zero_recompile_decoder(decoder):
+    prompts = _decoder_prompts(6)
+    eng = _decoder_engine(decoder, "speculative")
+    eng.submit(prompts[0])
+    eng.serve()
+    eng.reset()
+    warm = dict(eng.n_traces)
+    ragged = [GenerationParams(), GenerationParams(max_new=4),
+              GenerationParams(draft_len=2, n_drafts=3),
+              GenerationParams(stop_ids=(11,)),
+              GenerationParams(max_new=7, draft_len=1),
+              GenerationParams(n_drafts=2)]
+    for p, gp in zip(prompts, ragged):
+        eng.submit(p, params=gp)
+    res = eng.serve()
+    assert len(res) == len(prompts)
+    assert dict(eng.n_traces) == warm, \
+        f"ragged decoder params retraced: {warm} -> {eng.n_traces}"
+
+
+# ---------------------------------------------------------------------------
+# 4. streaming token delivery
+
+
+@pytest.mark.parametrize("mode", ["greedy", "speculative"])
+def test_stream_deltas_equal_result(toy, mode):
+    ds, _, _ = toy
+    queries = [ds.pair(i)[0] for i in range(4)]
+    eng = _engine(toy, mode)
+    hs = [eng.submit(q) for q in queries]
+    deltas = list(hs[0].stream())            # consumed while others decode
+    # mid-flight delivery: more than one delta unless the request was
+    # near-instant (greedy commits exactly one token per iteration)
+    assert len(deltas) > 1 if mode == "greedy" else len(deltas) >= 1
+    r0 = hs[0].result()
+    np.testing.assert_array_equal(np.concatenate(deltas),
+                                  r0.tokens[0][:int(r0.lengths[0])])
+    # deltas arrive per scheduler iteration, not as one final blob
+    assert len(deltas) <= int(r0.lengths[0])
+    res = eng.serve()
+    for h in hs[1:]:
+        assert int(h) in res
+
+
+def test_stream_beam_delivers_winner_at_completion(toy):
+    ds, _, _ = toy
+    eng = _engine(toy, "beam")
+    h = eng.submit(ds.pair(0)[0])
+    deltas = list(h.stream())
+    r = h.result()
+    assert len(deltas) == 1                  # beams reorder mid-flight
+    np.testing.assert_array_equal(deltas[0], r.tokens[0][:int(r.lengths[0])])
+
+
+def test_stream_after_completion_replays_tokens(toy):
+    ds, _, _ = toy
+    eng = _engine(toy, "greedy")
+    h = eng.submit(ds.pair(2)[0])
+    r = h.result()                           # finishes before anyone listens
+    deltas = list(h.stream())
+    np.testing.assert_array_equal(np.concatenate(deltas),
+                                  r.tokens[0][:int(r.lengths[0])])
+
+
+# ---------------------------------------------------------------------------
+# 5. cancellation + deadlines
+
+
+def test_cancel_queued_dequeues(toy):
+    ds, _, _ = toy
+    eng = _engine(toy, "greedy", n_slots=1)
+    keep = eng.submit(ds.pair(0)[0])
+    doomed = eng.submit(ds.pair(1)[0])
+    assert doomed.cancel()
+    assert doomed.status == "cancelled"
+    assert not doomed.cancel()               # already terminal
+    res = eng.serve()
+    assert res[int(doomed)].status == "cancelled"
+    with pytest.raises(RequestCancelled):
+        doomed.result()
+    assert keep.result().status == "ok"
+
+
+def test_cancel_resident_never_perturbs_coresidents(toy):
+    ds, _, _ = toy
+    queries = [ds.pair(i)[0] for i in range(3)]
+    ref = _engine(toy, "speculative")
+    hr = [ref.submit(q) for q in queries]
+    res_ref = ref.serve()
+
+    eng = _engine(toy, "speculative")
+    hs = [eng.submit(q) for q in queries]
+    pump = eng.serve_steps()
+    next(pump)
+    next(pump)
+    running = [h for h in hs if h.status == "running"]
+    assert running
+    victim = running[0]
+    assert victim.cancel()                   # evict mid-flight
+    res = eng.serve()
+    assert res[int(victim)].status == "cancelled"
+    # the survivors' tokens match the unperturbed reference run
+    for h, r in zip(hs, hr):
+        if h is victim:
+            continue
+        np.testing.assert_array_equal(res[int(h)].tokens,
+                                      res_ref[int(r)].tokens)
+
+
+def test_cancel_resident_paged_reclaims_all_pages(toy):
+    ds, _, _ = toy
+    queries = [ds.pair(i)[0] for i in range(4)]
+    eng = _engine(toy, "speculative", n_slots=2, paged=True, page_size=8)
+    hs = [eng.submit(q) for q in queries]
+    pump = eng.serve_steps()
+    next(pump)
+    next(pump)
+    running = [h for h in hs if h.status == "running"]
+    assert running and running[0].cancel()
+    eng.serve()
+    alloc = eng.allocator
+    alloc.reclaim(eng.scheduler.state)
+    alloc.check()
+    assert alloc.used_pages == 0, "cancelled/finished requests leaked pages"
+
+
+def test_deadline_expires_queued_request(toy):
+    ds, _, _ = toy
+    eng = _engine(toy, "greedy", n_slots=1)
+    blocker = eng.submit(ds.pair(0)[0])
+    late = eng.submit(ds.pair(1)[0], deadline=1.0)   # expires in the queue
+    res = eng.serve()
+    assert res[int(late)].status == "expired"
+    assert late.status == "expired"
+    with pytest.raises(RequestCancelled):
+        late.result()
+    assert blocker.result().status == "ok"
+    assert eng.scheduler.n_expired == 1
+
+
+def test_deadline_expires_resident_and_frees_slot(toy):
+    ds, _, _ = toy
+    eng = _engine(toy, "greedy", n_slots=1)
+    # needs > 3 steps to finish but expires at step 3, freeing the slot
+    doomed = eng.submit(ds.pair(0)[0], deadline=3.0)
+    after = eng.submit(ds.pair(1)[0])
+    res = eng.serve()
+    assert res[int(doomed)].status == "expired"
+    assert int(after) in res and res[int(after)].status == "ok"
+    # the expired request held the slot for at most its deadline
+    assert res[int(after)].admitted >= 3.0
+
+
+def test_paged_expiry_reclaims_pages(toy):
+    ds, _, _ = toy
+    eng = _engine(toy, "speculative", n_slots=2, paged=True, page_size=8)
+    eng.submit(ds.pair(0)[0], deadline=2.0)
+    eng.submit(ds.pair(1)[0])
+    res = eng.serve()
+    assert eng.scheduler.n_expired == 1
+    alloc = eng.allocator
+    alloc.reclaim(eng.scheduler.state)
+    alloc.check()
+    assert alloc.used_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# 6. priority + deadline admission ordering
+
+
+def test_priority_overtakes_backlog(toy):
+    ds, _, _ = toy
+    eng = _engine(toy, "greedy", n_slots=1)
+    eng.submit(ds.pair(0)[0])                # occupies the slot
+    lo = eng.submit(ds.pair(1)[0], priority=0)
+    hi = eng.submit(ds.pair(2)[0], priority=5)
+    eng.serve()
+    assert hi.result().admitted < lo.result().admitted
+
+
+def test_edf_breaks_priority_ties(toy):
+    ds, _, _ = toy
+    eng = _engine(toy, "greedy", n_slots=1)
+    eng.submit(ds.pair(0)[0])
+    relaxed = eng.submit(ds.pair(1)[0], deadline=1000.0)
+    urgent = eng.submit(ds.pair(2)[0], deadline=500.0)
+    eng.serve()
+    assert urgent.result().admitted < relaxed.result().admitted
+
+
+def test_submit_spec_front_door(toy):
+    ds, _, _ = toy
+    eng = _engine(toy, "speculative",
+                  mode_groups={"greedy": 1, "speculative": 1})
+    h = eng.submit_spec(RequestSpec(
+        query=ds.pair(0)[0], mode="greedy", priority=2,
+        params=GenerationParams(max_new=6)))
+    r = h.result()
+    assert r.mode == "greedy" and r.tokens.shape == (1, 6)
+
+
+def test_handle_status_after_reset_is_unknown(toy):
+    """reset() drops pending requests: their handles must report a
+    terminal 'unknown' (done() True) rather than 'queued' forever."""
+    ds, _, _ = toy
+    eng = _engine(toy, "greedy")
+    h = eng.submit(ds.pair(0)[0])
+    eng.reset()
+    assert h.status == "unknown" and h.done()
+    with pytest.raises(KeyError):
+        h.result()
+
+
+def test_serve_clock_mismatch_rejected(toy):
+    """handle.result() starts a closed-loop drive; switching to
+    realtime=True mid-drive would silently change the arrival/deadline
+    clock unit, so it must raise instead."""
+    ds, _, _ = toy
+    eng = _engine(toy, "greedy", n_slots=1)
+    h1 = eng.submit(ds.pair(0)[0])
+    eng.submit(ds.pair(1)[0])
+    h1.result()
+    with pytest.raises(RuntimeError, match="clock"):
+        eng.serve(realtime=True)
+    eng.serve()     # same clock mode: fine
+
+
+# ---------------------------------------------------------------------------
+# 7. EngineConfig early validation
+
+
+def test_engine_config_early_validation(toy, decoder):
+    ds, cfg, params = toy
+    dec_cfg, dec_params = decoder
+    with pytest.raises(ValueError):
+        EngineConfig(prefill_chunk=0)
+    with pytest.raises(ValueError):
+        EngineConfig(page_size=0)
+    with pytest.raises(ValueError):
+        EngineConfig(n_pages=1, paged=True)
+    with pytest.raises(ValueError):
+        EngineConfig(mode="turbo")
+    with pytest.raises(ValueError):
+        EngineConfig(mode_groups={"greedy": 0})
+    with pytest.raises(ValueError, match="eos_id"):
+        # tokenizer=None sessions must name their EOS up front
+        StreamingEngine(dec_params, dec_cfg, None,
+                        EngineConfig(mode="greedy"))
+    with pytest.raises(ValueError, match="worst case"):
+        # pool below one slot's worst case: clear error at construction
+        StreamingEngine(params, cfg, ds.tokenizer,
+                        EngineConfig(mode="speculative", paged=True,
+                                     page_size=8, n_pages=4))
+
+
+# ---------------------------------------------------------------------------
+# 8. hypothesis: random cancel/expiry schedules keep the allocator sound
+#    and co-resident requests byte-identical
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_random_cancellation_allocator_invariants(seed):
+    toy = _get_toy()
+    ds, _, _ = toy
+    rng = np.random.default_rng(seed)
+    queries = [ds.pair(int(i))[0] for i in rng.integers(0, 12, size=6)]
+
+    ref = _engine(toy, "speculative", n_slots=2)
+    res_ref = {}
+    for q in queries:
+        if q not in res_ref:
+            res_ref[q] = ref.submit(q).result()
+
+    eng = _engine(toy, "speculative", n_slots=2, paged=True, page_size=8)
+    hs = [eng.submit(q, arrival=float(rng.integers(0, 4)),
+                     deadline=(float(rng.integers(4, 60))
+                               if rng.random() < 0.3 else None))
+          for q in queries]
+    victims = {int(h) for h in hs if rng.random() < 0.4}
+    pump = eng.serve_steps()
+    alive = True
+    while alive:
+        try:
+            next(pump)
+        except StopIteration:
+            alive = False
+        for h in hs:
+            if int(h) in victims and h.status in ("queued", "running"):
+                if rng.random() < 0.5:
+                    h.cancel()
+    res = eng.serve()
+    alloc = eng.allocator
+    alloc.reclaim(eng.scheduler.state)
+    alloc.check()
+    assert alloc.used_pages == 0
+    for h, q in zip(hs, queries):
+        r = res.get(int(h)) or eng._done[int(h)]
+        if r.status == "ok":
+            np.testing.assert_array_equal(r.tokens, res_ref[q].tokens)

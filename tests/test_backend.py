@@ -25,8 +25,9 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import (greedy_decode, prompt_lookup_drafts,
-                        speculative_greedy_decode, transformer_handle)
+from repro.core import (beam_search, greedy_decode, prompt_lookup_drafts,
+                        speculative_beam_search, speculative_greedy_decode,
+                        transformer_handle)
 from repro.models import transformer as tr
 from repro.serving import (DecoderOnlyBackend, EngineConfig, Seq2SeqBackend,
                            StreamingEngine, make_backend)
@@ -98,6 +99,47 @@ def test_decoder_streaming_matches_one_shot(decoder_model, prompts, mode):
     res = eng.serve()
     for rid, w in zip(rids, want):
         np.testing.assert_array_equal(np.asarray(res[rid].tokens[0]), w)
+
+
+def _one_shot_beam(cfg, params, prompt, mode, n_beams):
+    """One-shot decoder-only beam / speculative-beam reference: monolithic
+    prefill of the prompt into a 1-row cache, then the batched beam loop
+    (expanded internally to n_beams * N_d rows)."""
+    handle = transformer_handle(params, cfg)
+    P = len(prompt)
+    cache = tr.init_cache(cfg, 1, P + MAX_NEW + DL + 4)
+    if P > 1:
+        _, cache = tr.prefill(params, cfg, cache,
+                              jnp.asarray(prompt[None, :-1]))
+    if mode == "beam":
+        r = beam_search(handle, cache, int(prompt[-1]), P - 1,
+                        n_beams=n_beams, max_new=MAX_NEW, eos_id=EOS)
+    else:
+        d, m = prompt_lookup_drafts(prompt, DL, ND)
+        r = speculative_beam_search(
+            handle, cache, int(prompt[-1]), P - 1, jnp.asarray(d),
+            jnp.asarray(m), n_beams=n_beams, max_new=MAX_NEW, eos_id=EOS)
+    return np.asarray(r.tokens), np.asarray(r.logprobs)
+
+
+@pytest.mark.parametrize("mode", ["beam", "speculative_beam"])
+def test_decoder_beam_streaming_matches_one_shot(decoder_model, prompts,
+                                                 mode):
+    """ROADMAP follow-on: the beam-family machinery has run in decoder-only
+    mode groups since PR 4 but only greedy/speculative were identity-tested.
+    Engine beam / spec-beam serving (chunked prefill, sibling rows adopting
+    row 0, recycled slots) must match the one-shot beam loops beam for
+    beam."""
+    cfg, params = decoder_model
+    K = 3
+    want = [_one_shot_beam(cfg, params, p, mode, K) for p in prompts]
+    eng = _engine(cfg, params, mode, n_beams=K)
+    rids = [eng.submit(p, arrival=float(i)) for i, p in enumerate(prompts)]
+    res = eng.serve()
+    for rid, (toks, logp) in zip(rids, want):
+        np.testing.assert_array_equal(np.asarray(res[rid].tokens), toks)
+        np.testing.assert_allclose(np.asarray(res[rid].logprobs), logp,
+                                   rtol=1e-5, atol=1e-5)
 
 
 def test_chunk_size_is_invisible(decoder_model, prompts):

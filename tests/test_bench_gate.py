@@ -1,6 +1,6 @@
 """Unit tests for the CI bench gate (benchmarks/check_regression.py):
-per-mode req/s floors incl. the mixed workload's per_mode entries, config
-drift detection, and missing-mode detection."""
+per-mode req/s floors incl. the mixed workload's per_mode entries, p95
+latency ceilings, config drift detection, and missing-mode detection."""
 
 import importlib.util
 import pathlib
@@ -13,16 +13,18 @@ _spec.loader.exec_module(check_regression)
 compare = check_regression.compare
 
 
-def _payload(greedy=40.0, mixed=30.0, mixed_beam=10.0, cfg=None):
+def _payload(greedy=40.0, mixed=30.0, mixed_beam=10.0, cfg=None,
+             greedy_p95=0.2, mixed_beam_p95=0.4):
     return {
         "config": cfg or {"requests": 6, "max_new": 16, "seed": 0},
         "modes": {
-            "greedy": {"rps": greedy, "p50": 0.1, "p95": 0.2},
+            "greedy": {"rps": greedy, "p50": 0.1, "p95": greedy_p95},
             "mixed": {
                 "rps": mixed,
                 "per_mode": {
                     "greedy": {"rps": mixed, "p50": 0.1, "p95": 0.2},
-                    "beam": {"rps": mixed_beam, "p50": 0.3, "p95": 0.4},
+                    "beam": {"rps": mixed_beam, "p50": 0.3,
+                             "p95": mixed_beam_p95},
                 },
             },
         },
@@ -79,3 +81,38 @@ def test_required_modes_present_pass():
     base["modes"]["decoder_greedy"] = {"rps": 25.0, "p50": 0.1, "p95": 0.2}
     assert compare(base, base, 0.30,
                    require=["greedy", "decoder_greedy", "mixed/beam"]) == []
+
+
+def test_p95_latency_blowup_fails():
+    """A mode whose p95 latency more than doubles fails even with req/s
+    intact — admission stalls hide in the tail, not the aggregate."""
+    got = compare(_payload(), _payload(greedy_p95=0.5), 0.30,
+                  latency_threshold=1.0)
+    assert len(got) == 1
+    assert got[0].startswith("greedy") and "p95" in got[0]
+
+
+def test_p95_latency_gated_inside_mixed_per_mode():
+    got = compare(_payload(), _payload(mixed_beam_p95=1.2), 0.30,
+                  latency_threshold=1.0)
+    assert len(got) == 1 and "mixed/beam" in got[0] and "p95" in got[0]
+
+
+def test_p95_latency_within_threshold_passes():
+    got = compare(_payload(), _payload(greedy_p95=0.39), 0.30,
+                  latency_threshold=1.0)
+    assert got == []
+
+
+def test_latency_gate_disabled_by_none():
+    got = compare(_payload(), _payload(greedy_p95=50.0), 0.30,
+                  latency_threshold=None)
+    assert got == []
+
+
+def test_latency_gate_ignores_modes_without_p95():
+    """Baselines predating the latency fields must not crash the gate."""
+    base = _payload()
+    del base["modes"]["greedy"]["p95"]
+    got = compare(base, _payload(), 0.30, latency_threshold=1.0)
+    assert got == []
