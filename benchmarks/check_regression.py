@@ -43,12 +43,45 @@ def _flat_metric(payload: dict, metric: str) -> dict[str, float]:
     return out
 
 
+def _gate_increase(
+    baseline: dict,
+    new: dict,
+    metric: str,
+    threshold: float,
+    unit: str,
+    failures: list[str],
+) -> None:
+    """Ratio gate on a lower-is-better metric: fail any mode whose fresh
+    value exceeds ``(1 + threshold) * baseline``. Modes absent from the
+    baseline are skipped — a baseline committed before the metric existed
+    stays valid until the next regeneration."""
+    base = _flat_metric(baseline, metric)
+    fresh = _flat_metric(new, metric)
+    for key, old in sorted(base.items()):
+        if key not in fresh or old <= 0.0:
+            continue
+        now = fresh[key]
+        ceiling = (1.0 + threshold) * old
+        verdict = "FAIL" if now > ceiling else "ok"
+        print(
+            f"  {key:24s} baseline {old:8.3f} {unit:9s} new {now:8.3f} "
+            f"{unit:9s} ceiling {ceiling:6.3f}   {verdict}"
+        )
+        if now > ceiling:
+            failures.append(
+                f"{key}: {metric} {now:.3f}{unit} is more than "
+                f"{threshold:.0%} above baseline {old:.3f}{unit}"
+            )
+
+
 def compare(
     baseline: dict,
     new: dict,
     threshold: float,
     require: list[str] | None = None,
     latency_threshold: float | None = None,
+    step_gap_threshold: float | None = None,
+    dispatch_threshold: float | None = None,
 ) -> list[str]:
     """Return a list of human-readable gate failures (empty = pass).
 
@@ -60,6 +93,13 @@ def compare(
 
     ``latency_threshold``: max tolerated fractional p95 latency INCREASE
     per mode (None disables the latency gate).
+
+    ``step_gap_threshold`` / ``dispatch_threshold``: the fused-megastep
+    gates — max tolerated fractional increase in the host step-gap p95
+    (seconds between bundle syncs) and in jitted dispatches per generated
+    token. A host sync snuck into the hot loop, or a step falling back to
+    multi-dispatch, shows up here before it shows up in req/s. Modes whose
+    baseline predates these metrics are skipped (baseline-compatible).
     """
     failures: list[str] = []
     cfg_b, cfg_n = baseline.get("config", {}), new.get("config", {})
@@ -111,6 +151,19 @@ def compare(
                     f"{key}: p95 latency {now:.2f}s is more than "
                     f"{latency_threshold:.0%} above baseline {old:.2f}s"
                 )
+    if step_gap_threshold is not None:
+        _gate_increase(
+            baseline, new, "step_gap_p95_s", step_gap_threshold, "s gap", failures
+        )
+    if dispatch_threshold is not None:
+        _gate_increase(
+            baseline,
+            new,
+            "dispatches_per_token",
+            dispatch_threshold,
+            " d/tok",
+            failures,
+        )
     return failures
 
 
@@ -130,6 +183,22 @@ def main() -> int:
         default=1.0,
         help="max tolerated fractional p95 latency increase per mode "
         "(default 1.0 = p95 may double; pass a negative value to disable)",
+    )
+    ap.add_argument(
+        "--step-gap-threshold",
+        type=float,
+        default=1.0,
+        help="max tolerated fractional host step-gap p95 increase per mode "
+        "(default 1.0 = the gap may double; negative disables; modes whose "
+        "baseline lacks the metric are skipped)",
+    )
+    ap.add_argument(
+        "--dispatch-threshold",
+        type=float,
+        default=0.5,
+        help="max tolerated fractional increase in jitted dispatches per "
+        "generated token (default 0.5; negative disables; modes whose "
+        "baseline lacks the metric are skipped)",
     )
     ap.add_argument(
         "--require",
@@ -153,6 +222,12 @@ def main() -> int:
         require=args.require,
         latency_threshold=(
             None if args.latency_threshold < 0 else args.latency_threshold
+        ),
+        step_gap_threshold=(
+            None if args.step_gap_threshold < 0 else args.step_gap_threshold
+        ),
+        dispatch_threshold=(
+            None if args.dispatch_threshold < 0 else args.dispatch_threshold
         ),
     )
     if failures:

@@ -94,6 +94,26 @@ def _warmup(eng, query) -> None:
     eng.reset()
 
 
+def _loop_row(eng, results) -> dict:
+    """Host-loop dispatch accounting for the fused-megastep drive: jitted
+    dispatches per generated token / per scheduler iteration (steady state
+    == 1.0: one megastep and nothing else) and the host step-gap (seconds
+    between consecutive bundle syncs) percentiles. ``check_regression.py``
+    gates ``dispatches_per_token`` and ``step_gap_p95_s``."""
+    loop = eng.loop_stats()
+    gen = sum(int(r.lengths[0]) for r in results)
+    dispatches = loop["dispatches_per_iteration"] * loop["n_iterations"]
+    return {
+        "n_iterations": loop["n_iterations"],
+        "dispatches_per_iteration": loop["dispatches_per_iteration"],
+        "dispatches_per_token": dispatches / max(gen, 1),
+        "steady_iterations_one_dispatch":
+            loop["steady_iterations_one_dispatch"],
+        "step_gap_p50_s": loop["step_gap_p50_s"],
+        "step_gap_p95_s": loop["step_gap_p95_s"],
+    }
+
+
 def _engine_row(eng, results) -> dict:
     """The per-mode result row every single-session workload shares:
     throughput, latency/queue-delay percentiles, acceptance, residency."""
@@ -109,6 +129,7 @@ def _engine_row(eng, results) -> dict:
         "slots_resident": eng.scheduler.max_resident,
         "preemptions": eng.scheduler.n_preemptions,
         "cache": eng.cache_footprint(),
+        **_loop_row(eng, results),
     }
 
 
@@ -211,6 +232,7 @@ def run_mixed(params, cfg, tok, queries, arrivals, args, *, groups=None,
         "preemptions": eng.scheduler.n_preemptions,
         "per_mode": per_mode,
         "cache": eng.cache_footprint(),
+        **_loop_row(eng, results),
     }
 
 
@@ -279,14 +301,16 @@ def main() -> None:
     print(f"\n{args.requests} requests, Poisson rate {args.rate}/s, "
           f"{args.slots} slots, max_new={args.max_new}")
     print(f"{'mode':18s} {'req/s':>7s} {'p50 lat':>9s} {'p95 lat':>9s} "
-          f"{'steps':>6s} {'accept':>7s}")
+          f"{'steps':>6s} {'accept':>7s} {'disp/tok':>9s} {'gap p95':>9s}")
     rows = {}
     for mode in args.modes:
         if mode == "mixed":
             r = run_mixed(params, cfg, tok, queries, arrivals, args)
             rows[mode] = r
             print(f"{r['mode']:18s} {r['rps']:7.2f} {r['p50']:8.2f}s "
-                  f"{r['p95']:8.2f}s {r['steps']:6d} {'':>7s}")
+                  f"{r['p95']:8.2f}s {r['steps']:6d} {'':>7s} "
+                  f"{r['dispatches_per_token']:9.2f} "
+                  f"{r['step_gap_p95_s'] * 1e3:7.1f}ms")
             for m, pm in r["per_mode"].items():
                 print(f"  mixed/{m:11s} {pm['rps']:7.2f} {pm['p50']:8.2f}s "
                       f"{pm['p95']:8.2f}s {pm['requests']:5d}r")
@@ -295,7 +319,9 @@ def main() -> None:
             r = run_priority_mix(params, cfg, tok, queries, arrivals, args)
             rows[mode] = r
             print(f"{r['mode']:18s} {r['rps']:7.2f} {r['p50']:8.2f}s "
-                  f"{r['p95']:8.2f}s {r['steps']:6d} {'':>7s}")
+                  f"{r['p95']:8.2f}s {r['steps']:6d} {'':>7s} "
+                  f"{r['dispatches_per_token']:9.2f} "
+                  f"{r['step_gap_p95_s'] * 1e3:7.1f}ms")
             for cls, pc in r["per_priority"].items():
                 print(f"  prio/{cls:12s} queue delay p50 "
                       f"{pc['queue_delay_p50']:6.2f}s  p95 "
@@ -307,7 +333,9 @@ def main() -> None:
             r = run_mode(mode, params, cfg, tok, queries, arrivals, args)
         rows[mode] = r
         print(f"{r['mode']:18s} {r['rps']:7.2f} {r['p50']:8.2f}s "
-              f"{r['p95']:8.2f}s {r['steps']:6d} {r['acceptance']:7.2f}")
+              f"{r['p95']:8.2f}s {r['steps']:6d} {r['acceptance']:7.2f} "
+              f"{r['dispatches_per_token']:9.2f} "
+              f"{r['step_gap_p95_s'] * 1e3:7.1f}ms")
 
     if "greedy" in rows and "speculative" in rows:
         speedup = rows["speculative"]["rps"] / rows["greedy"]["rps"]

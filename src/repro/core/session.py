@@ -626,6 +626,186 @@ class PageAllocator:
             "page leaked"
 
 
+# ---------------------------------------------------------------------------
+# paged-cache page allocation (device side — the fused megastep's free stack)
+
+
+class DevicePagePlan(NamedTuple):
+    """One iteration's page maintenance, computed ON DEVICE inside the
+    fused megastep (``StreamingEngine``): the same lazy-growth +
+    copy-on-write walk ``PageAllocator.prepare_step`` and ``map_prefill``
+    do on the host, restated as fixed-shape lane arrays over the block
+    tables. ``exhausted`` is the device flag the scheduler syncs on —
+    allocation is all-or-nothing, so an exhausted iteration applies
+    nothing and the host preempts + replays exactly as before. All lane
+    arrays share one flat length L (decode windows of every group, then
+    prefill chunk lanes)."""
+
+    exhausted: jnp.ndarray       # () bool — need_total > n_free
+    n_free: jnp.ndarray          # () int32 free pages before allocation
+    need_by_group: jnp.ndarray   # (G,) int32 pages each group's lanes need
+    rows: jnp.ndarray            # (L,) int32 lane cache row
+    blocks: jnp.ndarray          # (L,) int32 lane logical block
+    need: jnp.ndarray            # (L,) bool lane allocates a page
+    copy: jnp.ndarray            # (L,) bool draft-boundary copy-on-write
+    cur: jnp.ndarray             # (L,) int32 current page (-1 = unmapped)
+    new: jnp.ndarray             # (L,) int32 allocated page (if ``need``)
+
+
+def _page_refs(bt: jnp.ndarray, n_pages: int) -> jnp.ndarray:
+    """(n_pages,) reference counts over one block table. Released and
+    recycled rows are always unmapped (``release``/``_clean_rows``), so
+    every mapped entry belongs to a live — active or mid-prefill — row:
+    the device needs no pinned-row side channel."""
+    return jnp.zeros((n_pages,), jnp.int32).at[
+        jnp.where(bt >= 0, bt, n_pages).reshape(-1)].add(1, mode="drop")
+
+
+def device_free_pages(cache, n_pages: int) -> jnp.ndarray:
+    """() int32 — pages no live row references (the mirrored-counter feed
+    for host-side admission accounting)."""
+    leaves, _, idx = paged_cache_entries(cache)
+    bt = leaves[idx[0]].block_tables[0]
+    refs = _page_refs(bt, n_pages)
+    return jnp.sum(((refs == 0)
+                    & (jnp.arange(n_pages) != TRASH_PAGE)).astype(jnp.int32))
+
+
+def device_page_plan(specs, blocks, page_size: int, n_pages: int,
+                     gstate: GroupedState, prefill=None) -> DevicePagePlan:
+    """Plan this iteration's page maintenance on device.
+
+    ``specs``/``blocks`` are static (the allocator's per-group logical
+    block counts); ``prefill`` is None or a per-group tuple of
+    ``(rows0, pos0, n_valid, chunk)`` describing the chunk each group's
+    slots write this iteration (``rows0``/``chunk`` static, the rest
+    traced; ``n_valid == 0`` lanes are idle).
+
+    The copy-on-write rule replicates the host walk's outcome without its
+    sequential refcount mutation: a lane keeps its current page iff no
+    out-of-window row references it (``refs == win_refs``) AND the lane is
+    the highest-row in-window referencer (the host walk visits rows in
+    ascending order, so the LAST visitor sees refs == 1 and keeps the
+    page). Fresh pages come off an ascending free stack — page identity
+    never affects tokens (attention masks on stored positions), only the
+    count matters for accounting."""
+    ps, P = int(page_size), int(n_pages)
+    leaves, _, idx = paged_cache_entries(gstate.cache)
+    bt = leaves[idx[0]].block_tables[0]
+    n_rows_tab, n_blocks = bt.shape
+    refs = _page_refs(bt, P)
+    free = (refs == 0) & (jnp.arange(P) != TRASH_PAGE)
+    n_free = jnp.sum(free.astype(jnp.int32))
+    rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+    stack = jnp.full((P,), P, jnp.int32).at[
+        jnp.where(free, rank, P)].set(jnp.arange(P, dtype=jnp.int32),
+                                      mode="drop")
+
+    offs = group_row_offsets(specs)
+    lane_r, lane_j, lane_valid, lane_pos, lane_w0, lane_gi = \
+        [], [], [], [], [], []
+    for gi, (spec, gs) in enumerate(zip(specs, gstate.groups)):
+        lo = offs[gi]
+        K, N_d, DL = spec.n_beams, spec.n_drafts, spec.draft_len
+        nR, W = spec.n_rows, DL // ps + 2
+        rg = jnp.arange(nR, dtype=jnp.int32)
+        s, k = rg // (K * N_d), (rg // N_d) % K
+        pos_r = gs.pos[s, k]
+        act = gs.active[s]
+        w = jnp.arange(W, dtype=jnp.int32)
+        j = pos_r[:, None] // ps + w[None, :]
+        hi = jnp.minimum((pos_r + DL) // ps, blocks[gi] - 1)
+        lane_r.append(jnp.broadcast_to((lo + rg)[:, None],
+                                       (nR, W)).reshape(-1))
+        lane_j.append(j.reshape(-1))
+        lane_valid.append((act[:, None] & (j <= hi[:, None])).reshape(-1))
+        lane_pos.append(jnp.broadcast_to(pos_r[:, None], (nR, W)).reshape(-1))
+        lane_w0.append(jnp.broadcast_to(w[None, :] == 0, (nR, W)).reshape(-1))
+        lane_gi.append(jnp.full((nR * W,), gi, jnp.int32))
+    r = jnp.concatenate(lane_r)
+    jb = jnp.concatenate(lane_j)
+    valid = jnp.concatenate(lane_valid)
+    posl = jnp.concatenate(lane_pos)
+    w0 = jnp.concatenate(lane_w0)
+    gsel = jnp.concatenate(lane_gi)
+
+    cur = jnp.where(valid, bt[r, jnp.clip(jb, 0, n_blocks - 1)], -1)
+    vc = valid & (cur >= 0)
+    safe_cur = jnp.where(vc, cur, P)
+    win_refs = jnp.zeros((P,), jnp.int32).at[safe_cur].add(1, mode="drop")
+    keeper = jnp.full((P,), -1, jnp.int32).at[safe_cur].max(
+        jnp.where(vc, r, -1), mode="drop")
+    cc = jnp.clip(cur, 0, P - 1)
+    keep = vc & (refs[cc] == win_refs[cc]) & (r == keeper[cc])
+    need = valid & ~keep
+    copy = need & vc & w0 & (posl % ps != 0)
+
+    if prefill is not None:
+        # frontier growth for this iteration's prompt chunks (map_prefill's
+        # skip-already-mapped semantics): always fresh pages, row 0 only
+        pr, pj, pn, pg = [r], [jb], [need], [gsel]
+        pc, pu = [copy], [cur]
+        for gi, pf in enumerate(prefill):
+            rows0, pos0, n_valid, chunk = pf
+            CB = -(-int(chunk) // ps) + 1
+            c = jnp.arange(CB, dtype=jnp.int32)
+            j = pos0[:, None] // ps + c[None, :]
+            hi = (pos0 + jnp.maximum(n_valid, 1) - 1) // ps
+            r0 = jnp.asarray(rows0, jnp.int32)
+            mapped = bt[r0[:, None], jnp.clip(j, 0, n_blocks - 1)] >= 0
+            v = (n_valid[:, None] > 0) & (j <= hi[:, None]) & ~mapped
+            L = v.size
+            pr.append(jnp.broadcast_to(r0[:, None], j.shape).reshape(-1))
+            pj.append(j.reshape(-1))
+            pn.append(v.reshape(-1))
+            pc.append(jnp.zeros((L,), bool))
+            pu.append(jnp.full((L,), -1, jnp.int32))
+            pg.append(jnp.full((L,), gi, jnp.int32))
+        r, jb = jnp.concatenate(pr), jnp.concatenate(pj)
+        need, copy = jnp.concatenate(pn), jnp.concatenate(pc)
+        cur, gsel = jnp.concatenate(pu), jnp.concatenate(pg)
+
+    ni = jnp.cumsum(need.astype(jnp.int32)) - 1
+    new = stack[jnp.clip(jnp.where(need, ni, 0), 0, P - 1)]
+    need_total = jnp.sum(need.astype(jnp.int32))
+    need_by_group = jnp.zeros((len(specs),), jnp.int32).at[gsel].add(
+        need.astype(jnp.int32))
+    return DevicePagePlan(exhausted=need_total > n_free, n_free=n_free,
+                          need_by_group=need_by_group, rows=r, blocks=jb,
+                          need=need, copy=copy, cur=cur, new=new)
+
+
+def apply_page_plan(cache, plan: DevicePagePlan):
+    """Apply a non-exhausted plan to every paged node of a model cache:
+    scatter the new table entries, copy the draft-boundary pages
+    (committed prefix rides along; stale draft slots past ``pos`` are
+    overwritten pre-read by the next step), and mark fresh pages empty
+    (stored position -1). The caller predicates on ``plan.exhausted`` —
+    an exhausted iteration must apply nothing (preempt-and-replay)."""
+    leaves, treedef, idx = paged_cache_entries(cache)
+    P = int(leaves[idx[0]].pos.shape[1])
+    n_rows = int(leaves[idx[0]].block_tables.shape[1])
+    rr = jnp.where(plan.need, plan.rows, n_rows)
+    copy_dst = jnp.where(plan.copy, plan.new, P)
+    copy_src = jnp.clip(jnp.where(plan.copy, plan.cur, 0), 0, P - 1)
+    fresh_dst = jnp.where(plan.need & ~plan.copy, plan.new, P)
+    bt_new = leaves[idx[0]].block_tables[0].at[
+        rr, plan.blocks].set(plan.new, mode="drop")
+    for i in idx:
+        sc = leaves[i]
+        k_pool = sc.k_pool.at[:, copy_dst].set(
+            sc.k_pool[:, copy_src], mode="drop")
+        v_pool = sc.v_pool.at[:, copy_dst].set(
+            sc.v_pool[:, copy_src], mode="drop")
+        pos = sc.pos.at[:, copy_dst].set(sc.pos[:, copy_src], mode="drop")
+        pos = pos.at[:, fresh_dst].set(-1, mode="drop")
+        leaves[i] = dataclasses.replace(
+            sc, k_pool=k_pool, v_pool=v_pool, pos=pos,
+            block_tables=jnp.broadcast_to(
+                bt_new[None], sc.block_tables.shape))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def _is_stop_token(spec: SessionSpec, tok: jnp.ndarray,
                    stop_ids: jnp.ndarray) -> jnp.ndarray:
     """True where ``tok`` terminates its slot's sequence: the session-wide

@@ -125,6 +125,32 @@ def merge_rows(cache, part, lo: int, hi: int):
     return jax.tree_util.tree_map(one, cache, part, is_leaf=_is_paged)
 
 
+def take_rows(cache, rows):
+    """Gather a STATIC list of batch rows (axis 1) into a compact sub-cache
+    — the fused-megastep prefill path carves every chunked slot's row 0 out
+    of the session cache in one shot (slot row offsets are static, so this
+    is plain indexing, no dynamic slicing). Paged nodes gather only their
+    block-table rows; the sub-cache reads and writes the one true page pool
+    through those rows."""
+    rows = jnp.asarray(rows, jnp.int32)
+    return _paged_map(lambda a: jnp.take(a, rows, axis=1), cache)
+
+
+def put_rows(cache, sub, rows):
+    """Write a ``take_rows`` sub-cache back after a model step. Dense
+    leaves scatter their rows at the STATIC ``rows``; paged nodes adopt the
+    stepped pool wholesale and keep the full block tables (a decode step
+    writes pages, never tables)."""
+    rows = jnp.asarray(rows, jnp.int32)
+
+    def one(full, s):
+        if _is_paged(full):
+            return dataclasses.replace(s, block_tables=full.block_tables)
+        return full.at[:, rows].set(s.astype(full.dtype))
+
+    return jax.tree_util.tree_map(one, cache, sub, is_leaf=_is_paged)
+
+
 def set_rows(cache, rows: jnp.ndarray, values):
     """Scatter ``values`` into batch rows ``rows`` (axis 1): the continuous-
     batching admission path. ``rows`` may be traced — admitting into a freed

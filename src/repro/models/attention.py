@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Any
 
 import jax
@@ -106,6 +107,22 @@ def _write_cache(cache: KVCache, k_new, v_new, positions) -> KVCache:
 
 
 TRASH_PAGE = 0  # reserved: writes with no mapped target land here, pos = -1
+
+# Opt-in fast read path: the Pallas block-table kernel replaces paged_view's
+# materialized (B, n_blocks*ps, ...) gather in cached_attention. Off by
+# default — the XLA view is the reference. The flag is read at trace time,
+# so flipping it after a function has been jitted means a retrace, not a
+# silent no-op; flip it before warmup.
+_PAGED_KERNEL = os.environ.get("REPRO_PAGED_KERNEL", "") not in ("", "0", "false")
+
+
+def use_paged_kernel(enabled: bool = True) -> None:
+    global _PAGED_KERNEL
+    _PAGED_KERNEL = bool(enabled)
+
+
+def paged_kernel_enabled() -> bool:
+    return _PAGED_KERNEL
 
 
 @dataclasses.dataclass
@@ -433,6 +450,16 @@ def cached_attention(p: dict, cfg: ModelConfig, x, cache, positions,
         k_new = apply_rope(k_new, positions, cfg.rope_theta)
     if isinstance(cache, PagedKVCache):
         cache = _write_cache_paged(cache, k_new, v_new, positions)
+        if _PAGED_KERNEL:
+            # Lazy import: models must not depend on the kernels package
+            # unless the fast path is actually enabled.
+            from repro.kernels.decode_gqa import paged_decode_gqa_attention
+            out = paged_decode_gqa_attention(
+                q, cache.k_pool, cache.v_pool, cache.pos,
+                cache.block_tables, positions,
+                window=cfg.sliding_window,
+                interpret=jax.default_backend() != "tpu")
+            return dense(p["wo"], out.reshape(B, T, -1)), cache
         k, v, kpos = paged_view(cache)
     else:
         cache = _write_cache(cache, k_new, v_new, positions)

@@ -58,7 +58,7 @@ from repro.core.handles import DecoderHandle
 from repro.core.session import SessionSpec, unmap_cache_rows
 from repro.serving.api import GenerationParams
 from repro.core.tree_batch import (dynamic_merge_rows, dynamic_slice_rows,
-                                   set_rows)
+                                   put_rows, set_rows, take_rows)
 from repro.models import attention as attn_mod
 from repro.models import seq2seq as s2s
 from repro.models import transformer as tr
@@ -344,6 +344,26 @@ class DecoderOnlyBackend:
                                     positions)
         sub = handle.commit_cache(sub, jnp.reshape(jnp.int32(n_valid), (1,)))
         return dynamic_merge_rows(cache, sub, row0)
+
+    def prefill_chunks_cache(self, params, cache, rows0, tokens, pos0,
+                             n_valid):
+        """Batched chunk-lane prefill (the fused megastep's prefill leg):
+        one ``decode_step`` writes this iteration's prompt chunk for EVERY
+        slot of a group at once — ``rows0`` is the STATIC list of the
+        group's slot-leading cache rows, ``tokens`` (S_g, C) / ``pos0``
+        (S_g,) / ``n_valid`` (S_g,) are traced. Idle lanes carry
+        ``n_valid == 0``: every write lands at position -1 (the trash
+        slot/page) and ``commit_cache(0)`` restores the lane's recurrent
+        checkpoint exactly, so co-resident decoding rows are untouched."""
+        sub = take_rows(cache, rows0)
+        C = tokens.shape[1]
+        rel = jnp.arange(C, dtype=jnp.int32)
+        positions = jnp.where(rel[None, :] < n_valid[:, None],
+                              pos0[:, None] + rel[None, :], -1)
+        handle = self.step_handle(params)
+        _, sub = handle.decode_step(sub, tokens.astype(jnp.int32), positions)
+        sub = handle.commit_cache(sub, n_valid.astype(jnp.int32))
+        return put_rows(cache, sub, rows0)
 
     def finish_cache(self, cache, rows):
         return _adopt_row0(cache, rows)

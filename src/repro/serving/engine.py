@@ -79,7 +79,9 @@ from repro.core import (
     speculative_beam_search, speculative_greedy_decode,
 )
 from repro.core.session import (GroupedState, PageAllocator, PoolExhausted,
-                                SessionSpec, grouped_init_state, grouped_step,
+                                SessionSpec, apply_page_plan,
+                                device_free_pages, device_page_plan,
+                                grouped_init_state, grouped_step,
                                 release_slot, reset_slot, unmap_cache_rows)
 from repro.data.tokenizer import SmilesTokenizer
 from repro.models import seq2seq as s2s
@@ -361,16 +363,32 @@ class StreamingEngine:
         self.n_traces = {"step": 0}
         self.n_traces.update({("admit", m): 0 for m in self._groups})
         if self.backend.chunked:
-            self.n_traces.update({("chunk", m): 0 for m in self._groups})
+            # the fused megastep has a second variant that carries this
+            # iteration's prefill chunk lanes (chunked backends only — a
+            # monolithic session never prefills inside the step)
+            self.n_traces["step_prefill"] = 0
             self.n_traces.update({("finish", m): 0 for m in self._groups})
         # donate the session state: the scheduler threads it linearly, so
-        # XLA updates the (dominant) cache buffers in place every step
-        self._step_fn = jax.jit(self._step_impl, donate_argnums=(1,))
+        # XLA updates the (dominant) cache buffers in place every step.
+        # ONE dispatch per steady-state iteration: the megastep fuses page
+        # maintenance + prefill chunks + the grouped decode step.
+        self._megastep_fn = jax.jit(self._megastep_impl,
+                                    donate_argnums=(1,))
+        if self.backend.chunked:
+            self._megastep_prefill_fn = jax.jit(
+                self._megastep_prefill_impl, donate_argnums=(1,))
         self._admit_fns = {m: self._make_admit(m) for m in self._groups}
         if self.backend.chunked:
-            self._chunk_fns = {m: self._make_chunk(m) for m in self._groups}
             self._finish_fns = {m: self._make_finish(m) for m in self._groups}
         self._release_fns = {m: self._make_release(m) for m in self._groups}
+        # dispatch-ahead loop instrumentation: total jitted dispatches,
+        # per-iteration dispatch counts, and host step-gap samples (time
+        # between consecutive bundle syncs) — bounded, benchmark-read
+        self.n_dispatches = 0
+        self._disp_mark = 0
+        self._dispatch_samples: list[int] = []
+        self._step_gaps: list[float] = []
+        self._last_sync_t: float | None = None
         # host-side chunked-prefill bookkeeping: global slot ->
         # {mode, req, next-chunk cursor}; slots currently decoding
         # (admission fully applied)
@@ -396,10 +414,129 @@ class StreamingEngine:
 
     # -- jitted session functions (compiled ONCE per engine group, every
     #    request and every slot of the group reuses them) -------------------
-    def _step_impl(self, params, gstate):
+    def _megastep_impl(self, params, gstate):
+        """Fused megastep, decode-only variant: page maintenance + ONE
+        grouped decode iteration in a single dispatch."""
         self.n_traces["step"] += 1
+        return self._megastep_body(params, gstate, None)
+
+    def _megastep_prefill_impl(self, params, gstate, prefill):
+        """Fused megastep carrying this iteration's prefill chunk lanes
+        (chunked backends with a prompt mid-stream): page maintenance +
+        chunk writes + the grouped decode step, still one dispatch."""
+        self.n_traces["step_prefill"] += 1
+        return self._megastep_body(params, gstate, prefill)
+
+    def _chunk_rows0(self, mode: str) -> list[int]:
+        """STATIC slot-leading cache rows of ``mode``'s group (row 0 of
+        each slot — the row a chunked prefill writes)."""
+        spec = self._groups[mode]
+        lo = self._row_lo[mode]
+        return [lo + i * spec.rows_per_slot for i in range(spec.n_slots)]
+
+    def _write_chunks(self, params, gstate, prefill):
+        """Apply the staged prefill chunk lanes (every group, idle lanes
+        are ``n_valid == 0`` no-ops) inside the megastep."""
+        if prefill is None:
+            return gstate
+        cache = gstate.cache
+        for mode, (tokens, pos0, n_valid) in zip(self.mode_names, prefill):
+            cache = self.backend.prefill_chunks_cache(
+                params, cache, self._chunk_rows0(mode), tokens, pos0,
+                n_valid)
+        return GroupedState(groups=gstate.groups, cache=cache)
+
+    def _megastep_body(self, params, gstate, prefill):
+        """One fused device step, the steady-state iteration's ONLY
+        dispatch: (paged) plan page maintenance on device, then — unless
+        the pool is exhausted, in which case the whole step is an identity
+        pass-through so the host can preempt and replay it exactly —
+        apply the plan, write this iteration's prefill chunks, and run the
+        grouped decode step. Returns ``(gstate, bundle)`` where the bundle
+        holds everything the host syncs on: the finished mask, committed
+        counts + greedy stream deltas, and the page counters that feed the
+        mirrored admission accounting."""
+        specs = tuple(self._groups.values())
         handle = self.backend.step_handle(params)
-        return grouped_step(tuple(self._groups.values()), handle, gstate)
+        n_out0 = self._slot_counts(gstate)
+        plan = None
+        if self.ecfg.paged:
+            n_pages, ps = self._paged_geometry()
+            blocks = tuple(self.allocator._blocks[m]
+                           for m in self.mode_names)
+            plan_prefill = None
+            if prefill is not None:
+                C = max(1, int(self.ecfg.prefill_chunk))
+                plan_prefill = tuple(
+                    (self._chunk_rows0(m), pos0, n_valid, C)
+                    for m, (_, pos0, n_valid)
+                    in zip(self.mode_names, prefill))
+            plan = device_page_plan(specs, blocks, ps, n_pages, gstate,
+                                    prefill=plan_prefill)
+
+            def body(g):
+                g = GroupedState(groups=g.groups,
+                                 cache=apply_page_plan(g.cache, plan))
+                g = self._write_chunks(params, g, prefill)
+                return grouped_step(specs, handle, g)
+
+            gstate = jax.lax.cond(plan.exhausted, lambda g: g, body, gstate)
+        else:
+            gstate = self._write_chunks(params, gstate, prefill)
+            gstate = grouped_step(specs, handle, gstate)
+        return gstate, self._make_bundle(gstate, n_out0, plan)
+
+    def _slot_counts(self, gstate) -> jnp.ndarray:
+        """(n_slots,) committed-token counts on each slot's row 0, global
+        slot order (groups are slot-contiguous in declaration order)."""
+        return jnp.concatenate([gs.n_out[:, 0] for gs in gstate.groups])
+
+    def _make_bundle(self, gstate, n_out0, plan) -> dict:
+        """The megastep's host-sync bundle: small fixed-shape arrays (the
+        per-iteration readback is O(n_slots), never the session state)."""
+        specs = list(self._groups.values())
+        maxW = max([s.draft_len + 1 for s in specs if s.kind == "greedy"],
+                   default=1)
+        finished = jnp.concatenate([gs.finished.all(axis=1)
+                                    for gs in gstate.groups])
+        n_out1 = self._slot_counts(gstate)
+        n_new = n_out1 - n_out0
+        w = jnp.arange(maxW, dtype=jnp.int32)
+        deltas, lo = [], 0
+        for spec, gs in zip(specs, gstate.groups):
+            S = spec.n_slots
+            if spec.kind == "greedy":
+                n0 = n_out0[lo:lo + S]
+                idx = jnp.clip(n0[:, None] + w[None, :], 0,
+                               spec.max_new - 1)
+                tok = jnp.take_along_axis(gs.tokens[:, 0], idx, axis=1)
+                d = jnp.where(w[None, :] < n_new[lo:lo + S, None], tok, 0)
+            else:
+                # beams reorder mid-flight: only terminal reads are truthful
+                d = jnp.zeros((S, maxW), jnp.int32)
+            deltas.append(d)
+            lo += S
+        bundle = dict(finished=finished, n_out=n_out1, n_new=n_new,
+                      delta=jnp.concatenate(deltas, axis=0))
+        if plan is not None:
+            n_pages, _ = self._paged_geometry()
+            spent = jnp.sum(plan.need_by_group)
+            bundle.update(
+                exhausted=plan.exhausted,
+                # free pages right after allocation (the peak-usage feed);
+                # an exhausted plan allocates nothing
+                n_free_alloc=jnp.where(plan.exhausted, plan.n_free,
+                                       plan.n_free - spent),
+                # recounted POST-step: winner sync / beam reorder orphan
+                # pages inside the step, and the mirror must see them free
+                n_free_final=device_free_pages(gstate.cache, n_pages),
+                need=plan.need_by_group)
+        else:
+            bundle.update(exhausted=jnp.asarray(False),
+                          n_free_alloc=jnp.int32(0),
+                          n_free_final=jnp.int32(0),
+                          need=jnp.zeros((len(specs),), jnp.int32))
+        return bundle
 
     def _slot_rows(self, mode: str, slot):
         spec = self._groups[mode]
@@ -451,23 +588,6 @@ class StreamingEngine:
                 GroupedState(groups=gstate.groups, cache=cache), gi, gs)
 
         return jax.jit(admit, donate_argnums=(1,))
-
-    def _make_chunk(self, mode: str):
-        """Jitted: one fixed-size prefill chunk into the slot's first cache
-        row (traced slot, traced chunk values — ragged prompt lengths only
-        change the chunk COUNT, on the host)."""
-        spec = self._groups[mode]
-        lo = self._row_lo[mode]
-        be = self.backend
-
-        def chunk(params, gstate, slot, tokens, pos0, n_valid):
-            self.n_traces["chunk", mode] += 1
-            row0 = lo + slot * spec.rows_per_slot
-            cache = be.prefill_chunk_cache(params, gstate.cache, row0,
-                                           tokens, pos0, n_valid)
-            return GroupedState(groups=gstate.groups, cache=cache)
-
-        return jax.jit(chunk, donate_argnums=(1,))
 
     def _make_finish(self, mode: str):
         """Jitted: prefill done — siblings adopt row 0's context (dense
@@ -551,55 +671,171 @@ class StreamingEngine:
         spec = self._groups[mode]
         return self._row_lo[mode] + local * spec.rows_per_slot
 
-    def _pump_prefill(self, state):
-        """Advance every mid-prefill slot by ONE chunk (decode steps for
-        resident slots interleave between pumps — a long admission never
-        stalls the session), activating slots whose prompt is fully
-        written. Paged sessions map each chunk's pages into the slot's
-        block table first; ``PoolExhausted`` propagates to the scheduler,
-        which preempts a resident and retries."""
-        ps = self.ecfg.page_size
-        for slot in sorted(self._prefilling):
+    # -- dispatch-ahead drive hooks ------------------------------------------
+    def _stage_chunks(self):
+        """Build this iteration's prefill chunk lanes from the mid-prefill
+        cursors: a per-group ``(tokens (S_g, C), pos0, n_valid)`` tuple
+        covering EVERY group (idle lanes are ``n_valid == 0``), or None
+        when nothing is mid-prefill — the decode-only megastep variant
+        dispatches instead. One chunk per slot per iteration, so a long
+        admission never stalls resident decoding. The cursor lives on the
+        host record, NOT the Request: a preempted request requeues with
+        its chunk plan intact and replays deterministically."""
+        staged = [s for s in sorted(self._prefilling)
+                  if self._prefilling[s]["next"]
+                  < len(self._prefilling[s]["req"].chunks)]
+        if not staged:
+            return None, []
+        C = max(1, int(self.ecfg.prefill_chunk))
+        toks = {m: np.zeros((spec.n_slots, C), np.int32)
+                for m, spec in self._groups.items()}
+        pos0 = {m: np.zeros((spec.n_slots,), np.int32)
+                for m, spec in self._groups.items()}
+        nval = {m: np.zeros((spec.n_slots,), np.int32)
+                for m, spec in self._groups.items()}
+        for slot in staged:
             rec = self._prefilling[slot]
+            mode = rec["mode"]
+            local = slot - self._slot_base[mode]
+            tokens, p0, nv = rec["req"].chunks[rec["next"]]
+            toks[mode][local] = np.asarray(tokens)
+            pos0[mode][local] = p0
+            nval[mode][local] = nv
+        prefill = tuple((jnp.asarray(toks[m]), jnp.asarray(pos0[m]),
+                         jnp.asarray(nval[m])) for m in self.mode_names)
+        return prefill, staged
+
+    def _dispatch_step(self, state):
+        """Scheduler ``dispatch`` hook: issue ONE fused megastep (async —
+        JAX dispatch returns immediately) and snapshot who it was issued
+        for (resident rids, mid-prefill slots, staged chunks). Exhaustion
+        replays re-stage from the then-current cursors, so a preempted
+        victim's lanes drop out of the retry automatically."""
+        prefill, staged = (self._stage_chunks() if self.backend.chunked
+                           else (None, []))
+        self._staged_slots = staged
+        self._dispatch_rids = {s: r.rid
+                               for s, r in self.scheduler._resident.items()}
+        self._dispatch_prefilling = set(self._prefilling)
+        with jax.profiler.TraceAnnotation("serve/megastep"):
+            if prefill is None:
+                state, bundle = self._megastep_fn(self.params, state)
+            else:
+                state, bundle = self._megastep_prefill_fn(
+                    self.params, state, prefill)
+        self._n_dispatched += 1
+        self.n_dispatches += 1
+        self._bundle = bundle
+        return state
+
+    def _sync_step(self) -> dict:
+        """Scheduler ``sync`` hook: block on the in-flight megastep's
+        output bundle — the iteration's ONLY device readback — then apply
+        its host-side consequences: advance chunk cursors, activate slots
+        whose prompt is fully written, refresh the mirrored page counters,
+        stash the stream deltas, and build the eviction mask (guarded by
+        the dispatch-time rid snapshot, so a slot recycled since dispatch
+        is never evicted by a stale mask)."""
+        with jax.profiler.TraceAnnotation("serve/readout"):
+            out = {k: np.asarray(v) for k, v in self._bundle.items()}
+        t = time.perf_counter()
+        if self._last_sync_t is not None:
+            self._step_gaps.append(t - self._last_sync_t)
+            if len(self._step_gaps) > 4096:
+                del self._step_gaps[:2048]
+        self._last_sync_t = t
+        if bool(out["exhausted"]):
+            # all-or-nothing: the dispatched step applied NOTHING. Hint
+            # the scheduler at the first group whose cumulative need
+            # overflows the pool (the host walk's in-group-victim analog).
+            n_free, run, prefer = int(out["n_free_alloc"]), 0, None
+            for gi, m in enumerate(self.mode_names):
+                run += int(out["need"][gi])
+                if run > n_free:
+                    prefer = m
+                    break
+            return {"exhausted": True, "group": prefer}
+        self._dispatch_samples.append(self.n_dispatches - self._disp_mark)
+        if len(self._dispatch_samples) > 4096:
+            del self._dispatch_samples[:2048]
+        self._disp_mark = self.n_dispatches
+        for slot in self._staged_slots:     # dispatched chunks are written
+            rec = self._prefilling.get(slot)
+            if rec is not None:
+                rec["next"] += 1
+        self._staged_slots = []
+        for slot in sorted(self._dispatch_prefilling):
+            rec = self._prefilling.get(slot)
+            if rec is None or rec["next"] < len(rec["req"].chunks):
+                continue
+            # prompt fully written: siblings adopt row 0 and the slot goes
+            # live for the NEXT dispatch
             mode, req = rec["mode"], rec["req"]
             local = slot - self._slot_base[mode]
-            if rec["next"] < len(req.chunks):
-                tokens, pos0, n_valid = req.chunks[rec["next"]]
-                if self.allocator is not None:
-                    blocks = range(pos0 // ps,
-                                   (pos0 + n_valid - 1) // ps + 1)
-                    try:
-                        state = self.allocator.map_prefill(
-                            state, self._slot_row0(slot), blocks, group=mode)
-                    except PoolExhausted:
-                        # dangling just-allocated pages are unreferenced;
-                        # reclaim before the scheduler preempts + retries
-                        self.allocator.reclaim(state)
-                        raise
-                state = self._chunk_fns[mode](
-                    self.params, state, jnp.int32(local), tokens,
-                    jnp.int32(pos0), jnp.int32(n_valid))
-                # the chunk call donated the previous state's buffers: keep
-                # the live state visible to the scheduler in case a later
-                # slot's mapping raises PoolExhausted mid-pump
-                self._prestep_state = state
-                # the cursor lives here, NOT on the Request: a preempted
-                # request requeues with its chunk plan intact and replays
-                # the whole prefill deterministically on readmission
-                rec["next"] += 1
-            if rec["next"] >= len(req.chunks):
-                state = self._finish_fns[mode](self.params, state,
-                                               jnp.int32(local), req.gen,
-                                               *req.args)
-                self._prestep_state = state
-                del self._prefilling[slot]
-                self._decoding.add(slot)
-                if self.allocator is not None:
-                    spec = self._groups[mode]
-                    row0 = self._slot_row0(slot)
-                    self.allocator.unpin_rows(
-                        range(row0, row0 + spec.rows_per_slot))
-        return state
+            self.scheduler.state = self._finish_fns[mode](
+                self.params, self.scheduler.state, jnp.int32(local),
+                req.gen, *req.args)
+            self.n_dispatches += 1
+            del self._prefilling[slot]
+            self._decoding.add(slot)
+            if self.allocator is not None:
+                spec = self._groups[mode]
+                row0 = self._slot_row0(slot)
+                self.allocator.unpin_rows(
+                    range(row0, row0 + spec.rows_per_slot))
+        if self.allocator is not None:
+            self.allocator.peak_pages = max(
+                self.allocator.peak_pages,
+                (self.allocator.n_pages - 1) - int(out["n_free_alloc"]))
+            self._mirror_free = int(out["n_free_final"])
+            # bookings made before this bundle's dispatch are now visible
+            # in the device counter; keep only the ones it cannot see yet
+            self._booked = [(g, p) for g, p in self._booked
+                            if g >= self._n_dispatched]
+        self._stream_bundle = dict(
+            n_out=out["n_out"], n_new=out["n_new"], delta=out["delta"],
+            # mid-prefill slots' session rows still hold the previous
+            # occupant's counts: not this rid's tokens, never streamed
+            rids={s: r for s, r in self._dispatch_rids.items()
+                  if s not in self._dispatch_prefilling})
+        mask = np.asarray(out["finished"], bool).copy()
+        for slot in range(self.n_slots):
+            sreq = self.scheduler._resident.get(slot)
+            rid = self._dispatch_rids.get(slot)
+            if rid is None or sreq is None or sreq.rid != rid:
+                mask[slot] = False
+        for slot in self._dispatch_prefilling:
+            mask[slot] = False
+        return {"exhausted": False, "finished": mask}
+
+    def _mirror_recount(self) -> None:
+        """Refresh the mirrored free counter straight from the device's
+        block tables (the one blocking read on this path). The scheduler's
+        state already carries every dispatch issued so far, so bookings
+        stamped before the latest dispatch are visible in the recount."""
+        n_pages, _ = self._paged_geometry()
+        self._mirror_free = int(device_free_pages(
+            self.scheduler.state.cache, n_pages))
+        self._booked = [(g, p) for g, p in self._booked
+                        if g >= self._n_dispatched]
+
+    def _mirror_admit_ok(self, state, mode) -> bool:
+        """Paged admission gate on the MIRRORED free counter (last synced
+        bundle) net of bookings the device has not seen yet — no device
+        readback in the steady state, unlike ``PageAllocator.can_admit``.
+        The gate is a thrash limiter, not a safety invariant:
+        over-admission surfaces as the megastep's exhaustion flag and
+        preempt-and-replay. A refusal first recounts from the device:
+        evictions between syncs free pages the mirror cannot see (no
+        bundle arrives while nothing is resident), and refusing on the
+        stale counter would wedge admission permanently."""
+        need = self.allocator.admit_pages_for(mode)
+        booked = sum(p for _, p in self._booked)
+        if self._mirror_free - booked >= need:
+            return True
+        self._mirror_recount()
+        booked = sum(p for _, p in self._booked)
+        return self._mirror_free - booked >= need
 
     def _new_scheduler(self) -> ContinuousScheduler:
         ecfg = self.ecfg
@@ -607,24 +843,39 @@ class StreamingEngine:
         cache = self.backend.init_cache(self.n_rows, self.cache_len,
                                         paged=paged)
         self._prefilling, self._decoding = {}, set()
-
-        def step(state):
-            if not self._decoding:   # every resident is still prefilling
-                return state
-            return self._step_fn(self.params, state)
+        # per-session dispatch-ahead state: the in-flight bundle, the
+        # dispatch-time snapshots, and the mirrored admission counters
+        self._bundle = None
+        self._stream_bundle = None
+        self._staged_slots = []
+        self._dispatch_rids = {}
+        self._dispatch_prefilling = set()
+        self._booked = []          # (dispatch-generation stamp, pages)
+        self._n_dispatched = 0
+        self._last_sync_t = None
 
         def admit(state, slot, payload):
             mode, req = payload
             local = slot - self._slot_base[mode]
-            if not self.backend.chunked:
-                self._decoding.add(slot)
-                return self._admit_fns[mode](self.params, state,
-                                             jnp.int32(local), req.gen,
-                                             *req.args)
-            # chunked: recycle the rows now; the prompt streams in via the
-            # pre-step pump and the slot activates when it is fully written
-            state = self._admit_fns[mode](self.params, state,
-                                          jnp.int32(local))
+            if self.allocator is not None:
+                # book the admission's worst-case first-step pages against
+                # the mirror until a later bundle's free count reflects it
+                self._booked.append(
+                    (self._n_dispatched,
+                     self.allocator.admit_pages_for(mode)))
+            with jax.profiler.TraceAnnotation("serve/admit"):
+                if not self.backend.chunked:
+                    self._decoding.add(slot)
+                    self.n_dispatches += 1
+                    return self._admit_fns[mode](self.params, state,
+                                                 jnp.int32(local), req.gen,
+                                                 *req.args)
+                # chunked: recycle the rows now; the prompt streams into
+                # the megastep's chunk lanes and the slot activates at the
+                # sync that observes its final chunk written
+                state = self._admit_fns[mode](self.params, state,
+                                              jnp.int32(local))
+            self.n_dispatches += 1
             self._prefilling[slot] = {"mode": mode, "req": req, "next": 0}
             if self.allocator is not None:
                 spec = self._groups[mode]
@@ -643,27 +894,25 @@ class StreamingEngine:
                 row0 = self._slot_row0(slot)
                 self.allocator.unpin_rows(range(row0,
                                                row0 + spec.rows_per_slot))
+            self.n_dispatches += 1
             return self._release_fns[mode](state, jnp.int32(local))
 
-        def pre_step(state):
-            # the prefill pump donates state buffers chunk by chunk; if a
-            # later mapping raises PoolExhausted the scheduler must preempt
-            # against the partially-advanced state, not the donated one
-            self._prestep_state = state
-            try:
-                if self.backend.chunked:
-                    state = self._pump_prefill(state)
-                if self.allocator is not None:
-                    state = self.allocator.prepare_step(state)
-                return state
-            except PoolExhausted:
-                self.scheduler.state = self._prestep_state
-                raise
+        def step(state):
+            # only a hand-driven legacy loop calls this; the scheduler's
+            # pipelined drive uses the dispatch/sync hooks below
+            state = self._dispatch_step(state)
+            out = self._sync_step()
+            if out.get("exhausted"):
+                raise PoolExhausted("page pool exhausted",
+                                    group=out.get("group"))
+            return state
 
         groups = {mode: list(range(base, base + self._groups[mode].n_slots))
                   for mode, base in self._slot_base.items()}
         hooks: dict = {"release": release, "groups": groups,
-                       "finished": self._finished_mask}
+                       "finished": self._finished_mask,
+                       "dispatch": self._dispatch_step,
+                       "sync": self._sync_step}
         if ecfg.paged:
             be = self.backend
             self.allocator = PageAllocator(
@@ -672,12 +921,35 @@ class StreamingEngine:
                           for m, s in self._groups.items()},
                 prefill_blocks={m: be.prefill_blocks(paged[1])
                                 for m in self._groups})
-            hooks.update(admit_ok=self.allocator.can_admit)
-        if ecfg.paged or self.backend.chunked:
-            hooks["pre_step"] = pre_step
+            self._mirror_free = self.allocator.n_pages - 1
+            hooks.update(admit_ok=self._mirror_admit_ok)
         state = grouped_init_state(tuple(self._groups.values()), cache)
         return ContinuousScheduler(self.spec, state, admit=admit, step=step,
                                    **hooks)
+
+    def loop_stats(self) -> dict:
+        """Host-loop instrumentation for the serving benchmark: total
+        jitted dispatches, dispatches per scheduler iteration (steady
+        state == 1.0: the fused megastep), and the host step-gap (seconds
+        between consecutive bundle syncs) p50/p95."""
+        gaps = sorted(self._step_gaps)
+
+        def pct(q):
+            if not gaps:
+                return 0.0
+            return gaps[min(len(gaps) - 1, int(q * len(gaps)))]
+
+        samples = self._dispatch_samples
+        return {
+            "n_dispatches": self.n_dispatches,
+            "n_iterations": len(samples),
+            "dispatches_per_iteration": (sum(samples) / len(samples)
+                                         if samples else 0.0),
+            "steady_iterations_one_dispatch": sum(1 for s in samples
+                                                  if s == 1),
+            "step_gap_p50_s": pct(0.50),
+            "step_gap_p95_s": pct(0.95),
+        }
 
     def cache_footprint(self) -> dict:
         """Self-attention cache HBM accounting for the serving benchmark.
@@ -762,6 +1034,8 @@ class StreamingEngine:
         self._done, self._epoch, self._streams = {}, {}, {}
         self._pump = None
         self._pump_realtime = False
+        self._dispatch_samples, self._step_gaps = [], []
+        self._disp_mark = self.n_dispatches
 
     def submit(self, query, *, arrival: float = 0.0,
                mode: str | None = None,
@@ -868,26 +1142,40 @@ class StreamingEngine:
         st["done"] = True
 
     def _collect_streams(self) -> None:
-        """Read committed-token deltas for every resident request with a
-        live ``stream()`` consumer (greedy-family slots stream mid-flight;
-        beam slots deliver at completion via the tail flush)."""
+        """Deliver committed-token deltas to live ``stream()`` consumers
+        from the LAST SYNCED BUNDLE — greedy-family slots stream mid-flight
+        with zero extra device readback; beam slots deliver at completion
+        via the tail flush. A consumer that subscribed mid-flight missed
+        earlier bundles and catches up once from the session state (the
+        one-off blocking price of a late attach)."""
         live = {rid: st for rid, st in self._streams.items()
                 if not st["done"]}
-        if not live:
+        sb = self._stream_bundle
+        if not live or sb is None:
             return
-        state = self.scheduler.state
-        for slot, sreq in list(self.scheduler._resident.items()):
-            st = live.get(sreq.rid)
-            if st is None or slot in self._prefilling:
+        for slot, rid in sb["rids"].items():
+            st = live.get(rid)
+            if st is None:
                 continue
             mode, local = self._slot_of(slot)
             if self._groups[mode].kind != "greedy":
                 continue
-            gs = state.groups[self.mode_names.index(mode)]
-            n = int(gs.n_out[local, 0])
-            if n > st["n"]:
-                st["buf"].append(np.asarray(gs.tokens[local, 0, st["n"]:n]))
-                st["n"] = n
+            n_after = int(sb["n_out"][slot])
+            n_new = int(sb["n_new"][slot])
+            if n_after <= st["n"]:
+                continue
+            lo = st["n"] - (n_after - n_new)
+            if lo >= 0:
+                st["buf"].append(np.asarray(sb["delta"][slot, lo:n_new]))
+                st["n"] = n_after
+            else:
+                gs = self.scheduler.state.groups[
+                    self.mode_names.index(mode)]
+                n = int(gs.n_out[local, 0])
+                if n > st["n"]:
+                    st["buf"].append(
+                        np.asarray(gs.tokens[local, 0, st["n"]:n]))
+                    st["n"] = n
 
     # -- request-level control (the RequestHandle surface) -------------------
     def request_status(self, rid: int) -> str:

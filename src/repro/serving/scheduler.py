@@ -174,7 +174,9 @@ class ContinuousScheduler:
                  pre_step: Callable | None = None,
                  release: Callable = release_slot,
                  groups: dict[Hashable, list[int]] | None = None,
-                 finished: Callable | None = None):
+                 finished: Callable | None = None,
+                 dispatch: Callable | None = None,
+                 sync: Callable | None = None):
         self.spec = spec
         self.state = state
         self._admit = admit
@@ -182,6 +184,8 @@ class ContinuousScheduler:
         self._admit_ok = admit_ok
         self._pre_step = pre_step
         self._release = release
+        self._dispatch = dispatch
+        self._sync = sync
         self._finished = finished or _default_finished
         if groups is None:
             groups = {None: list(range(spec.n_slots))}
@@ -438,10 +442,11 @@ class ContinuousScheduler:
                 prefer = e.group if e.group in self._future else None
                 self._preempt_youngest(prefer)
 
-    def _evict_finished(self, now: float, read_slot) -> list[SlotResult]:
+    def _evict_finished(self, now: float, read_slot,
+                        mask=None) -> list[SlotResult]:
         if not self._resident:
             return []
-        finished = self._finished(self.state)
+        finished = self._finished(self.state) if mask is None else mask
         done, results = [s for s in self._resident if finished[s]], []
         for slot in done:
             # read while the slot is still resident: the engine's read_slot
@@ -486,7 +491,18 @@ class ContinuousScheduler:
         and the clock fast-forwards over idle gaps.
         ``realtime=True``: open loop — arrival times are wall-clock seconds
         since the drive started; requests are held back until they
-        "arrive" (the throughput benchmark's Poisson stream)."""
+        "arrive" (the throughput benchmark's Poisson stream).
+
+        Engines that supply ``dispatch``/``sync`` hooks get the
+        dispatch-ahead (double-buffered) drive instead: iteration k's
+        device step stays in flight while the host runs iteration k+1's
+        expiry/admission/staging, synchronizing only on the step's small
+        output bundle (``_steps_pipelined``)."""
+        if self._dispatch is not None:
+            return self._steps_pipelined(read_slot, realtime=realtime)
+        return self._steps_legacy(read_slot, realtime=realtime)
+
+    def _steps_legacy(self, read_slot: Callable, *, realtime: bool = False):
         t0 = time.perf_counter()
         step0, skip0 = self.n_steps, self._skipped   # drive-relative clock
         clock = ((lambda: time.perf_counter() - t0) if realtime
@@ -517,6 +533,72 @@ class ContinuousScheduler:
             self.n_steps += 1
             self._now = done_t = clock()
             events.extend(self._evict_finished(done_t, read_slot))
+            yield events
+
+    def _steps_pipelined(self, read_slot: Callable, *,
+                         realtime: bool = False):
+        """Dispatch-ahead drive: the device step for iteration k is IN
+        FLIGHT while the host expires, admits, and stages iteration k+1 —
+        the only blocking point is the in-flight step's small output
+        bundle (finished mask / committed counts / page counters), which
+        the ``sync`` hook reads one iteration later.
+
+        ``dispatch(state) -> state`` issues the engine's fused megastep
+        (async — JAX dispatch returns immediately) and stashes the
+        bundle's futures; ``sync() -> dict`` blocks on them and returns
+        ``finished`` (an (n_slots,) bool mask valid for the residents of
+        the dispatched iteration) plus ``exhausted``/``group`` when the
+        on-device page pool could not cover the step. An exhausted step
+        applied NOTHING (the megastep is predicated on the device flag),
+        so the preempt-and-replay loop below re-dispatches the identical
+        iteration against the shrunken resident set — the same
+        deterministic replay semantics as the host-side ``_prepare``.
+
+        Relative to the legacy drive, a slot freed by step k is re-usable
+        one iteration later (its eviction is observed at k+1's sync, after
+        k+1's admissions) — admission *stamps* are unchanged (the clock
+        only advances at syncs), completion stamps shift uniformly."""
+        t0 = time.perf_counter()
+        step0, skip0 = self.n_steps, self._skipped
+        clock = ((lambda: time.perf_counter() - t0) if realtime
+                 else (lambda: float(self.n_steps - step0)
+                       + (self._skipped - skip0)))
+        self._rewind_clock()
+        inflight = False
+        while self.queued or self._resident or inflight:
+            self._now = now = clock()
+            events: list[SlotResult] = []
+            self._expire_residents(now, events)
+            nxt = self._next_arrival()
+            if (not self._resident and not inflight and nxt is not None
+                    and not realtime and nxt > now):
+                self._skipped += nxt - now
+                self._now = now = clock()
+            self._admit_ready(now, events)
+            if inflight:
+                out = self._sync()
+                while out.get("exhausted"):
+                    if len(self._resident) <= 1:
+                        raise PoolExhausted(
+                            "page pool exhausted with a single resident "
+                            "request (pool below one slot's worst case is "
+                            "rejected at allocator construction)")
+                    prefer = out.get("group")
+                    self._preempt_youngest(
+                        prefer if prefer in self._future else None)
+                    self.state = self._dispatch(self.state)
+                    out = self._sync()
+                inflight = False
+                self.n_steps += 1
+                self._now = done_t = clock()
+                events.extend(self._evict_finished(done_t, read_slot,
+                                                   mask=out["finished"]))
+            if self._resident:
+                self.state = self._dispatch(self.state)
+                inflight = True
+            elif realtime and nxt is not None:
+                # nothing resident or in flight: sleep off the idle gap
+                time.sleep(max(0.0, nxt - clock()))
             yield events
 
     def run(self, read_slot: Callable, *,

@@ -241,7 +241,10 @@ def test_decoder_zero_recompile_after_warmup(prompts):
     eng.reset()
     warm = dict(eng.n_traces)
     assert warm["step"] == 1
-    for key in ("admit", "chunk", "finish"):
+    # the prefill-carrying megastep variant traces once too (chunk writes
+    # ride inside the fused step now — there is no separate chunk jit)
+    assert warm["step_prefill"] == 1
+    for key in ("admit", "finish"):
         assert warm[key, "speculative"] == 1, (key, warm)
 
     # ragged lengths over recycled slots: chunk counts vary, traces don't

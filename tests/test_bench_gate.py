@@ -14,11 +14,14 @@ compare = check_regression.compare
 
 
 def _payload(greedy=40.0, mixed=30.0, mixed_beam=10.0, cfg=None,
-             greedy_p95=0.2, mixed_beam_p95=0.4):
+             greedy_p95=0.2, mixed_beam_p95=0.4, greedy_gap=0.002,
+             greedy_dpt=1.05):
     return {
         "config": cfg or {"requests": 6, "max_new": 16, "seed": 0},
         "modes": {
-            "greedy": {"rps": greedy, "p50": 0.1, "p95": greedy_p95},
+            "greedy": {"rps": greedy, "p50": 0.1, "p95": greedy_p95,
+                       "step_gap_p95_s": greedy_gap,
+                       "dispatches_per_token": greedy_dpt},
             "mixed": {
                 "rps": mixed,
                 "per_mode": {
@@ -115,4 +118,45 @@ def test_latency_gate_ignores_modes_without_p95():
     base = _payload()
     del base["modes"]["greedy"]["p95"]
     got = compare(base, _payload(), 0.30, latency_threshold=1.0)
+    assert got == []
+
+
+def test_step_gap_blowup_fails():
+    """A host sync snuck into the hot loop shows up as a step-gap p95
+    regression before it dents req/s — the megastep gate catches it."""
+    got = compare(_payload(), _payload(greedy_gap=0.005), 0.30,
+                  step_gap_threshold=1.0)
+    assert len(got) == 1
+    assert got[0].startswith("greedy") and "step_gap" in got[0]
+
+
+def test_step_gap_within_threshold_passes():
+    got = compare(_payload(), _payload(greedy_gap=0.0039), 0.30,
+                  step_gap_threshold=1.0)
+    assert got == []
+
+
+def test_dispatches_per_token_regression_fails():
+    """A step falling back to multi-dispatch (e.g. page maintenance
+    leaving the megastep) roughly doubles dispatches/token: FAIL."""
+    got = compare(_payload(), _payload(greedy_dpt=2.1), 0.30,
+                  dispatch_threshold=0.5)
+    assert len(got) == 1
+    assert got[0].startswith("greedy") and "dispatches_per_token" in got[0]
+
+
+def test_dispatch_gate_tolerates_small_drift():
+    got = compare(_payload(), _payload(greedy_dpt=1.3), 0.30,
+                  dispatch_threshold=0.5)
+    assert got == []
+
+
+def test_megastep_gates_skip_predating_baselines():
+    """A committed baseline from before the loop metrics existed must not
+    crash or fail the new gates — they activate on regeneration."""
+    base = _payload()
+    del base["modes"]["greedy"]["step_gap_p95_s"]
+    del base["modes"]["greedy"]["dispatches_per_token"]
+    got = compare(base, _payload(greedy_gap=9.0, greedy_dpt=9.0), 0.30,
+                  step_gap_threshold=1.0, dispatch_threshold=0.5)
     assert got == []
