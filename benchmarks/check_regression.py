@@ -43,6 +43,36 @@ def _flat_metric(payload: dict, metric: str) -> dict[str, float]:
     return out
 
 
+def _gate_decrease(
+    baseline: dict,
+    new: dict,
+    metric: str,
+    threshold: float,
+    unit: str,
+    failures: list[str],
+) -> None:
+    """Ratio gate on a higher-is-better metric: fail any mode whose fresh
+    value falls below ``(1 - threshold) * baseline``. Modes absent from
+    the baseline are skipped (baseline-compatible, like the other gates)."""
+    base = _flat_metric(baseline, metric)
+    fresh = _flat_metric(new, metric)
+    for key, old in sorted(base.items()):
+        if key not in fresh or old <= 0.0:
+            continue
+        now = fresh[key]
+        floor = (1.0 - threshold) * old
+        verdict = "FAIL" if now < floor else "ok"
+        print(
+            f"  {key:24s} baseline {old:8.3f} {unit:9s} new {now:8.3f} "
+            f"{unit:9s} floor   {floor:6.3f}   {verdict}"
+        )
+        if now < floor:
+            failures.append(
+                f"{key}: {metric} {now:.3f}{unit} is more than "
+                f"{threshold:.0%} below baseline {old:.3f}{unit}"
+            )
+
+
 def _gate_increase(
     baseline: dict,
     new: dict,
@@ -82,6 +112,7 @@ def compare(
     latency_threshold: float | None = None,
     step_gap_threshold: float | None = None,
     dispatch_threshold: float | None = None,
+    hit_rate_threshold: float | None = None,
 ) -> list[str]:
     """Return a list of human-readable gate failures (empty = pass).
 
@@ -100,10 +131,21 @@ def compare(
     token. A host sync snuck into the hot loop, or a step falling back to
     multi-dispatch, shows up here before it shows up in req/s. Modes whose
     baseline predates these metrics are skipped (baseline-compatible).
+
+    ``hit_rate_threshold``: max tolerated fractional ``prefix_hit_rate``
+    DECREASE per mode — a scheduler change that silently stops sharing
+    prefix pages would keep serving correct tokens while quietly paying
+    full prefill again, so the planning workload's hit rate is gated like
+    a throughput metric.
+
+    Config drift compares only the keys the BASELINE carries: a new
+    benign bench field (added alongside a new mode/metric) must not force
+    a baseline regeneration, but changing the value of a shared knob
+    still invalidates the comparison. Additions are printed as a warning.
     """
     failures: list[str] = []
     cfg_b, cfg_n = baseline.get("config", {}), new.get("config", {})
-    drift = {k for k in set(cfg_b) | set(cfg_n) if cfg_b.get(k) != cfg_n.get(k)}
+    drift = {k for k in cfg_b if cfg_b[k] != cfg_n.get(k)}
     if drift:
         failures.append(
             f"benchmark configs differ on {sorted(drift)}: "
@@ -111,6 +153,12 @@ def compare(
             f"or regenerate the committed baseline"
         )
         return failures
+    added = sorted(set(cfg_n) - set(cfg_b))
+    if added:
+        print(
+            f"  note: new run carries config keys the baseline predates "
+            f"(ignored): {added}"
+        )
     base_rps, new_rps = _flat_metric(baseline, "rps"), _flat_metric(new, "rps")
     for key in sorted(require or []):
         if key not in new_rps:
@@ -164,6 +212,15 @@ def compare(
             " d/tok",
             failures,
         )
+    if hit_rate_threshold is not None:
+        _gate_decrease(
+            baseline,
+            new,
+            "prefix_hit_rate",
+            hit_rate_threshold,
+            " hit",
+            failures,
+        )
     return failures
 
 
@@ -201,6 +258,14 @@ def main() -> int:
         "baseline lacks the metric are skipped)",
     )
     ap.add_argument(
+        "--hit-rate-threshold",
+        type=float,
+        default=0.30,
+        help="max tolerated fractional prefix_hit_rate decrease per mode "
+        "(default 0.30; negative disables; modes whose baseline lacks the "
+        "metric are skipped)",
+    )
+    ap.add_argument(
         "--require",
         nargs="*",
         default=[],
@@ -228,6 +293,9 @@ def main() -> int:
         ),
         dispatch_threshold=(
             None if args.dispatch_threshold < 0 else args.dispatch_threshold
+        ),
+        hit_rate_threshold=(
+            None if args.hit_rate_threshold < 0 else args.hit_rate_threshold
         ),
     )
     if failures:

@@ -30,6 +30,14 @@ same StreamingEngine with prompt-lookup drafts and chunked ragged prefill
 (``repro.serving.backend.DecoderOnlyBackend``) — the bench gate tracks
 these modes like any other.
 
+``--modes planning`` (in the default set) simulates a Retro*-style
+retrosynthetic expansion loop on the decoder-only backend with
+cross-request prefix page sharing: a tree of ``submit_child`` requests
+whose prompts extend their parents', served twice — once with the radix
+prefix cache, once cold — reporting routes/sec, the prefix-cache hit
+rate, and pages allocated per request vs the cold control (the shared
+run must allocate strictly fewer).
+
 ``--modes priority_mix`` (in the default set) exercises the request front
 door's priority scheduling: one session, one slot group, the same Poisson
 stream split into high- and low-priority halves. The per-class
@@ -64,7 +72,8 @@ from repro.serving import EngineConfig, StreamingEngine
 from repro.serving.engine import _mode_shape
 
 MODES = ("greedy", "speculative", "beam", "speculative_beam", "mixed",
-         "decoder_greedy", "decoder_speculative", "priority_mix")
+         "decoder_greedy", "decoder_speculative", "priority_mix",
+         "planning")
 # the mixed workload's slot groups: cheap greedy probes + speculative
 # forward predictions + beam retrosynthesis expansions in ONE session
 # (requests round-robin over the groups)
@@ -269,6 +278,97 @@ def run_decoder_mode(mode: str, args):
     return {"mode": mode, "arch": cfg.name, **_engine_row(eng, results)}
 
 
+def run_planning(args):
+    """Retro*-style planning loop: a search tree of requests where every
+    expansion extends its parent's prompt (``submit_child``), served on
+    the decoder-only backend with cross-request prefix page sharing. The
+    planner reads each node's result before branching (as a best-first
+    search would), so parents' committed pages are in the radix cache by
+    the time their children are matched. A second, prefix_cache=False
+    pass over the SAME tree is the cold control — the shared run must
+    allocate strictly fewer pages per request and keep the megastep at
+    one dispatch per iteration with zero recompiles."""
+    import time
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as tr
+
+    cfg = get_config(DECODER_ARCH, reduced=True)
+    params = tr.init(jax.random.PRNGKey(0), cfg)
+    branch, depth, suffix_len = 2, 2, 16
+
+    def build_engine(share: bool) -> StreamingEngine:
+        ecfg = EngineConfig(mode="greedy", max_new=args.max_new,
+                            max_src=96, n_slots=args.slots,
+                            prefill_chunk=16, eos_id=DECODER_EOS,
+                            paged=True, page_size=args.page_size,
+                            prefix_cache=share)
+        return StreamingEngine(params, cfg, None, ecfg)
+
+    def expand(eng, rng):
+        """One expansion wave: root -> ``branch`` children per finished
+        node, ``depth`` levels deep. Returns every node's SlotResult."""
+        root = rng.integers(4, cfg.vocab_size, size=33).astype(np.int32)
+        frontier = [eng.submit(root)]
+        results = []
+        for _ in range(depth):
+            grown = []
+            for h in frontier:
+                results.append(h.result())   # read before branching
+                for _ in range(branch):
+                    sfx = rng.integers(4, cfg.vocab_size,
+                                       size=suffix_len).astype(np.int32)
+                    grown.append(h.submit_child(sfx))
+            frontier = grown
+        results.extend(h.result() for h in frontier)
+        return results
+
+    eng = build_engine(True)
+    expand(eng, np.random.default_rng(args.seed + 1))   # warmup tree
+    eng.reset()
+    traces0 = dict(eng.n_traces)
+
+    t0 = time.perf_counter()
+    results = expand(eng, np.random.default_rng(args.seed))
+    elapsed = time.perf_counter() - t0
+    assert dict(eng.n_traces) == traces0, \
+        f"shared-prefix planning traffic retraced: {traces0} -> {eng.n_traces}"
+    stats = eng.prefix_stats()
+    eng.allocator.check()
+
+    cold = build_engine(False)
+    _warmup(cold, np.random.default_rng(args.seed).integers(
+        4, cfg.vocab_size, size=33).astype(np.int32))
+    expand(cold, np.random.default_rng(args.seed))
+    cold_ppr = cold.prefix_stats()["pages_per_request"]
+    assert stats["pages_per_request"] < cold_ppr, \
+        (f"prefix sharing must allocate strictly fewer pages/request: "
+         f"shared {stats['pages_per_request']:.2f} vs cold {cold_ppr:.2f}")
+
+    return {
+        "mode": "planning",
+        "arch": cfg.name,
+        "rps": len(results) / elapsed,          # routes (tree nodes) / sec
+        "requests": len(results),
+        "tree": {"branch": branch, "depth": depth,
+                 "suffix_len": suffix_len},
+        "prefix_hit_rate": stats["prefix_hit_rate"],
+        "hit_tokens": stats["hit_tokens"],
+        "lookup_tokens": stats["lookup_tokens"],
+        "radix_nodes": stats["nodes"],
+        "pages_per_request": stats["pages_per_request"],
+        "pages_per_request_cold": cold_ppr,
+        "n_slots": eng.n_slots,
+        "slots_resident": eng.scheduler.max_resident,
+        "preemptions": eng.scheduler.n_preemptions,
+        "steps": eng.scheduler.n_steps,
+        "cache": eng.cache_footprint(),
+        **_loop_row(eng, results),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
@@ -326,6 +426,15 @@ def main() -> None:
                 print(f"  prio/{cls:12s} queue delay p50 "
                       f"{pc['queue_delay_p50']:6.2f}s  p95 "
                       f"{pc['queue_delay_p95']:6.2f}s  {pc['requests']:3d}r")
+            continue
+        if mode == "planning":
+            r = run_planning(args)
+            rows[mode] = r
+            print(f"{r['mode']:18s} {r['rps']:7.2f} routes/s  "
+                  f"hit rate {r['prefix_hit_rate']:5.2f}  "
+                  f"pages/req {r['pages_per_request']:5.2f} "
+                  f"(cold {r['pages_per_request_cold']:5.2f})  "
+                  f"{r['dispatches_per_token']:5.2f} d/tok")
             continue
         if mode.startswith("decoder_"):
             r = run_decoder_mode(mode, args)

@@ -137,6 +137,25 @@ class PagedKVCache:
     page contents are shared by aliasing. The host allocator keeps the
     invariant that pages overlapping a row's write window ``[pos, pos+DL]``
     are privately owned (copy-on-write at the draft boundary).
+
+    Cross-request prefix sharing (``repro.core.session.RadixPageCache``)
+    adds one more aliasing form: a committed PROMPT page may be referenced
+    by rows of SEVERAL requests, plus one reserved index-row cell that
+    keeps it allocated after every owner leaves. The invariants that make
+    this safe:
+
+      - shared pages are read-only by construction — a decode write window
+        starts at the prompt's final token, strictly above every fully
+        committed prompt block, and prefix matches are truncated to full
+        pages, so no lane ever writes into an aliased prefix page;
+      - both page planners (the host walk and the on-device plan) elect a
+        page's writer as its copy-on-write *keeper* only when that row
+        holds the page's ONLY references — an extra reference from another
+        request's row or from a radix index cell forces the writer to copy
+        first, never to mutate in place;
+      - attention masks on STORED positions, so which physical page backs
+        a block never affects output — aliased and privately-owned reads
+        are bitwise identical.
     """
 
     k_pool: jnp.ndarray        # (P, ps, n_kv, head_dim)

@@ -37,7 +37,16 @@ This module is that contract:
                       until then, so mid-flight deltas would lie)
       ``.cancel()``   queued: dequeue; resident: evict the slot and
                       reclaim its pages mid-flight — co-resident requests
-                      are unaffected (row-independence invariant)
+                      are unaffected (row-independence invariant).
+                      ``cancel(recursive=True)`` prunes the handle's whole
+                      request subtree (see ``submit_child``) and drops the
+                      subtree's cached prefix pages with it
+      ``.submit_child(suffix, ...)``
+                      tree-of-requests expansion: submit a request whose
+                      prompt extends this one's (prompt + suffix), with
+                      mode/priority inherited unless overridden — the
+                      retrosynthetic-planning expansion step, served from
+                      the engine's prefix cache when sharing is enabled
       ``.status``     "queued" | "running" | "done" | "cancelled" |
                       "expired" | "unknown" (not in this session: the
                       engine was reset() or the terminal record aged out)
@@ -197,8 +206,31 @@ class RequestHandle(int):
         deltas equal ``result().tokens[0][:lengths[0]]`` exactly."""
         return self._engine.stream(self.rid)
 
-    def cancel(self) -> bool:
+    def cancel(self, recursive: bool = False) -> bool:
         """Abandon the request: dequeue if queued, evict + reclaim pages
         if resident. Returns False when it already reached a terminal
-        state (finished results stay available)."""
+        state (finished results stay available).
+
+        ``recursive=True`` prunes the whole request subtree rooted here
+        (every descendant made via ``submit_child``) and releases the
+        subtree's cached prefix pages back to the pool — the planner's
+        abandon-this-branch operation. Returns True if ANY request in the
+        subtree was newly cancelled."""
+        if recursive:
+            return self._engine.cancel_subtree(self.rid) > 0
         return self._engine.cancel(self.rid)
+
+    def submit_child(self, suffix, *, arrival: float = 0.0,
+                     mode: str | None = None,
+                     params: "GenerationParams | None" = None,
+                     priority: int | None = None,
+                     deadline: float | None = None) -> "RequestHandle":
+        """Submit a child request whose prompt is this request's query
+        plus ``suffix`` (string + string, or concatenated token arrays).
+        Mode and priority default to the parent's — search cost accrues
+        down the tree, so a subtree inherits its root's urgency unless the
+        planner re-derives it. The shared prefix is served from the
+        engine's radix page cache when prefix sharing is enabled."""
+        return self._engine.submit_child(
+            self.rid, suffix, arrival=arrival, mode=mode, params=params,
+            priority=priority, deadline=deadline)

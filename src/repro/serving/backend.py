@@ -76,12 +76,16 @@ class Request:
     ``gen``: the request's generation-param bundle for ``reset_slot``
     (``ResolvedParams.device_args`` — fixed shapes, ragged values).
     ``params``: the host-side ``ResolvedParams`` (read-out trimming).
+    ``prompt``: the host token array the request was built from (padded
+    source for seq2seq, raw prompt for decoder-only) — the prefix-sharing
+    key; None disables sharing for this request.
     """
 
     args: tuple
     chunks: list
     gen: tuple = ()
     params: object = None
+    prompt: np.ndarray | None = None
 
 
 def _pad_drafts(drafts: np.ndarray, dmask: np.ndarray, spec: SessionSpec):
@@ -204,18 +208,27 @@ class Seq2SeqBackend:
         return Request(args=(jnp.asarray(src), jnp.asarray(drafts),
                              jnp.asarray(dmask)),
                        chunks=[], gen=params.device_args(spec),
-                       params=params)
+                       params=params, prompt=src)
 
     # ---- device-side admission (inside the engine's jitted admit) --------
-    def admit_cache(self, params, cache, rows, src, drafts, dmask):
+    def encode_kv(self, params, src):
+        """Jit-side encoder leg of admission in isolation: memory K/V +
+        source mask for ONE query. The engine's ``prefix_cache`` path runs
+        this once per distinct source (host LRU) and scatters the cached
+        result through ``admit_cache_precomputed``."""
         cfg = self.cfg
         memory, mask = s2s.encode(params, cfg, src[None])
         mkv = jax.vmap(
             lambda p: attn_mod.memory_kv(p, cfg, memory)
         )(params["dec_blocks"]["cross_attn"])
+        return mkv, mask[0]
+
+    def admit_cache_precomputed(self, params, cache, rows, mkv, mask):
+        """Scatter an already-encoded source into the slot's cache rows —
+        the admission minus its encoder leg."""
         cache = dict(cache)
         cache["cross"] = set_rows(cache["cross"], rows, mkv)
-        cache["mmask"] = cache["mmask"].at[:, rows].set(mask[0])
+        cache["mmask"] = cache["mmask"].at[:, rows].set(mask)
         # recycled rows: the evicted request's stale K/V must be
         # unreadable. dense: pos=-1 marks every slot empty (attention
         # masks on stored positions); paged: unmap the rows' block
@@ -227,6 +240,10 @@ class Seq2SeqBackend:
             cache["self"] = KVCache(k=sc.k, v=sc.v,
                                     pos=sc.pos.at[:, rows].set(-1))
         return cache
+
+    def admit_cache(self, params, cache, rows, src, drafts, dmask):
+        mkv, mask = self.encode_kv(params, src)
+        return self.admit_cache_precomputed(params, cache, rows, mkv, mask)
 
     def reset_args(self, src, drafts, dmask):
         """(last_token, start_pos, drafts, dmask) for ``reset_slot``:
@@ -309,18 +326,29 @@ class DecoderOnlyBackend:
         # ``last``); every chunk is the same fixed shape (C,), so a ragged
         # stream of prompt lengths never retraces — only the chunk COUNT
         # varies, on the host
-        C = max(1, int(ecfg.prefill_chunk))
-        body = prompt[:P - 1]
+        chunks = self.suffix_chunks(prompt[:P - 1])
+        return Request(
+            args=(jnp.int32(prompt[P - 1]), jnp.int32(P - 1),
+                  jnp.asarray(drafts), jnp.asarray(dmask)),
+            chunks=chunks, gen=params.device_args(spec), params=params,
+            prompt=prompt)
+
+    def suffix_chunks(self, body: np.ndarray, m0: int = 0) -> list:
+        """Fixed-shape prefill chunks for ``body[m0:]`` with positions kept
+        ABSOLUTE (chunk c0 starts at token index c0 of the full body).
+        ``m0 = 0`` is cold admission; the engine's prefix-sharing path
+        passes the matched token count, which it aligns to a multiple of
+        lcm(page_size, prefill_chunk) so the suffix chunks reproduce the
+        cold run's exact chunk partition — identical reduction order,
+        bitwise-identical K/V, token identity."""
+        C = max(1, int(self.ecfg.prefill_chunk))
         chunks = []
-        for c0 in range(0, P - 1, C):
+        for c0 in range(int(m0), len(body), C):
             seg = body[c0:c0 + C]
             padded = np.zeros((C,), np.int32)
             padded[:len(seg)] = seg
             chunks.append((jnp.asarray(padded), c0, len(seg)))
-        return Request(
-            args=(jnp.int32(prompt[P - 1]), jnp.int32(P - 1),
-                  jnp.asarray(drafts), jnp.asarray(dmask)),
-            chunks=chunks, gen=params.device_args(spec), params=params)
+        return chunks
 
     # ---- device-side admission pieces -------------------------------------
     def begin_cache(self, cache, rows):

@@ -65,7 +65,9 @@ compatibility wrappers over this surface.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import time
 from typing import Sequence
 
@@ -79,10 +81,13 @@ from repro.core import (
     speculative_beam_search, speculative_greedy_decode,
 )
 from repro.core.session import (GroupedState, PageAllocator, PoolExhausted,
-                                SessionSpec, apply_page_plan,
+                                RadixPageCache, SessionSpec, alias_prefix_pages,
+                                apply_page_plan, clear_index_cells,
                                 device_free_pages, device_page_plan,
                                 grouped_init_state, grouped_step,
-                                release_slot, reset_slot, unmap_cache_rows)
+                                radix_cell_coords, read_row_pages,
+                                release_slot, reset_slot, unmap_cache_rows,
+                                write_index_cells)
 from repro.data.tokenizer import SmilesTokenizer
 from repro.models import seq2seq as s2s
 from repro.serving.api import (MAX_STOP_IDS, GenerationParams,
@@ -123,6 +128,20 @@ class EngineConfig:
     # from here when StreamingEngine is built with tokenizer=None
     eos_id: int | None = None
     pad_id: int = 0
+    # cross-request prefix page sharing (the planning-search workload):
+    # decoder-only paged engines keep a radix tree over committed prompt
+    # pages and admit by aliasing matched pages, prefilling only the
+    # unmatched suffix; seq2seq engines reuse the encoder output for
+    # repeated sources instead (the whole source is the "prefix" there).
+    # Off by default — sharing never changes tokens, but the index rows it
+    # reserves change cache shapes, so it is opt-in per engine.
+    prefix_cache: bool = False
+    # retained-page capacity of the radix cache (index cells). None =
+    # 2 * n_slots * worst-case prompt blocks.
+    prefix_cache_pages: int | None = None
+    # seq2seq encoder-output reuse: LRU entries kept (each caches one
+    # source's cross-attention K/V + mask)
+    prefix_cache_entries: int = 128
 
     def __post_init__(self):
         """Fail at construction, not as a deep shape/assert error later."""
@@ -132,6 +151,15 @@ class EngineConfig:
             if getattr(self, name) < lo:
                 raise ValueError(f"EngineConfig.{name}={getattr(self, name)} "
                                  f"must be >= {lo}")
+        if self.prefix_cache_pages is not None and self.prefix_cache_pages < 1:
+            raise ValueError(
+                f"EngineConfig.prefix_cache_pages={self.prefix_cache_pages} "
+                f"must be >= 1 (it is the radix cache's retained-page "
+                f"capacity)")
+        if self.prefix_cache_entries < 1:
+            raise ValueError(
+                f"EngineConfig.prefix_cache_entries="
+                f"{self.prefix_cache_entries} must be >= 1")
         if self.n_pages is not None and self.n_pages < 2:
             raise ValueError(
                 f"EngineConfig.n_pages={self.n_pages}: a paged pool needs at "
@@ -357,6 +385,34 @@ class StreamingEngine:
         # window (decoder-only rows also hold the prompt)
         self.cache_len = max(self.backend.row_len(s)
                              for s in self._groups.values())
+        # cross-request prefix sharing: a radix tree over committed prompt
+        # pages (decoder-only + paged, where prompts live in pages), or an
+        # encoder-output LRU (seq2seq, where the source IS the prefix).
+        # Retained pages stay allocated through reserved block-table INDEX
+        # ROWS appended after the group rows: one (row, block) cell per
+        # radix node holds the node's page id, so both page planners see a
+        # live reference without any decode lane ever reading the row.
+        self._prefix_sharing = bool(ecfg.prefix_cache and ecfg.paged
+                                    and self.backend.chunked)
+        self._encode_reuse = bool(ecfg.prefix_cache
+                                  and not self.backend.chunked)
+        self._n_index_rows = self._n_cells = 0
+        self.radix: RadixPageCache | None = None
+        if self._prefix_sharing:
+            ps = ecfg.page_size
+            # worst-case prompt pages for one slot (the alias/retain lane pad)
+            self._prefix_pad = self.backend.prefill_blocks(ps)
+            # prefix matches are truncated to whole multiples of
+            # lcm(page_size, prefill_chunk) pages so the suffix prefill
+            # lands on the cold run's chunk grid — identical chunk
+            # partition => bitwise-identical K/V => token identity
+            chunk = max(1, int(ecfg.prefill_chunk))
+            self._align_pages = chunk // math.gcd(ps, chunk)
+            self._table_blocks = -(-self.cache_len // ps)
+            self._n_cells = (ecfg.prefix_cache_pages
+                             if ecfg.prefix_cache_pages is not None
+                             else 2 * self.n_slots * self._prefix_pad)
+            self._n_index_rows = -(-self._n_cells // self._table_blocks)
         # trace counters (incremented at TRACE time only): after one warmup
         # request per mode, mixed traffic must not grow any of these — the
         # zero-recompilation acceptance criterion tests assert on it
@@ -368,6 +424,12 @@ class StreamingEngine:
             # monolithic session never prefills inside the step)
             self.n_traces["step_prefill"] = 0
             self.n_traces.update({("finish", m): 0 for m in self._groups})
+        if self._prefix_sharing:
+            self.n_traces.update(share=0, retain=0, evict_cells=0)
+        if self._encode_reuse:
+            self.n_traces["encode"] = 0
+            self.n_traces.update({("admit_cached", m): 0
+                                  for m in self._groups})
         # donate the session state: the scheduler threads it linearly, so
         # XLA updates the (dominant) cache buffers in place every step.
         # ONE dispatch per steady-state iteration: the megastep fuses page
@@ -381,6 +443,38 @@ class StreamingEngine:
         if self.backend.chunked:
             self._finish_fns = {m: self._make_finish(m) for m in self._groups}
         self._release_fns = {m: self._make_release(m) for m in self._groups}
+        if self._prefix_sharing:
+            # fixed-lane (prefix_pad-wide) block-table edits, each ONE
+            # dispatch: alias a matched chain into an admitted slot's row0,
+            # write freshly committed pages into radix index cells, clear
+            # evicted cells. Lane counts are data, so each traces once.
+            def _alias_impl(gstate, row0, pages, count):
+                self.n_traces["share"] += 1
+                cache = alias_prefix_pages(gstate.cache, row0, pages, count)
+                return GroupedState(groups=gstate.groups, cache=cache)
+
+            def _retain_impl(gstate, rows, blocks, pages, count):
+                self.n_traces["retain"] += 1
+                cache = write_index_cells(gstate.cache, rows, blocks, pages,
+                                          count)
+                return GroupedState(groups=gstate.groups, cache=cache)
+
+            def _evict_impl(gstate, rows, blocks, count):
+                self.n_traces["evict_cells"] += 1
+                cache = clear_index_cells(gstate.cache, rows, blocks, count)
+                return GroupedState(groups=gstate.groups, cache=cache)
+
+            self._alias_fn = jax.jit(_alias_impl, donate_argnums=(0,))
+            self._retain_fn = jax.jit(_retain_impl, donate_argnums=(0,))
+            self._evict_cells_fn = jax.jit(_evict_impl, donate_argnums=(0,))
+        if self._encode_reuse:
+            def _encode_impl(params, src):
+                self.n_traces["encode"] += 1
+                return self.backend.encode_kv(params, src)
+
+            self._encode_fn = jax.jit(_encode_impl)
+            self._admit_cached_fns = {m: self._make_admit_cached(m)
+                                      for m in self._groups}
         # dispatch-ahead loop instrumentation: total jitted dispatches,
         # per-iteration dispatch counts, and host step-gap samples (time
         # between consecutive bundle syncs) — bounded, benchmark-read
@@ -531,6 +625,13 @@ class StreamingEngine:
                 # pages inside the step, and the mirror must see them free
                 n_free_final=device_free_pages(gstate.cache, n_pages),
                 need=plan.need_by_group)
+            if self._prefix_sharing:
+                # post-step row0 block tables for every slot: the host
+                # reads a finishing slot's committed prompt pages from here
+                # to insert them into the radix tree — no extra sync
+                rows0 = [self._slot_row0(s) for s in range(self.n_slots)]
+                bundle["row0_pages"] = read_row_pages(gstate.cache, rows0,
+                                                      self._prefix_pad)
         else:
             bundle.update(exhausted=jnp.asarray(False),
                           n_free_alloc=jnp.int32(0),
@@ -579,6 +680,33 @@ class StreamingEngine:
             rows = self._slot_rows(mode, slot)
             cache = be.admit_cache(params, gstate.cache, rows, *args)
             last, pos0, drafts, dmask = be.reset_args(*args)
+            max_out, stop_ids, eff_dl, eff_beams = gen
+            gs = reset_slot(spec, gstate.groups[gi], slot, last, pos0,
+                            drafts, dmask, max_out=max_out,
+                            stop_ids=stop_ids, eff_dl=eff_dl,
+                            eff_beams=eff_beams)
+            return self._swap_group(
+                GroupedState(groups=gstate.groups, cache=cache), gi, gs)
+
+        return jax.jit(admit, donate_argnums=(1,))
+
+    def _make_admit_cached(self, mode: str):
+        """Jitted admission variant for the seq2seq ``prefix_cache`` path:
+        the encoder output arrives precomputed (host LRU over repeated
+        sources), so admission is just the scatter + slot reset. Hit and
+        miss BOTH go through this trace — a miss first runs the jitted
+        encode — keeping shared and cold admissions of one engine
+        byte-identical by construction."""
+        spec = self._groups[mode]
+        gi = self.mode_names.index(mode)
+        be = self.backend
+
+        def admit(params, gstate, slot, gen, mkv, mask, drafts, dmask):
+            self.n_traces["admit_cached", mode] += 1
+            rows = self._slot_rows(mode, slot)
+            cache = be.admit_cache_precomputed(params, gstate.cache, rows,
+                                               mkv, mask)
+            last, pos0, drafts, dmask = be.reset_args(None, drafts, dmask)
             max_out, stop_ids, eff_dl, eff_beams = gen
             gs = reset_slot(spec, gstate.groups[gi], slot, last, pos0,
                             drafts, dmask, max_out=max_out,
@@ -653,7 +781,10 @@ class StreamingEngine:
         ps = ecfg.page_size
         worst = sum(s.n_rows * (-(-self.backend.row_len(s) // ps))
                     for s in self._groups.values())
-        n_pages = ecfg.n_pages if ecfg.n_pages is not None else worst + 1
+        # prefix sharing retains up to n_cells pages beyond the rows' worst
+        # case, so the no-oversubscription default grows by that many
+        n_pages = (ecfg.n_pages if ecfg.n_pages is not None
+                   else worst + self._n_cells + 1)
         return n_pages, ps
 
     def _finished_mask(self, gstate) -> np.ndarray:
@@ -683,7 +814,7 @@ class StreamingEngine:
         its chunk plan intact and replays deterministically."""
         staged = [s for s in sorted(self._prefilling)
                   if self._prefilling[s]["next"]
-                  < len(self._prefilling[s]["req"].chunks)]
+                  < len(self._prefilling[s]["chunks"])]
         if not staged:
             return None, []
         C = max(1, int(self.ecfg.prefill_chunk))
@@ -697,7 +828,7 @@ class StreamingEngine:
             rec = self._prefilling[slot]
             mode = rec["mode"]
             local = slot - self._slot_base[mode]
-            tokens, p0, nv = rec["req"].chunks[rec["next"]]
+            tokens, p0, nv = rec["chunks"][rec["next"]]
             toks[mode][local] = np.asarray(tokens)
             pos0[mode][local] = p0
             nval[mode][local] = nv
@@ -766,7 +897,7 @@ class StreamingEngine:
         self._staged_slots = []
         for slot in sorted(self._dispatch_prefilling):
             rec = self._prefilling.get(slot)
-            if rec is None or rec["next"] < len(rec["req"].chunks):
+            if rec is None or rec["next"] < len(rec["chunks"]):
                 continue
             # prompt fully written: siblings adopt row 0 and the slot goes
             # live for the NEXT dispatch
@@ -776,6 +907,10 @@ class StreamingEngine:
                 self.params, self.scheduler.state, jnp.int32(local),
                 req.gen, *req.args)
             self.n_dispatches += 1
+            if self.radix is not None and rec.get("body") is not None:
+                # the prompt is committed: publish its full pages into the
+                # radix tree so later siblings can alias them
+                self._radix_insert(slot, rec, out)
             del self._prefilling[slot]
             self._decoding.add(slot)
             if self.allocator is not None:
@@ -787,6 +922,7 @@ class StreamingEngine:
             self.allocator.peak_pages = max(
                 self.allocator.peak_pages,
                 (self.allocator.n_pages - 1) - int(out["n_free_alloc"]))
+            self.pages_allocated += int(out["need"].sum())
             self._mirror_free = int(out["n_free_final"])
             # bookings made before this bundle's dispatch are now visible
             # in the device counter; keep only the ones it cannot see yet
@@ -835,14 +971,35 @@ class StreamingEngine:
             return True
         self._mirror_recount()
         booked = sum(p for _, p in self._booked)
+        # still short: retained prefix pages are reclaimable capacity —
+        # evict LRU radix nodes (monotone progress, the tree only shrinks)
+        # before refusing the admission
+        while (self._mirror_free - booked < need and self._radix_reclaim()):
+            self._mirror_recount()
+            booked = sum(p for _, p in self._booked)
         return self._mirror_free - booked >= need
 
     def _new_scheduler(self) -> ContinuousScheduler:
         ecfg = self.ecfg
         paged = self._paged_geometry() if ecfg.paged else None
-        cache = self.backend.init_cache(self.n_rows, self.cache_len,
-                                        paged=paged)
+        # index rows ride after the group rows: block-table-only rows whose
+        # cells pin retained radix pages (decode lanes never touch them)
+        cache = self.backend.init_cache(self.n_rows + self._n_index_rows,
+                                        self.cache_len, paged=paged)
         self._prefilling, self._decoding = {}, set()
+        # prefix-sharing state: radix tree, per-slot acquired chains, the
+        # seq2seq encoder-output LRU, reuse counters, and the lineage map
+        # backing the tree-of-requests API (rid -> query/parent/children/
+        # priority/owned radix nodes; bounded like _done)
+        self.radix = (RadixPageCache(ecfg.page_size, self._n_cells)
+                      if self._prefix_sharing else None)
+        self._slot_chains: dict[int, list] = {}
+        self._encode_lru: collections.OrderedDict = collections.OrderedDict()
+        self._lineage: collections.OrderedDict = collections.OrderedDict()
+        self._prefix_counters = {"lookups": 0, "hit_tokens": 0,
+                                 "lookup_tokens": 0}
+        self.pages_allocated = 0
+        self.requests_admitted = 0
         # per-session dispatch-ahead state: the in-flight bundle, the
         # dispatch-time snapshots, and the mirrored admission counters
         self._bundle = None
@@ -863,10 +1020,14 @@ class StreamingEngine:
                 self._booked.append(
                     (self._n_dispatched,
                      self.allocator.admit_pages_for(mode)))
+            self.requests_admitted += 1
             with jax.profiler.TraceAnnotation("serve/admit"):
                 if not self.backend.chunked:
                     self._decoding.add(slot)
                     self.n_dispatches += 1
+                    if self._encode_reuse and req.prompt is not None:
+                        return self._admit_encode_cached(state, mode, local,
+                                                         req)
                     return self._admit_fns[mode](self.params, state,
                                                  jnp.int32(local), req.gen,
                                                  *req.args)
@@ -876,7 +1037,11 @@ class StreamingEngine:
                 state = self._admit_fns[mode](self.params, state,
                                               jnp.int32(local))
             self.n_dispatches += 1
-            self._prefilling[slot] = {"mode": mode, "req": req, "next": 0}
+            rec = {"mode": mode, "req": req, "next": 0,
+                   "chunks": req.chunks, "depth0": 0, "body": None}
+            if self.radix is not None and req.prompt is not None:
+                state = self._admit_match_prefix(state, slot, rec)
+            self._prefilling[slot] = rec
             if self.allocator is not None:
                 spec = self._groups[mode]
                 row0 = self._slot_row0(slot)
@@ -889,6 +1054,11 @@ class StreamingEngine:
             self._decoding.discard(slot)
             if slot in self._prefilling:   # preempted mid-prefill
                 del self._prefilling[slot]
+            chain = self._slot_chains.pop(slot, None)
+            if chain:
+                # drop the slot's hold on its aliased prefix chain; the
+                # nodes stay in the tree (LRU-evictable once inactive)
+                self.radix.release(chain)
             if self.allocator is not None:
                 spec = self._groups[mode]
                 row0 = self._slot_row0(slot)
@@ -923,9 +1093,249 @@ class StreamingEngine:
                                 for m in self._groups})
             self._mirror_free = self.allocator.n_pages - 1
             hooks.update(admit_ok=self._mirror_admit_ok)
+            if self._n_index_rows:
+                # the index rows' references must survive every reclaim
+                self.allocator.pin_rows(
+                    range(self.n_rows, self.n_rows + self._n_index_rows))
+            if self._prefix_sharing:
+                hooks.update(reclaim=self._radix_reclaim)
         state = grouped_init_state(tuple(self._groups.values()), cache)
         return ContinuousScheduler(self.spec, state, admit=admit, step=step,
                                    **hooks)
+
+    # -- cross-request prefix sharing ---------------------------------------
+    def _admit_match_prefix(self, state, slot: int, rec: dict):
+        """Match an admitted prompt against the radix tree; alias the
+        matched pages into the slot's row0 block table (one dispatch) and
+        rewrite the host chunk plan to the unmatched suffix. The match is
+        truncated to the chunk-grid alignment so the suffix prefill
+        replays the cold run's exact chunk partition (token identity)."""
+        req = rec["req"]
+        ps = self.ecfg.page_size
+        body = np.asarray(req.prompt, np.int32).reshape(-1)[:-1]
+        rec["body"] = body
+        chain = self.radix.match(body)
+        depth = (len(chain) // self._align_pages) * self._align_pages
+        if depth < len(chain):
+            # keep the hit-rate stats honest about what was actually
+            # aliased: the alignment rounds the match down
+            self.radix.hit_tokens -= (len(chain) - depth) * ps
+            chain = chain[:depth]
+        if not chain:
+            return state
+        pages = np.full((self._prefix_pad,), -1, np.int32)
+        pages[:depth] = [nd.page for nd in chain]
+        state = self._alias_fn(state, jnp.int32(self._slot_row0(slot)),
+                               jnp.asarray(pages), jnp.int32(depth))
+        self.n_dispatches += 1
+        self.radix.acquire(chain)
+        self._slot_chains[slot] = chain
+        rec["depth0"] = depth
+        rec["chunks"] = self.backend.suffix_chunks(body, depth * ps)
+        return state
+
+    def _admit_encode_cached(self, state, mode: str, local: int, req):
+        """Seq2seq admission through the encoder-output LRU: repeated
+        sources skip the encoder entirely. Hit and miss both admit via the
+        precomputed-scatter trace, so reuse never changes tokens."""
+        src_np = np.asarray(req.prompt, np.int32)
+        key = src_np.tobytes()
+        c = self._prefix_counters
+        c["lookups"] += 1
+        c["lookup_tokens"] += int(src_np.size)
+        ent = self._encode_lru.pop(key, None)
+        if ent is None:
+            ent = self._encode_fn(self.params, req.args[0])
+            self.n_dispatches += 1
+        else:
+            c["hit_tokens"] += int(src_np.size)
+        self._encode_lru[key] = ent
+        while len(self._encode_lru) > self.ecfg.prefix_cache_entries:
+            self._encode_lru.popitem(last=False)
+        mkv, mask = ent
+        return self._admit_cached_fns[mode](
+            self.params, state, jnp.int32(local), req.gen, mkv, mask,
+            req.args[1], req.args[2])
+
+    def _radix_insert(self, slot: int, rec: dict, out: dict) -> None:
+        """A prompt just finished prefilling: insert its full pages (read
+        from the bundle's post-step row0 tables) into the radix tree and
+        write the new nodes' index cells so the pages outlive the slot."""
+        body = rec["body"]
+        ps = self.ecfg.page_size
+        n_full = len(body) // ps
+        if n_full <= 0:
+            return
+        pages = np.asarray(out["row0_pages"][slot][:n_full])
+        if (pages <= 0).any():
+            return   # defensive: an unmapped/trash block is never shared
+        new = self.radix.insert(body[:n_full * ps], pages, rec["depth0"])
+        if not new:
+            return
+        sreq = self.scheduler._resident.get(slot)
+        if sreq is not None:
+            info = self._lineage.get(sreq.rid)
+            if info is not None:
+                info["nodes"].extend(new)
+        self._write_cells([nd.cell for nd in new], [nd.page for nd in new])
+
+    def _write_cells(self, cells: list, pages: list) -> None:
+        """Write (cell -> page) index references, batched into fixed
+        prefix_pad-wide dispatches of the one retained trace."""
+        rows, blocks = radix_cell_coords(self.n_rows, self._table_blocks,
+                                         cells)
+        PB = self._prefix_pad
+        for i in range(0, len(cells), PB):
+            n = min(PB, len(cells) - i)
+            r = np.zeros((PB,), np.int32)
+            b = np.zeros((PB,), np.int32)
+            p = np.full((PB,), -1, np.int32)
+            r[:n], b[:n] = rows[i:i + n], blocks[i:i + n]
+            p[:n] = pages[i:i + n]
+            self.scheduler.state = self._retain_fn(
+                self.scheduler.state, jnp.asarray(r), jnp.asarray(b),
+                jnp.asarray(p), jnp.int32(n))
+            self.n_dispatches += 1
+
+    def _clear_cells(self, pairs: list) -> None:
+        """Clear evicted nodes' (cell, page) index references so the pages
+        fall out of the device refcount and return to the pool."""
+        if not pairs:
+            return
+        cells = [c for c, _ in pairs]
+        rows, blocks = radix_cell_coords(self.n_rows, self._table_blocks,
+                                         cells)
+        PB = self._prefix_pad
+        for i in range(0, len(cells), PB):
+            n = min(PB, len(cells) - i)
+            r = np.zeros((PB,), np.int32)
+            b = np.zeros((PB,), np.int32)
+            r[:n], b[:n] = rows[i:i + n], blocks[i:i + n]
+            self.scheduler.state = self._evict_cells_fn(
+                self.scheduler.state, jnp.asarray(r), jnp.asarray(b),
+                jnp.int32(n))
+            self.n_dispatches += 1
+
+    def _radix_reclaim(self) -> bool:
+        """Pool-pressure hook (scheduler ``reclaim``): evict LRU inactive
+        radix nodes and clear their index cells, returning their pages to
+        the device pool. Tried before preempting a resident request —
+        cached prefixes are strictly cheaper to lose than live work."""
+        if self.radix is None or len(self.radix) == 0:
+            return False
+        pairs = self.radix.evict_lru(self._prefix_pad)
+        if not pairs:
+            return False
+        self._clear_cells(pairs)
+        return True
+
+    def prefix_stats(self) -> dict:
+        """Prefix-reuse counters for the planning benchmark: hit rate over
+        prompt tokens, pages allocated per admitted request, tree size."""
+        if self.radix is not None:
+            rx = self.radix
+            lookups, hit_t, look_t = rx.lookups, rx.hit_tokens, \
+                rx.lookup_tokens
+            nodes, inserted, evicted = len(rx), rx.inserted, rx.evicted
+        else:
+            c = self._prefix_counters
+            lookups, hit_t, look_t = (c["lookups"], c["hit_tokens"],
+                                      c["lookup_tokens"])
+            nodes = len(self._encode_lru)
+            inserted = evicted = 0
+        return {
+            "lookups": int(lookups),
+            "hit_tokens": int(hit_t),
+            "lookup_tokens": int(look_t),
+            "prefix_hit_rate": (hit_t / look_t) if look_t else 0.0,
+            "nodes": int(nodes),
+            "inserted": int(inserted),
+            "evicted": int(evicted),
+            "pages_allocated": int(self.pages_allocated),
+            "requests_admitted": int(self.requests_admitted),
+            "pages_per_request": (self.pages_allocated
+                                  / self.requests_admitted
+                                  if self.requests_admitted else 0.0),
+        }
+
+    def clear_prefix_cache(self) -> int:
+        """Drop every inactive radix node (clearing its index cells) /
+        the whole encoder-output LRU. Returns the number of radix nodes
+        dropped (pages made reclaimable)."""
+        self._encode_lru.clear()
+        if self.radix is None:
+            return 0
+        pairs = self.radix.evict_lru(len(self.radix))
+        self._clear_cells(pairs)
+        return len(pairs)
+
+    # -- tree-of-requests (search-tree serving) ------------------------------
+    def submit_child(self, parent, suffix, *, arrival: float = 0.0,
+                     mode: str | None = None,
+                     params: GenerationParams | None = None,
+                     priority: int | None = None,
+                     deadline: float | None = None) -> RequestHandle:
+        """Submit a child whose prompt extends ``parent``'s (prompt +
+        ``suffix``) — the planning-search expansion step. Mode and
+        priority default to the parent's (search cost accrues down the
+        tree, so children inherit their subtree's urgency); the shared
+        prefix is served from the radix cache when prefix sharing is on."""
+        prid = int(parent)
+        info = self._lineage.get(prid)
+        if info is None:
+            raise KeyError(
+                f"parent request {prid} is unknown to this session "
+                f"(reset(), or the bounded lineage store evicted it)")
+        pq = info["query"]
+        if isinstance(pq, str):
+            if not isinstance(suffix, str):
+                raise TypeError("parent query is a string; the child "
+                                "suffix must be a string too")
+            q = pq + suffix
+        else:
+            q = np.concatenate([np.asarray(pq, np.int32).reshape(-1),
+                                np.asarray(suffix, np.int32).reshape(-1)])
+        h = self.submit(q, arrival=arrival, mode=mode or info["mode"],
+                        params=params,
+                        priority=(info["priority"] if priority is None
+                                  else priority),
+                        deadline=deadline)
+        self._lineage[int(h)]["parent"] = prid
+        info["children"].append(int(h))
+        return h
+
+    def cancel_subtree(self, rid: int) -> int:
+        """Cancel ``rid`` and every known descendant (a pruned search
+        subtree), then drop the pruned requests' radix nodes — the whole
+        cached page subtree returns to the pool unless a node is still
+        active under a live request outside the subtree, or shared via an
+        ancestor that survives. Returns the number newly cancelled."""
+        order: list[int] = []
+        stack, seen = [int(rid)], set()
+        while stack:
+            r = stack.pop()
+            if r in seen:
+                continue
+            seen.add(r)
+            order.append(r)
+            info = self._lineage.get(r)
+            if info is not None:
+                stack.extend(info["children"])
+        n = sum(1 for r in order if self.cancel(r))
+        if self.radix is not None:
+            pairs: list = []
+            for r in order:
+                info = self._lineage.get(r)
+                if info is None:
+                    continue
+                for node in info["nodes"]:
+                    # guard against nodes already dropped (LRU eviction,
+                    # or a shallower ancestor handled earlier in `order`)
+                    if self.radix._nodes_by_cell.get(node.cell) is node:
+                        pairs.extend(self.radix.drop_subtree(node))
+                info["nodes"] = []
+            self._clear_cells(pairs)
+        return n
 
     def loop_stats(self) -> dict:
         """Host-loop instrumentation for the serving benchmark: total
@@ -1059,6 +1469,16 @@ class StreamingEngine:
         payload = self._payload(query, mode, params)
         rid = self.scheduler.submit(payload, arrival=arrival, mode=mode,
                                     priority=priority, deadline=deadline)
+        # lineage record for the tree-of-requests API (submit_child /
+        # cancel_subtree): bounded like _done — an aged-out parent can no
+        # longer be extended, which the search loop sees as a KeyError
+        q = query if isinstance(query, str) else \
+            np.asarray(query, np.int32).reshape(-1).copy()
+        self._lineage[rid] = {"query": q, "parent": None, "children": [],
+                              "priority": priority, "mode": mode,
+                              "nodes": []}
+        while len(self._lineage) > self._DONE_CAP:
+            self._lineage.popitem(last=False)
         return RequestHandle(rid, self, mode=mode,
                              params=payload[1].params)
 
@@ -1168,7 +1588,12 @@ class StreamingEngine:
             if lo >= 0:
                 st["buf"].append(np.asarray(sb["delta"][slot, lo:n_new]))
                 st["n"] = n_after
-            else:
+            elif not st.get("caught_up"):
+                # one-off catch-up for a late attach: this read blocks on
+                # the in-flight step, so pay it ONCE and ride the bundles
+                # afterwards — any residual gap (tokens committed between
+                # this read and the next bundle) is healed by the terminal
+                # tail flush, which replays from the cursor
                 gs = self.scheduler.state.groups[
                     self.mode_names.index(mode)]
                 n = int(gs.n_out[local, 0])
@@ -1176,6 +1601,7 @@ class StreamingEngine:
                     st["buf"].append(
                         np.asarray(gs.tokens[local, 0, st["n"]:n]))
                     st["n"] = n
+                st["caught_up"] = True
 
     # -- request-level control (the RequestHandle surface) -------------------
     def request_status(self, rid: int) -> str:

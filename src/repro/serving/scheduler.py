@@ -166,6 +166,10 @@ class ContinuousScheduler:
                                      ``PoolExhausted`` -> preemption
     release(state, slot) -> state    eviction (default: core release_slot;
                                      paged engines also unmap the slot)
+    reclaim() -> bool                free reclaimable (non-resident) pages
+                                     — e.g. cached prefix pages — tried
+                                     BEFORE preempting a resident request
+                                     under pool pressure; True = progress
     """
 
     def __init__(self, spec: SessionSpec, state, *,
@@ -176,7 +180,8 @@ class ContinuousScheduler:
                  groups: dict[Hashable, list[int]] | None = None,
                  finished: Callable | None = None,
                  dispatch: Callable | None = None,
-                 sync: Callable | None = None):
+                 sync: Callable | None = None,
+                 reclaim: Callable | None = None):
         self.spec = spec
         self.state = state
         self._admit = admit
@@ -186,6 +191,7 @@ class ContinuousScheduler:
         self._release = release
         self._dispatch = dispatch
         self._sync = sync
+        self._reclaim = reclaim
         self._finished = finished or _default_finished
         if groups is None:
             groups = {None: list(range(spec.n_slots))}
@@ -436,9 +442,13 @@ class ContinuousScheduler:
                 self.state = self._pre_step(self.state)
                 return
             except PoolExhausted as e:
+                if self._reclaim is not None and self._reclaim():
+                    continue   # cached pages freed: replay with no victim
                 if len(self._resident) <= 1:
                     raise  # pool below one request's worst case (validated
-                           # at allocator construction; unreachable there)
+                           # at allocator construction; unreachable there
+                           # unless retained pages were held — reclaimed
+                           # above)
                 prefer = e.group if e.group in self._future else None
                 self._preempt_youngest(prefer)
 
@@ -578,14 +588,20 @@ class ContinuousScheduler:
             if inflight:
                 out = self._sync()
                 while out.get("exhausted"):
-                    if len(self._resident) <= 1:
+                    # retained (prefix-cache) pages are the cheapest thing
+                    # to give back — reclaim before preempting live work,
+                    # and before concluding a single resident cannot fit
+                    if self._reclaim is not None and self._reclaim():
+                        pass
+                    elif len(self._resident) <= 1:
                         raise PoolExhausted(
                             "page pool exhausted with a single resident "
                             "request (pool below one slot's worst case is "
                             "rejected at allocator construction)")
-                    prefer = out.get("group")
-                    self._preempt_youngest(
-                        prefer if prefer in self._future else None)
+                    else:
+                        prefer = out.get("group")
+                        self._preempt_youngest(
+                            prefer if prefer in self._future else None)
                     self.state = self._dispatch(self.state)
                     out = self._sync()
                 inflight = False

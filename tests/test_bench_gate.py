@@ -151,6 +151,47 @@ def test_dispatch_gate_tolerates_small_drift():
     assert got == []
 
 
+def test_added_config_keys_tolerated():
+    """Drift compares only the keys the BASELINE carries: a new benign
+    bench knob (added alongside a new mode) must not force an immediate
+    baseline regeneration — but changing a shared knob still fails."""
+    new = _payload(cfg={"requests": 6, "max_new": 16, "seed": 0,
+                        "tree_depth": 2})
+    assert compare(_payload(), new, 0.30) == []
+    new = _payload(cfg={"requests": 12, "max_new": 16, "seed": 0,
+                        "tree_depth": 2})
+    got = compare(_payload(), new, 0.30)
+    assert len(got) == 1 and "configs differ" in got[0]
+
+
+def _planning_payload(hit=0.66):
+    p = _payload()
+    p["modes"]["planning"] = {"rps": 15.0, "prefix_hit_rate": hit,
+                              "pages_per_request": 2.1}
+    return p
+
+
+def test_prefix_hit_rate_collapse_fails():
+    """A scheduler change that silently stops sharing pages keeps tokens
+    correct while paying full prefill — the hit-rate gate catches it."""
+    got = compare(_planning_payload(), _planning_payload(hit=0.2), 0.30,
+                  hit_rate_threshold=0.30)
+    assert len(got) == 1
+    assert got[0].startswith("planning") and "prefix_hit_rate" in got[0]
+
+
+def test_prefix_hit_rate_small_drift_passes():
+    got = compare(_planning_payload(), _planning_payload(hit=0.5), 0.30,
+                  hit_rate_threshold=0.30)
+    assert got == []
+
+
+def test_hit_rate_gate_skips_predating_baselines():
+    got = compare(_payload(), _planning_payload(hit=0.0), 0.30,
+                  hit_rate_threshold=0.30)
+    assert got == []
+
+
 def test_megastep_gates_skip_predating_baselines():
     """A committed baseline from before the loop metrics existed must not
     crash or fail the new gates — they activate on regeneration."""

@@ -11,7 +11,11 @@ The contract that makes the dispatch-ahead serving loop safe to ship:
      applies NOTHING, the host preempts the youngest resident and replays
      the identical iteration — tokens match the dense session exactly;
   4. the opt-in Pallas block-table kernel is read-path invisible: paged
-     serving with the kernel enabled is token-identical to dense serving.
+     serving with the kernel enabled is token-identical to dense serving;
+  5. cross-request prefix sharing rides the same contract: ragged
+     shared-prefix tree traffic (aliased admissions, radix inserts at
+     finish) retraces nothing after one parent+child warmup and keeps the
+     steady state at one dispatch per iteration.
 """
 
 import jax
@@ -104,6 +108,50 @@ def test_megastep_zero_recompile_across_ragged_traffic(toy):
     assert sorted(res) == sorted(rids)
     assert dict(eng.n_traces) == warm, \
         f"ragged traffic retraced after warmup: {warm} -> {eng.n_traces}"
+
+
+def test_shared_prefix_traffic_zero_recompile_one_dispatch():
+    """Prefix sharing must not break the megastep contract: after ONE
+    parent+child warmup (which traces the alias/retain dispatches along
+    with admit/chunk/finish), a ragged tree — new roots, children and
+    grandchildren with assorted suffix lengths, interleaved in recycled
+    slots — retraces nothing, and steady-state iterations stay one fused
+    dispatch."""
+    from repro.configs import get_config
+    from repro.models import transformer as tr
+
+    cfg = get_config("smollm-135m", reduced=True)
+    params = tr.init(jax.random.PRNGKey(0), cfg)
+    eng = StreamingEngine(params, cfg, None, EngineConfig(
+        mode="greedy", max_new=8, max_src=96, n_slots=2, prefill_chunk=8,
+        eos_id=2, paged=True, page_size=8, prefix_cache=True))
+    rng = np.random.default_rng(0)
+
+    def prompt(n):
+        return rng.integers(4, cfg.vocab_size, size=n).astype(np.int32)
+
+    h0 = eng.submit(prompt(25))
+    h0.result()
+    h0.submit_child(prompt(9)).result()
+    warm = dict(eng.n_traces)
+    assert warm["share"] >= 1 and warm["retain"] >= 1, warm
+
+    # ragged follow-up tree: assorted suffix lengths + a fresh root
+    kids = [h0.submit_child(prompt(n)) for n in (7, 23)]
+    for k in kids:
+        k.result()
+    g = kids[0].submit_child(prompt(12))
+    r1 = eng.submit(prompt(41))
+    eng.serve()
+    assert g.status == "done" and r1.status == "done"
+    assert dict(eng.n_traces) == warm, \
+        f"shared-prefix traffic retraced: {warm} -> {eng.n_traces}"
+    stats = eng.loop_stats()
+    assert stats["steady_iterations_one_dispatch"] >= \
+        stats["n_iterations"] // 2, stats
+    assert eng.prefix_stats()["prefix_hit_rate"] > 0.0
+    eng.allocator.check()
+    eng.radix.check()
 
 
 # ---------------------------------------------------------------------------
