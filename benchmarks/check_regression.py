@@ -113,6 +113,8 @@ def compare(
     step_gap_threshold: float | None = None,
     dispatch_threshold: float | None = None,
     hit_rate_threshold: float | None = None,
+    slo_threshold: float | None = None,
+    shed_threshold: float | None = None,
 ) -> list[str]:
     """Return a list of human-readable gate failures (empty = pass).
 
@@ -137,6 +139,16 @@ def compare(
     prefix pages would keep serving correct tokens while quietly paying
     full prefill again, so the planning workload's hit rate is gated like
     a throughput metric.
+
+    ``slo_threshold`` / ``shed_threshold``: the overload-policy gates.
+    The overload workload replays a deterministic closed-loop trace, so
+    its numbers carry no runner noise: ``slo_high`` (high-class SLO
+    attainment) must not DECREASE more than ``slo_threshold``
+    fractionally — a scheduler change that quietly starves the deadline
+    class under burst pressure fails here first — and ``shed_rate`` must
+    not INCREASE more than ``shed_threshold`` — shedding work the
+    baseline policy would have served is a capacity regression even when
+    the served requests' throughput looks fine.
 
     Config drift compares only the keys the BASELINE carries: a new
     benign bench field (added alongside a new mode/metric) must not force
@@ -221,6 +233,14 @@ def compare(
             " hit",
             failures,
         )
+    if slo_threshold is not None:
+        _gate_decrease(
+            baseline, new, "slo_high", slo_threshold, " slo", failures
+        )
+    if shed_threshold is not None:
+        _gate_increase(
+            baseline, new, "shed_rate", shed_threshold, " shed", failures
+        )
     return failures
 
 
@@ -266,6 +286,22 @@ def main() -> int:
         "metric are skipped)",
     )
     ap.add_argument(
+        "--slo-threshold",
+        type=float,
+        default=0.20,
+        help="max tolerated fractional slo_high (high-class SLO attainment) "
+        "decrease for the overload workload (default 0.20; negative "
+        "disables; modes whose baseline lacks the metric are skipped)",
+    )
+    ap.add_argument(
+        "--shed-threshold",
+        type=float,
+        default=0.30,
+        help="max tolerated fractional shed_rate increase for the overload "
+        "workload (default 0.30; negative disables; modes whose baseline "
+        "lacks the metric are skipped)",
+    )
+    ap.add_argument(
         "--require",
         nargs="*",
         default=[],
@@ -296,6 +332,12 @@ def main() -> int:
         ),
         hit_rate_threshold=(
             None if args.hit_rate_threshold < 0 else args.hit_rate_threshold
+        ),
+        slo_threshold=(
+            None if args.slo_threshold < 0 else args.slo_threshold
+        ),
+        shed_threshold=(
+            None if args.shed_threshold < 0 else args.shed_threshold
         ),
     )
     if failures:

@@ -1,0 +1,208 @@
+"""Deterministic overload traffic: bursty arrivals, heavy-tailed prompts,
+mid-stream cancels — generation and replay.
+
+The steady Poisson stream in ``serving_throughput.py`` measures capacity;
+this module builds the traffic that BREAKS a scheduler without an
+overload policy: arrivals come in Poisson bursts (a retrosynthesis
+planner expanding a frontier fires dozens of calls at once, then goes
+quiet), prompt lengths are heavy-tailed (clipped lognormal — most calls
+are short probes, a few drag whole-pool prefills behind them), a slice of
+requests is abandoned mid-stream (the planner found a better branch), and
+a high-priority class carries real deadlines while a best-effort class
+carries none.
+
+Everything is derived from one ``numpy`` Generator seed and replayed on
+the CLOSED-LOOP serving clock (scheduler steps, not wall time), so a
+trace is bit-identical across machines — the overload benchmark's SLO /
+shed-rate numbers are deterministic and CI can gate them as tightly as a
+throughput floor.
+
+``replay`` is open-loop admission on that closed-loop clock: requests are
+submitted as the serving clock passes their arrival stamps (never all up
+front — load shedding keys on the ready-queue depth at arrival, which
+bulk submission would fake), and cancels fire between pump iterations
+once the clock passes their stamps. ``summarize`` reduces the terminal
+records to the gated metrics: per-class SLO attainment, shed rate, and
+the low-class starvation bound (worst queue delay a best-effort request
+survived — finite only because priority aging exists).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from repro.serving import GenerationParams, RequestSpec, RequestStatus
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    """One request in an overload trace. Times are absolute serving-clock
+    stamps (steps under closed-loop replay). ``deadline`` is None for the
+    best-effort class; ``cancel_at`` is the stamp at which the client
+    abandons the request mid-stream (None = never)."""
+
+    arrival: float
+    prompt_len: int
+    max_new: int
+    cls: str                      # "high" | "low"
+    priority: int
+    deadline: float | None
+    cancel_at: float | None
+
+
+@dataclasses.dataclass(frozen=True)
+class OverloadTrace:
+    requests: tuple[TraceRequest, ...]
+    seed: int
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+
+def make_trace(n: int = 48, seed: int = 0, *,
+               burst_gap: float = 24.0, burst_size: float = 6.0,
+               intra_gap: float = 2.5,
+               prompt_median: float = 10.0, prompt_sigma: float = 0.9,
+               prompt_min: int = 4, prompt_max: int = 48,
+               max_new: int = 16,
+               high_fraction: float = 0.3, high_priority: int = 1,
+               deadline_slack: tuple[float, float] = (48.0, 160.0),
+               cancel_fraction: float = 0.15,
+               cancel_after: tuple[float, float] = (2.0, 12.0),
+               ) -> OverloadTrace:
+    """Build a deterministic overload trace of ``n`` requests.
+
+    Arrivals: burst starts are Poisson (mean gap ``burst_gap`` steps),
+    burst sizes geometric (mean ``burst_size``), requests inside a burst
+    ``intra_gap`` apart — so instantaneous demand spikes far above slot
+    capacity while average demand may not. The intra-burst gap spans a
+    few decode steps on purpose: a burst's early (often best-effort)
+    members grab the free slots, and a deadline-carrying request landing
+    a beat later exercises the deadline-aware preemption path instead of
+    finding the pool conveniently empty. Prompt lengths: lognormal with
+    the given median/sigma, clipped to [prompt_min, prompt_max]. A
+    ``high_fraction`` slice is the high class: ``high_priority`` plus an
+    absolute deadline ``arrival + U(deadline_slack)``; the rest is
+    best-effort (priority 0, no deadline). A ``cancel_fraction`` slice is
+    abandoned at ``arrival + U(cancel_after)``."""
+    rng = np.random.default_rng(seed)
+    arrivals: list[float] = []
+    t = 0.0
+    while len(arrivals) < n:
+        t += float(rng.exponential(burst_gap))
+        size = 1 + int(rng.geometric(1.0 / max(1.0, burst_size)))
+        for j in range(size):
+            if len(arrivals) == n:
+                break
+            arrivals.append(t + j * intra_gap)
+    lens = np.clip(rng.lognormal(np.log(prompt_median), prompt_sigma,
+                                 size=n),
+                   prompt_min, prompt_max).astype(int)
+    is_high = rng.random(n) < high_fraction
+    slack = rng.uniform(*deadline_slack, size=n)
+    cancels = rng.random(n) < cancel_fraction
+    cancel_at = rng.uniform(*cancel_after, size=n)
+    reqs = []
+    for i in range(n):
+        a = arrivals[i]
+        reqs.append(TraceRequest(
+            arrival=a,
+            prompt_len=int(lens[i]),
+            max_new=max_new,
+            cls="high" if is_high[i] else "low",
+            priority=high_priority if is_high[i] else 0,
+            deadline=a + float(slack[i]) if is_high[i] else None,
+            cancel_at=a + float(cancel_at[i]) if cancels[i] else None))
+    reqs.sort(key=lambda r: r.arrival)
+    return OverloadTrace(requests=tuple(reqs), seed=seed)
+
+
+def prompt_tokens(trace: OverloadTrace, i: int, vocab_size: int,
+                  lo: int = 4) -> np.ndarray:
+    """The i-th request's prompt as deterministic random token ids (the
+    decoder-only workload's query form)."""
+    rng = np.random.default_rng(trace.seed * 100_003 + i)
+    return rng.integers(lo, vocab_size,
+                        size=trace.requests[i].prompt_len).astype(np.int32)
+
+
+def replay(engine, trace: OverloadTrace, make_query) -> dict[int, tuple]:
+    """Replay ``trace`` through ``engine`` on the closed-loop serving
+    clock; returns {rid: (handle, TraceRequest)} once every request is
+    terminal. ``make_query(tr, i)`` builds the i-th request's query.
+
+    Submission is open-loop against the step clock: a request enters the
+    scheduler only once the clock reaches its arrival (or the engine went
+    idle — then the next arrival is fed so the clock can fast-forward),
+    which keeps the shed decision keyed on the queue depth the request
+    would actually see. Cancels fire between pump iterations."""
+    reqs = trace.requests
+    sch = engine.scheduler
+    handles: dict[int, tuple] = {}
+    cancels: list[tuple[float, int]] = []
+    i = 0
+
+    def feed() -> None:
+        nonlocal i
+        while i < len(reqs) and (reqs[i].arrival <= sch._now
+                                 or not sch.pending):
+            tr = reqs[i]
+            h = engine.submit_spec(RequestSpec(
+                query=make_query(tr, i),
+                params=GenerationParams(max_new=tr.max_new),
+                priority=tr.priority, deadline=tr.deadline,
+                arrival=tr.arrival))
+            handles[int(h)] = (h, tr)
+            if tr.cancel_at is not None:
+                heapq.heappush(cancels, (tr.cancel_at, int(h)))
+            i += 1
+
+    feed()
+    while True:
+        while cancels and cancels[0][0] <= sch._now:
+            _, rid = heapq.heappop(cancels)
+            handles[rid][0].cancel()
+        if not engine._pump_once() and i >= len(reqs):
+            break
+        feed()
+    return handles
+
+
+def summarize(engine, handles: dict[int, tuple]) -> dict:
+    """Reduce a replay to the gated overload metrics.
+
+    ``slo_high`` / ``slo_low``: fraction of the class that FINISHED
+    within its deadline (no deadline = finishing at all), over the
+    non-cancelled class population — client abandons are the client's
+    choice, not the scheduler's failure, so they leave the denominator.
+    Shed and expired requests are misses. ``starvation_bound``: the worst
+    queue delay any best-effort request survived to completion — with
+    priority aging this is finite under sustained high-priority pressure;
+    without it, unbounded (the starvation regression test's signal).
+    ``shed_rate``: shed / submitted, the overload valve's duty cycle."""
+    per = {"high": [], "low": []}
+    for rid, (h, tr) in handles.items():
+        r = engine._done[rid]
+        per[tr.cls].append((r, tr))
+    out: dict = {"requests": len(handles)}
+    n_shed = 0
+    for cls, rows in per.items():
+        eligible = [x for x in rows
+                    if x[0].status != RequestStatus.CANCELLED]
+        hit = [r for r, tr in eligible
+               if r.status == RequestStatus.FINISHED
+               and (tr.deadline is None or r.completed <= tr.deadline)]
+        n_shed += sum(r.status == RequestStatus.SHED for r, _ in rows)
+        out[f"slo_{cls}"] = len(hit) / max(1, len(eligible))
+        out[f"requests_{cls}"] = len(rows)
+        if cls == "low":
+            delays = [r.queue_delay for r in hit]
+            out["starvation_bound"] = float(max(delays)) if delays else 0.0
+    out["shed_rate"] = n_shed / max(1, len(handles))
+    out["finished"] = sum(
+        1 for rid in handles
+        if engine._done[rid].status == RequestStatus.FINISHED)
+    return out

@@ -45,6 +45,15 @@ stream split into high- and low-priority halves. The per-class
 trajectory — high-priority requests overtake the low-priority backlog at
 every admission.
 
+``--modes overload`` (in the default set) replays the
+``benchmarks/load_gen.py`` trace — Poisson BURSTS, heavy-tailed prompt
+lengths, mid-stream cancels, a deadline-carrying high class — through the
+full ``OverloadPolicy`` (priority aging + deadline-aware preemption +
+load shedding) on the closed-loop step clock, so ``slo_high`` /
+``slo_low`` / ``shed_rate`` / the best-effort starvation bound are
+deterministic and CI gates them (``--slo-threshold`` /
+``--shed-threshold`` in ``check_regression.py``).
+
 Results are printed AND written as machine-readable ``BENCH_serving.json``
 (req/s, p50/p95 latency + queue delay, peak/capacity cache bytes, slots
 resident) so the perf trajectory is tracked across PRs;
@@ -68,12 +77,12 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.common import trained_model
 from repro.core import SessionSpec
-from repro.serving import EngineConfig, StreamingEngine
+from repro.serving import EngineConfig, OverloadPolicy, StreamingEngine
 from repro.serving.engine import _mode_shape
 
 MODES = ("greedy", "speculative", "beam", "speculative_beam", "mixed",
          "decoder_greedy", "decoder_speculative", "priority_mix",
-         "planning")
+         "planning", "overload")
 # the mixed workload's slot groups: cheap greedy probes + speculative
 # forward predictions + beam retrosynthesis expansions in ONE session
 # (requests round-robin over the groups)
@@ -369,6 +378,68 @@ def run_planning(args):
     }
 
 
+def run_overload(args):
+    """Overload replay: the ``benchmarks/load_gen.py`` trace — Poisson
+    BURSTS of arrivals, heavy-tailed prompt lengths, mid-stream cancels,
+    a deadline-carrying high class over a best-effort low class — served
+    by the decoder-only backend with the full overload policy on
+    (priority aging + deadline-aware preemption + load shedding). Runs on
+    the CLOSED-LOOP step clock, so every reported number is
+    deterministic: per-class SLO attainment, shed rate, and the
+    best-effort starvation bound join the CI bench gate
+    (``--slo-threshold`` / ``--shed-threshold``), and the dispatch
+    accounting proves the policy machinery keeps the steady state at one
+    megastep per iteration."""
+    import jax
+
+    from benchmarks.load_gen import make_trace, prompt_tokens, replay, \
+        summarize
+    from repro.configs import get_config
+    from repro.models import transformer as tr
+
+    cfg = get_config(DECODER_ARCH, reduced=True)
+    params = tr.init(jax.random.PRNGKey(0), cfg)
+    policy = OverloadPolicy(aging_rate=0.02,
+                            shed_depth=max(6, 3 * args.slots),
+                            deadline_preemption=True,
+                            preempt_slack_margin=4.0)
+    ecfg = EngineConfig(mode="greedy", max_new=args.max_new, max_src=64,
+                        n_slots=args.slots, prefill_chunk=16,
+                        eos_id=DECODER_EOS, overload=policy)
+    eng = StreamingEngine(params, cfg, None, ecfg)
+    trace = make_trace(n=max(32, 6 * args.requests), seed=args.seed,
+                       prompt_max=56, max_new=args.max_new)
+    _warmup(eng, prompt_tokens(trace, 0, cfg.vocab_size))
+    traces0 = dict(eng.n_traces)
+
+    handles = replay(eng, trace,
+                     lambda t, i: prompt_tokens(trace, i, cfg.vocab_size))
+    assert dict(eng.n_traces) == traces0, \
+        f"overload traffic retraced after warmup: {traces0} -> {eng.n_traces}"
+    metrics = summarize(eng, handles)
+    finished = [eng._done[rid] for rid in handles
+                if eng._done[rid].status == "finished"]
+    makespan = max(r.completed for r in finished)
+    return {
+        "mode": "overload", "arch": cfg.name,
+        "rps": len(finished) / makespan,    # finished per step (closed loop)
+        **_latency_stats(finished),
+        **metrics,
+        "steps": eng.scheduler.n_steps,
+        "n_slots": eng.n_slots,
+        "slots_resident": eng.scheduler.max_resident,
+        "preemptions": eng.scheduler.n_preemptions,
+        "n_expired": eng.scheduler.n_expired,
+        "n_cancelled": eng.scheduler.n_cancelled,
+        "policy": {"aging_rate": policy.aging_rate,
+                   "shed_depth": policy.shed_depth,
+                   "deadline_preemption": policy.deadline_preemption,
+                   "preempt_slack_margin": policy.preempt_slack_margin},
+        "cache": eng.cache_footprint(),
+        **_loop_row(eng, finished),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
@@ -435,6 +506,16 @@ def main() -> None:
                   f"pages/req {r['pages_per_request']:5.2f} "
                   f"(cold {r['pages_per_request_cold']:5.2f})  "
                   f"{r['dispatches_per_token']:5.2f} d/tok")
+            continue
+        if mode == "overload":
+            r = run_overload(args)
+            rows[mode] = r
+            print(f"{r['mode']:18s} {r['rps']:7.2f} {r['p50']:8.2f}s "
+                  f"{r['p95']:8.2f}s {r['steps']:6d} "
+                  f"slo_hi {r['slo_high']:4.2f} slo_lo {r['slo_low']:4.2f} "
+                  f"shed {r['shed_rate']:4.2f} "
+                  f"starve<= {r['starvation_bound']:5.1f} "
+                  f"preempt {r['preemptions']:2d}")
             continue
         if mode.startswith("decoder_"):
             r = run_decoder_mode(mode, args)

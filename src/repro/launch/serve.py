@@ -65,7 +65,7 @@ def continuous_demo(params, cfg, prompts, args, expected=None) -> None:
     deltas = list(handles[0].stream())
     results = eng.serve()      # drain the rest of the queue
     dt = time.time() - t0
-    ok = [r for r in results.values() if r.status == "ok"]
+    ok = [r for r in results.values() if r.status == "finished"]
     acc = sum(r.accepted for r in ok)
     gen = sum(int(r.lengths[0]) for r in ok)
     print(f"continuous  : {B + 1} requests over {ecfg.n_slots} slots "

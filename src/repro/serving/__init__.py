@@ -1,14 +1,30 @@
+"""Public serving surface. ``__all__`` is the stable API: request objects
+(``RequestSpec`` is THE request; ``submit()`` is sugar that builds one),
+lifecycle (``RequestStatus``, ``RequestRejected``), engines, the overload
+policy, and the network front door (``FrontDoorServer``)."""
+
 from repro.serving.api import (MAX_STOP_IDS, GenerationParams,
-                               RequestCancelled, RequestHandle, RequestSpec)
+                               RequestCancelled, RequestHandle,
+                               RequestRejected, RequestSpec, RequestStatus)
 from repro.serving.backend import (DecoderOnlyBackend, Seq2SeqBackend,
                                    make_backend)
 from repro.serving.engine import (EngineConfig, Prediction, ReactionEngine,
                                   StreamingEngine)
-from repro.serving.scheduler import (ContinuousScheduler, ScheduledRequest,
-                                     SlotResult)
+from repro.serving.scheduler import (ContinuousScheduler, OverloadPolicy,
+                                     ScheduledRequest, SlotResult)
+from repro.serving.server import FrontDoorServer, ServerConfig
 
-__all__ = ["ReactionEngine", "StreamingEngine", "EngineConfig", "Prediction",
-           "ContinuousScheduler", "ScheduledRequest", "SlotResult",
-           "Seq2SeqBackend", "DecoderOnlyBackend", "make_backend",
-           "GenerationParams", "RequestSpec", "RequestHandle",
-           "RequestCancelled", "MAX_STOP_IDS"]
+__all__ = [
+    # engines
+    "ReactionEngine", "StreamingEngine", "EngineConfig", "Prediction",
+    # scheduler
+    "ContinuousScheduler", "ScheduledRequest", "SlotResult",
+    "OverloadPolicy",
+    # backends
+    "Seq2SeqBackend", "DecoderOnlyBackend", "make_backend",
+    # request API
+    "GenerationParams", "RequestSpec", "RequestHandle", "RequestStatus",
+    "RequestCancelled", "RequestRejected", "MAX_STOP_IDS",
+    # network front door
+    "FrontDoorServer", "ServerConfig",
+]

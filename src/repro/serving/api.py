@@ -47,9 +47,10 @@ This module is that contract:
                       mode/priority inherited unless overridden — the
                       retrosynthetic-planning expansion step, served from
                       the engine's prefix cache when sharing is enabled
-      ``.status``     "queued" | "running" | "done" | "cancelled" |
-                      "expired" | "unknown" (not in this session: the
-                      engine was reset() or the terminal record aged out)
+      ``.status``     a ``RequestStatus`` — QUEUED | RUNNING | FINISHED |
+                      CANCELLED | EXPIRED | SHED | UNKNOWN (not in this
+                      session: the engine was reset() or the terminal
+                      record aged out)
 
 The blocking calls all drive ONE engine pump (``serve_steps``), so
 ``h.result()``, ``h.stream()``, and ``engine.serve()`` compose freely on
@@ -59,6 +60,7 @@ a single session.
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import Any, Iterator
 
 import jax.numpy as jnp
@@ -69,6 +71,33 @@ import numpy as np
 MAX_STOP_IDS = 4
 
 
+class RequestStatus(str, enum.Enum):
+    """Lifecycle of a request, shared by the scheduler's terminal records
+    (``SlotResult.status``), ``RequestHandle.status``, and the SSE wire
+    format. A ``str`` subclass, so JSON serialization and equality against
+    the literal value (``status == "finished"``) both work.
+
+    Terminal states: FINISHED | CANCELLED | EXPIRED | SHED.
+    Live states: QUEUED | RUNNING. UNKNOWN means "not in this session"
+    (the engine was ``reset()`` or the terminal record aged out of the
+    bounded done-buffer)."""
+
+    QUEUED = "queued"
+    RUNNING = "running"
+    FINISHED = "finished"
+    CANCELLED = "cancelled"
+    EXPIRED = "expired"
+    SHED = "shed"
+    UNKNOWN = "unknown"
+
+    @property
+    def terminal(self) -> bool:
+        return self not in (RequestStatus.QUEUED, RequestStatus.RUNNING)
+
+    def __str__(self) -> str:  # f"{status}" == status.value, not the repr
+        return self.value
+
+
 class RequestCancelled(RuntimeError):
     """Raised by ``RequestHandle.result()``/``.stream()`` when the request
     was cancelled (``reason="cancelled"``) or missed its deadline
@@ -77,7 +106,23 @@ class RequestCancelled(RuntimeError):
     def __init__(self, rid: int, reason: str):
         super().__init__(f"request {rid} {reason}")
         self.rid = rid
-        self.reason = reason
+        self.reason = str(reason)
+
+
+class RequestRejected(RequestCancelled):
+    """Raised by ``RequestHandle.result()``/``.stream()`` when the engine
+    refused to run the request at all: load-shed under overload
+    (``reason="shed"``) or expired before ever holding a slot
+    (``reason="expired"``). ``retry_after`` carries the scheduler's
+    backoff estimate in serving-clock units (steps closed-loop, seconds
+    realtime; ``None`` when no estimate applies) — a front door relays it
+    as the retry hint. Subclasses ``RequestCancelled``, so pre-existing
+    handlers keep working."""
+
+    def __init__(self, rid: int, reason: str,
+                 retry_after: float | None = None):
+        super().__init__(rid, reason)
+        self.retry_after = retry_after
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,12 +193,16 @@ class ResolvedParams:
 
 @dataclasses.dataclass(frozen=True)
 class RequestSpec:
-    """One fully-specified request for ``StreamingEngine.submit_spec``.
+    """THE request object — one fully-specified request for
+    ``StreamingEngine.submit_spec`` (the canonical entry point;
+    ``engine.submit(query, ...)`` is thin sugar that builds one of these).
 
     ``priority``: higher runs first among arrived requests (FIFO within a
     priority class). ``deadline``: serving-clock time (steps closed-loop,
     seconds realtime) after which the request expires instead of running.
-    """
+    ``tenant``: opaque accounting label — the engine ignores it, the
+    network front door (``repro.serving.server``) enforces per-tenant
+    admission quotas on it."""
 
     query: Any
     params: GenerationParams = GenerationParams()
@@ -161,6 +210,7 @@ class RequestSpec:
     priority: int = 0
     deadline: float | None = None
     arrival: float = 0.0
+    tenant: str | None = None
 
 
 class RequestHandle(int):
@@ -182,21 +232,27 @@ class RequestHandle(int):
 
     # ------------------------------------------------------------- queries
     @property
-    def status(self) -> str:
+    def status(self) -> "RequestStatus":
         return self._engine.request_status(self.rid)
 
     def done(self) -> bool:
         """True once the request can make no further progress — finished,
-        cancelled, expired, or no longer part of the session ("unknown",
-        e.g. after ``engine.reset()``)."""
-        return self.status not in ("queued", "running")
+        cancelled, expired, shed, or no longer part of the session
+        ("unknown", e.g. after ``engine.reset()``)."""
+        return self.status not in (RequestStatus.QUEUED,
+                                   RequestStatus.RUNNING)
 
     # ------------------------------------------------------------- control
     def result(self):
         """Drive the engine until this request terminates; return its
-        ``SlotResult``. Raises ``RequestCancelled`` on cancel/expiry."""
+        ``SlotResult``. Raises ``RequestRejected`` (with ``retry_after``)
+        when the engine refused to run it — load-shed, or expired in the
+        queue — and ``RequestCancelled`` on cancel / mid-flight expiry."""
         r = self._engine.wait(self.rid)
-        if r.status != "ok":
+        if r.status in (RequestStatus.SHED, RequestStatus.EXPIRED):
+            raise RequestRejected(self.rid, r.status,
+                                  retry_after=r.retry_after)
+        if r.status != RequestStatus.FINISHED:
             raise RequestCancelled(self.rid, r.status)
         return r
 
@@ -204,7 +260,7 @@ class RequestHandle(int):
         """Yield committed-token deltas (1-D int32 arrays) as scheduler
         iterations complete, ending when the request finishes. Concatenated
         deltas equal ``result().tokens[0][:lengths[0]]`` exactly."""
-        return self._engine.stream(self.rid)
+        return self._engine._stream(self.rid)
 
     def cancel(self, recursive: bool = False) -> bool:
         """Abandon the request: dequeue if queued, evict + reclaim pages
@@ -218,7 +274,7 @@ class RequestHandle(int):
         subtree was newly cancelled."""
         if recursive:
             return self._engine.cancel_subtree(self.rid) > 0
-        return self._engine.cancel(self.rid)
+        return self._engine._cancel(self.rid)
 
     def submit_child(self, suffix, *, arrival: float = 0.0,
                      mode: str | None = None,

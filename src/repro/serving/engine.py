@@ -69,6 +69,7 @@ import collections
 import dataclasses
 import math
 import time
+import warnings
 from typing import Sequence
 
 import jax
@@ -91,9 +92,11 @@ from repro.core.session import (GroupedState, PageAllocator, PoolExhausted,
 from repro.data.tokenizer import SmilesTokenizer
 from repro.models import seq2seq as s2s
 from repro.serving.api import (MAX_STOP_IDS, GenerationParams,
-                               RequestCancelled, RequestHandle, RequestSpec)
+                               RequestCancelled, RequestHandle,
+                               RequestRejected, RequestSpec, RequestStatus)
 from repro.serving.backend import make_backend
-from repro.serving.scheduler import ContinuousScheduler, SlotResult
+from repro.serving.scheduler import (ContinuousScheduler, OverloadPolicy,
+                                     SlotResult)
 
 
 @dataclasses.dataclass
@@ -142,6 +145,10 @@ class EngineConfig:
     # seq2seq encoder-output reuse: LRU entries kept (each caches one
     # source's cross-attention K/V + mask)
     prefix_cache_entries: int = 128
+    # overload policy (StreamingEngine scheduler): priority aging,
+    # deadline-aware preemption, load shedding with retry-after. None =
+    # everything off (strict priority/EDF/FIFO, unbounded queues).
+    overload: OverloadPolicy | None = None
 
     def __post_init__(self):
         """Fail at construction, not as a deep shape/assert error later."""
@@ -1101,7 +1108,7 @@ class StreamingEngine:
                 hooks.update(reclaim=self._radix_reclaim)
         state = grouped_init_state(tuple(self._groups.values()), cache)
         return ContinuousScheduler(self.spec, state, admit=admit, step=step,
-                                   **hooks)
+                                   policy=ecfg.overload, **hooks)
 
     # -- cross-request prefix sharing ---------------------------------------
     def _admit_match_prefix(self, state, slot: int, rec: dict):
@@ -1321,7 +1328,7 @@ class StreamingEngine:
             info = self._lineage.get(r)
             if info is not None:
                 stack.extend(info["children"])
-        n = sum(1 for r in order if self.cancel(r))
+        n = sum(1 for r in order if self._cancel(r))
         if self.radix is not None:
             pairs: list = []
             for r in order:
@@ -1447,47 +1454,63 @@ class StreamingEngine:
         self._dispatch_samples, self._step_gaps = [], []
         self._disp_mark = self.n_dispatches
 
-    def submit(self, query, *, arrival: float = 0.0,
-               mode: str | None = None,
-               params: GenerationParams | None = None,
-               priority: int = 0,
-               deadline: float | None = None) -> RequestHandle:
-        """Enqueue a request; returns its ``RequestHandle`` (an ``int`` —
-        the request id — exposing ``.result()``/``.stream()``/
-        ``.cancel()``). ``query`` is a string (tokenized by the engine's
-        tokenizer) or a 1-D array of token ids (decoder-only sessions
-        without a chemistry tokenizer). ``arrival`` delays admission
-        (steps in closed-loop serve(), seconds in realtime serve());
-        ``mode`` routes the request to that slot group (default: the
-        engine's primary mode); ``params`` sets per-request generation
-        knobs under the group's ceilings; higher ``priority`` admits
-        first among arrived requests; past its ``deadline`` (serving
-        clock) the request expires instead of running."""
-        mode = self.default_mode if mode is None else mode
+    def submit_spec(self, rspec: RequestSpec) -> RequestHandle:
+        """THE canonical entry point: enqueue one fully-specified
+        ``RequestSpec`` and return its ``RequestHandle`` (an ``int`` — the
+        request id — exposing ``.result()``/``.stream()``/``.cancel()``/
+        ``.status``). Every other submission surface (``submit``,
+        ``submit_child``, ``predict*``, the network front door) builds a
+        spec and lands here.
+
+        Overload behavior: a submission against a draining engine, or one
+        whose group queue is at ``OverloadPolicy.shed_depth``, is refused
+        with a terminal SHED record — the returned handle's ``.status`` is
+        already ``RequestStatus.SHED`` and ``.result()`` raises
+        ``RequestRejected`` carrying the scheduler's ``retry_after``
+        estimate."""
+        mode = self.default_mode if rspec.mode is None else rspec.mode
         if mode not in self._groups:
             raise KeyError(f"engine serves {self.mode_names}, got {mode!r}")
-        payload = self._payload(query, mode, params)
-        rid = self.scheduler.submit(payload, arrival=arrival, mode=mode,
-                                    priority=priority, deadline=deadline)
+        payload = self._payload(rspec.query, mode, rspec.params)
+        rid = self.scheduler.submit(payload, arrival=rspec.arrival,
+                                    mode=mode, priority=rspec.priority,
+                                    deadline=rspec.deadline)
+        # a shed submission (queue at depth, or the scheduler draining)
+        # produced a terminal record instead of a queue entry: land it in
+        # the done-store NOW so handle.status is SHED synchronously
+        for r in self.scheduler.drain_shed():
+            self._finish_result(r)
         # lineage record for the tree-of-requests API (submit_child /
         # cancel_subtree): bounded like _done — an aged-out parent can no
         # longer be extended, which the search loop sees as a KeyError
-        q = query if isinstance(query, str) else \
-            np.asarray(query, np.int32).reshape(-1).copy()
+        q = rspec.query if isinstance(rspec.query, str) else \
+            np.asarray(rspec.query, np.int32).reshape(-1).copy()
         self._lineage[rid] = {"query": q, "parent": None, "children": [],
-                              "priority": priority, "mode": mode,
+                              "priority": rspec.priority, "mode": mode,
                               "nodes": []}
         while len(self._lineage) > self._DONE_CAP:
             self._lineage.popitem(last=False)
         return RequestHandle(rid, self, mode=mode,
                              params=payload[1].params)
 
-    def submit_spec(self, rspec: RequestSpec) -> RequestHandle:
-        """Submit a fully-specified ``RequestSpec`` (the planner-facing
-        form of ``submit``)."""
-        return self.submit(rspec.query, arrival=rspec.arrival,
-                           mode=rspec.mode, params=rspec.params,
-                           priority=rspec.priority, deadline=rspec.deadline)
+    def submit(self, query, *, arrival: float = 0.0,
+               mode: str | None = None,
+               params: GenerationParams | None = None,
+               priority: int = 0,
+               deadline: float | None = None) -> RequestHandle:
+        """Thin sugar over ``submit_spec`` — builds the canonical
+        ``RequestSpec`` from kwargs. ``query`` is a string (tokenized by
+        the engine's tokenizer) or a 1-D array of token ids (decoder-only
+        sessions without a chemistry tokenizer). ``arrival`` delays
+        admission (steps in closed-loop serve(), seconds in realtime
+        serve()); ``mode`` routes the request to that slot group (default:
+        the engine's primary mode); ``params`` sets per-request generation
+        knobs under the group's ceilings; higher ``priority`` admits first
+        among arrived requests; past its ``deadline`` (serving clock) the
+        request expires instead of running."""
+        return self.submit_spec(RequestSpec(
+            query=query, params=params or GenerationParams(), mode=mode,
+            priority=priority, deadline=deadline, arrival=arrival))
 
     # -- step pump: one drive shared by serve()/result()/stream() -----------
     def serve_steps(self, *, realtime: bool = False):
@@ -1552,7 +1575,7 @@ class StreamingEngine:
         """Final stream chunk: greedy-family tails from the cursor; beam
         modes deliver the winning beam whole (beams reorder mid-flight,
         so only the terminal ranking is truthful)."""
-        if r.status == "ok" and r.tokens.shape[0]:
+        if r.status == RequestStatus.FINISHED and r.tokens.shape[0]:
             kind = self._groups[r.mode].kind if r.mode in self._groups \
                 else "greedy"
             lo = st["n"] if kind == "greedy" else 0
@@ -1604,18 +1627,18 @@ class StreamingEngine:
                 st["caught_up"] = True
 
     # -- request-level control (the RequestHandle surface) -------------------
-    def request_status(self, rid: int) -> str:
+    def request_status(self, rid: int) -> RequestStatus:
         r = self._done.get(rid)
         if r is not None:
-            return {"ok": "done"}.get(r.status, r.status)
+            return r.status
         if any(sr.rid == rid for sr in self.scheduler._resident.values()):
-            return "running"
+            return RequestStatus.RUNNING
         if rid in self.scheduler._queued_by_rid:
-            return "queued"
+            return RequestStatus.QUEUED
         # not in this session: reset() dropped it, it belongs to another
         # engine, or its terminal record aged out of the bounded store —
-        # never "queued", so a done() poller cannot spin forever
-        return "unknown"
+        # never QUEUED, so a done() poller cannot spin forever
+        return RequestStatus.UNKNOWN
 
     def wait(self, rid: int) -> SlotResult:
         """Drive the pump until ``rid`` reaches a terminal record."""
@@ -1625,14 +1648,27 @@ class StreamingEngine:
                                f"(reset() drops pending requests)")
         return self._done[rid]
 
-    def stream(self, rid: int):
-        """Generator behind ``RequestHandle.stream()``."""
+    def subscribe(self, rid: int) -> dict:
+        """Attach a NON-BLOCKING stream sink to ``rid`` and return it —
+        the front door's (``repro.serving.server``) subscription surface.
+        The sink is the same dict ``_stream`` consumes: ``buf`` fills with
+        committed-token delta arrays as bundles sync, ``done`` flips when
+        the terminal tail is flushed. The caller drains ``buf`` between
+        pump iterations; ``unsubscribe`` detaches."""
         st = self._streams.get(rid)
         if st is None:
             st = self._streams[rid] = {"buf": [], "n": 0, "done": False}
             r = self._done.get(rid)
             if r is not None:      # finished before anyone listened
                 self._flush_stream_tail(st, r)
+        return st
+
+    def unsubscribe(self, rid: int) -> None:
+        self._streams.pop(rid, None)
+
+    def _stream(self, rid: int):
+        """Generator behind ``RequestHandle.stream()``."""
+        st = self.subscribe(rid)
         try:
             while True:
                 while st["buf"]:
@@ -1648,10 +1684,23 @@ class StreamingEngine:
         finally:
             self._streams.pop(rid, None)
         r = self._done[rid]
-        if r.status != "ok":
+        if r.status != RequestStatus.FINISHED:
+            if r.status in (RequestStatus.SHED, RequestStatus.EXPIRED):
+                raise RequestRejected(rid, r.status,
+                                      retry_after=r.retry_after)
             raise RequestCancelled(rid, r.status)
 
-    def cancel(self, rid: int) -> bool:
+    def stream(self, rid: int):
+        """Deprecated engine-level entry — use ``RequestHandle.stream()``
+        (one release of shim; the handle IS the rid, so
+        ``handle.stream()`` is a drop-in)."""
+        warnings.warn(
+            "StreamingEngine.stream(rid) is deprecated; call "
+            ".stream() on the RequestHandle returned by submit()",
+            DeprecationWarning, stacklevel=2)
+        return self._stream(rid)
+
+    def _cancel(self, rid: int) -> bool:
         """Cancel a queued (dequeue) or resident (evict + reclaim pages)
         request. Returns False once the request is already terminal."""
         r = self.scheduler.cancel(rid)
@@ -1659,6 +1708,44 @@ class StreamingEngine:
             return False
         self._finish_result(r)
         return True
+
+    def cancel(self, rid: int) -> bool:
+        """Deprecated engine-level entry — use ``RequestHandle.cancel()``
+        (one release of shim)."""
+        warnings.warn(
+            "StreamingEngine.cancel(rid) is deprecated; call "
+            ".cancel() on the RequestHandle returned by submit()",
+            DeprecationWarning, stacklevel=2)
+        return self._cancel(rid)
+
+    # -- graceful drain (shutdown path) --------------------------------------
+    @property
+    def draining(self) -> bool:
+        return self.scheduler.draining
+
+    def begin_drain(self) -> int:
+        """Enter drain mode WITHOUT blocking: every queued (non-resident)
+        request is refused with a terminal SHED record + retry hint,
+        residents keep decoding to completion (token-identical — nothing
+        about their slots changes), and every later submission sheds
+        immediately. Returns the number of requests shed. The front door
+        calls this on shutdown and keeps pumping until residents finish;
+        ``drain()`` is the blocking wrapper. ``reset()`` clears the mode."""
+        self.scheduler.draining = True
+        shed = self.scheduler.shed_queued()
+        for r in shed:
+            self._finish_result(r)
+        return len(shed)
+
+    def drain(self) -> dict[int, SlotResult]:
+        """Blocking graceful shutdown: ``begin_drain()`` + pump until the
+        residents finish. Returns the epoch's terminal records (finished
+        residents AND the shed queue)."""
+        self.begin_drain()
+        while self._pump_once():
+            pass
+        out, self._epoch = self._epoch, {}
+        return out
 
     def serve(self, *, realtime: bool = False) -> dict[int, SlotResult]:
         """Drain the queue with continuous batching; {rid: SlotResult} of

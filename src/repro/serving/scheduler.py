@@ -68,6 +68,29 @@ every step, and when the pool is truly exhausted mid-decode the scheduler
 *preempts* a youngest resident request rather than crashing. The oldest
 resident always fits (``PageAllocator`` validates the pool covers one
 slot's worst case), so the policy is deadlock-free.
+
+Overload policy (``OverloadPolicy``): three knobs that keep the scheduler
+honest when offered load exceeds capacity.
+
+  - **Priority aging** (``aging_rate``): a queued request's *effective*
+    priority grows with its wait (``priority + int(rate * wait)``), so a
+    sustained high-priority stream can no longer starve a low-priority
+    request forever — it climbs into the high class and is served. Ready
+    queues are re-keyed against the current clock each admission pass.
+  - **Deadline-aware preemption** (``deadline_preemption``): an urgent
+    arrival (strictly higher effective priority, or a tighter deadline
+    than a resident's slack by more than ``preempt_slack_margin``) may
+    evict the resident with the MOST deadline slack even when the page
+    pool is healthy. The victim requeues through the same deterministic
+    requeue path as pool-pressure preemption (restart from scratch,
+    token-identical), but WITHOUT the boost flag — its own lax deadline
+    orders it after the urgent work, which is what prevents
+    preempt-back thrash.
+  - **Load shedding** (``shed_depth``): a submission finding its group's
+    queue at depth is refused outright with a terminal ``SHED`` record
+    carrying ``retry_after`` — an EWMA service-time estimate of when a
+    retry might actually be admitted (``shed_retry_after`` overrides).
+    Shedding at submit keeps the refusal O(1) and the queue bounded.
 """
 
 from __future__ import annotations
@@ -81,6 +104,33 @@ from typing import Any, Callable, Hashable
 import numpy as np
 
 from repro.core.session import PoolExhausted, SessionSpec, release_slot
+from repro.serving.api import RequestStatus
+
+
+@dataclasses.dataclass(frozen=True)
+class OverloadPolicy:
+    """Scheduler behavior when offered load exceeds capacity. The default
+    instance disables everything — strict priority/EDF/FIFO, admission
+    only into free slots, queues unbounded — matching the pre-policy
+    scheduler exactly.
+
+    ``aging_rate``: effective-priority points gained per serving-clock
+    unit spent queued (steps closed-loop, seconds realtime). 0 = off.
+    ``shed_depth``: per-group queued-request ceiling; a submission that
+    would exceed it is refused with a ``SHED`` record. None = unbounded.
+    ``shed_retry_after``: fixed retry hint for shed records; None derives
+    one from the group's EWMA service time and queue depth.
+    ``deadline_preemption``: allow an urgent arrival to evict the
+    most-slack resident (see module docstring). ``preempt_slack_margin``:
+    minimum slack advantage (victim slack - arrival slack) before a
+    same-priority deadline preemption fires — raising it trades latency
+    for fewer restarts."""
+
+    aging_rate: float = 0.0
+    shed_depth: int | None = None
+    shed_retry_after: float | None = None
+    deadline_preemption: bool = False
+    preempt_slack_margin: float = 0.0
 
 
 @dataclasses.dataclass
@@ -100,21 +150,36 @@ class ScheduledRequest:
     boost: int = 0         # preemption requeue: head of its priority class
     cancelled: bool = False
 
-    @property
-    def key(self):
-        """Ready-queue ordering: priority desc, preempted-first, EDF,
-        then FIFO."""
-        return (-self.priority, -self.boost,
+    def eff_priority(self, now: float, rate: float) -> int:
+        """Effective priority under aging: the base class plus one point
+        per ``1/rate`` clock units spent queued. Residents age too (their
+        wait froze at admission-time ``now``), keeping preemption
+        comparisons symmetric."""
+        if rate <= 0.0:
+            return self.priority
+        return self.priority + int(rate * max(0.0, now - self.arrival))
+
+    def key_at(self, now: float, rate: float):
+        """Ready-queue ordering: effective priority desc, preempted-first,
+        EDF, then FIFO."""
+        return (-self.eff_priority(now, rate), -self.boost,
                 math.inf if self.deadline is None else self.deadline,
                 self.arrival, self.seq)
+
+    @property
+    def key(self):
+        """Static ordering (no aging) — kept for aging-off fast paths."""
+        return self.key_at(0.0, 0.0)
 
 
 @dataclasses.dataclass
 class SlotResult:
-    """A terminal request record. ``status="ok"`` rows are read out of the
-    slot at eviction; ``"cancelled"``/``"expired"`` rows carry empty token
-    buffers (the request never finished — ``admitted``/``completed`` stamp
-    when it left the system).
+    """A terminal request record. ``FINISHED`` rows are read out of the
+    slot at eviction; ``CANCELLED``/``EXPIRED``/``SHED`` rows carry empty
+    token buffers (the request never finished — ``admitted``/``completed``
+    stamp when it left the system). ``SHED`` rows additionally carry
+    ``retry_after``, the scheduler's estimate of when a retry could be
+    admitted (serving-clock units).
 
     Timestamps (and thus ``latency``/``queue_delay``) are relative to
     run() start, in the run's clock unit: wall-clock seconds when
@@ -130,7 +195,8 @@ class SlotResult:
     admitted: float
     completed: float
     mode: Hashable = None         # slot group the request was served by
-    status: str = "ok"            # "ok" | "cancelled" | "expired"
+    status: RequestStatus = RequestStatus.FINISHED
+    retry_after: float | None = None   # SHED backoff hint
 
     @property
     def latency(self) -> float:
@@ -181,9 +247,11 @@ class ContinuousScheduler:
                  finished: Callable | None = None,
                  dispatch: Callable | None = None,
                  sync: Callable | None = None,
-                 reclaim: Callable | None = None):
+                 reclaim: Callable | None = None,
+                 policy: OverloadPolicy | None = None):
         self.spec = spec
         self.state = state
+        self.policy = policy or OverloadPolicy()
         self._admit = admit
         self._step = step
         self._admit_ok = admit_ok
@@ -216,9 +284,16 @@ class ContinuousScheduler:
         self.n_preemptions = 0
         self.n_cancelled = 0
         self.n_expired = 0
+        self.n_shed = 0
         self.max_resident = 0
         self._skipped = 0.0   # closed-loop clock offset from idle jumps
         self._now = 0.0       # last serving-clock reading (for cancel())
+        self.draining = False   # True: every submission sheds (shutdown)
+        self._shed_events: list[SlotResult] = []   # drained by the engine
+        # per-group EWMA of (completed - admitted) service time, feeding
+        # the retry_after estimate on shed records
+        self._ewma_service: dict[Hashable, float] = {}
+        self._group_width = {k: max(1, len(v)) for k, v in groups.items()}
 
     # ------------------------------------------------------------------ API
     def submit(self, payload, *, arrival: float = 0.0, rid=None,
@@ -241,17 +316,58 @@ class ContinuousScheduler:
                                mode=mode, priority=priority,
                                deadline=deadline, seq=self._next_seq)
         self._next_seq += 1
-        self._enqueue(req)
+        depth = self.policy.shed_depth
+        if self.draining or (depth is not None
+                             and self._n_queued[mode] >= depth):
+            self._shed(req)
+        else:
+            self._enqueue(req)
         return rid
+
+    def _shed(self, req: ScheduledRequest) -> None:
+        """Refuse a submission with a terminal SHED record (never queued,
+        never a slot). Records accumulate until the engine drains them
+        (``drain_shed``) into its done-buffer, so ``RequestHandle.status``
+        flips to SHED synchronously with ``submit()``."""
+        self.n_shed += 1
+        self._shed_events.append(self._terminal(
+            req, RequestStatus.SHED, now=self._now,
+            retry_after=self.retry_after_estimate(req.mode)))
+
+    def drain_shed(self) -> list[SlotResult]:
+        """Hand off (and clear) the SHED records produced since the last
+        drain — called by the engine after every submit/shed_queued."""
+        out, self._shed_events = self._shed_events, []
+        return out
+
+    def retry_after_estimate(self, mode: Hashable) -> float:
+        """Backoff hint for a shed request: roughly when today's backlog
+        will have cleared — queue depth over group width, times the
+        group's EWMA service time (prior: the compile ceiling ``max_new``,
+        one step per token — exact for closed-loop greedy, pessimistic
+        otherwise until real completions tighten it)."""
+        fixed = self.policy.shed_retry_after
+        if fixed is not None:
+            return fixed
+        svc = self._ewma_service.get(
+            mode, float(getattr(self.spec, "max_new", 1) or 1))
+        waves = 1.0 + self._n_queued[mode] / self._group_width[mode]
+        return waves * svc
 
     def _enqueue(self, req: ScheduledRequest) -> None:
         if req.arrival > self._now:
             heapq.heappush(self._future[req.mode],
                            (req.arrival, req.seq, req))
         else:
-            heapq.heappush(self._ready[req.mode], (req.key, req.seq, req))
+            heapq.heappush(self._ready[req.mode],
+                           (self._key(req), req.seq, req))
         self._n_queued[req.mode] += 1
         self._queued_by_rid[req.rid] = req
+
+    def _key(self, req: ScheduledRequest, now: float | None = None):
+        """Ready-queue key against the current clock (aging-aware)."""
+        return req.key_at(self._now if now is None else now,
+                          self.policy.aging_rate)
 
     @property
     def queued(self) -> int:
@@ -273,14 +389,36 @@ class ContinuousScheduler:
             del self._queued_by_rid[rid]
             self._n_queued[req.mode] -= 1
             self.n_cancelled += 1
-            return self._terminal(req, "cancelled", now=self._now)
+            return self._terminal(req, RequestStatus.CANCELLED,
+                                  now=self._now)
         for slot, req in self._resident.items():
             if req.rid == rid:
                 req, admitted = self._evict(slot)
                 self.n_cancelled += 1
-                return self._terminal(req, "cancelled", now=self._now,
-                                      admitted=admitted)
+                return self._terminal(req, RequestStatus.CANCELLED,
+                                      now=self._now, admitted=admitted)
         return None
+
+    def shed_queued(self) -> list[SlotResult]:
+        """Drain support: refuse EVERY queued (non-resident) request with
+        a terminal SHED record + retry hint, leaving residents to finish.
+        Returns the records (also mirrored into ``drain_shed``'s buffer is
+        NOT done — the caller owns delivery)."""
+        out: list[SlotResult] = []
+        for mode in self._future:
+            for q in (self._future[mode], self._ready[mode]):
+                for _, _, req in q:
+                    if req.cancelled:
+                        continue
+                    req.cancelled = True   # stale heap entries drop lazily
+                    self._queued_by_rid.pop(req.rid, None)
+                    self._n_queued[mode] -= 1
+                    self.n_shed += 1
+                    out.append(self._terminal(
+                        req, RequestStatus.SHED, now=self._now,
+                        retry_after=self.retry_after_estimate(mode)))
+                q.clear()
+        return out
 
     # ------------------------------------------------------------ internals
     def _evict(self, slot: int) -> tuple[ScheduledRequest, float]:
@@ -295,8 +433,9 @@ class ContinuousScheduler:
         self._return_slot(slot)
         return req, admitted
 
-    def _terminal(self, req: ScheduledRequest, status: str, *, now: float,
-                  admitted: float | None = None) -> SlotResult:
+    def _terminal(self, req: ScheduledRequest, status: RequestStatus, *,
+                  now: float, admitted: float | None = None,
+                  retry_after: float | None = None) -> SlotResult:
         # a never-admitted request (cancelled/expired in the queue) stamps
         # admitted/completed no earlier than its arrival, so queue_delay
         # and latency are never negative in aggregate views
@@ -307,7 +446,8 @@ class ContinuousScheduler:
             logprobs=np.zeros((1,), np.float32), n_calls=0, accepted=0,
             arrival=req.arrival,
             admitted=floor if admitted is None else admitted,
-            completed=floor, mode=req.mode, status=status)
+            completed=floor, mode=req.mode, status=status,
+            retry_after=retry_after)
 
     def _promote(self, now: float) -> None:
         """Move arrived requests from the arrival-ordered stage into the
@@ -317,7 +457,24 @@ class ContinuousScheduler:
                 _, _, req = heapq.heappop(fut)
                 if req.cancelled:
                     continue
-                heapq.heappush(self._ready[mode], (req.key, req.seq, req))
+                heapq.heappush(self._ready[mode],
+                               (self._key(req, now), req.seq, req))
+
+    def _reage(self, now: float) -> None:
+        """Aging makes ready-queue keys time-dependent: rebuild every
+        group's heap against the current clock so the head really is the
+        highest-effective-priority request. O(n log n) per pass over the
+        queued set — the queue is bounded by ``shed_depth`` whenever
+        aging matters, and the rebuild is what makes starvation freedom
+        deterministic rather than heuristic."""
+        if self.policy.aging_rate <= 0.0:
+            return
+        for mode, q in self._ready.items():
+            if len(q) > 1:
+                fresh = [(self._key(req, now), req.seq, req)
+                         for _, _, req in q if not req.cancelled]
+                heapq.heapify(fresh)
+                self._ready[mode] = fresh
 
     def _ready_head(self, mode, now: float,
                     events: list | None = None) -> ScheduledRequest | None:
@@ -336,7 +493,8 @@ class ContinuousScheduler:
                 self._n_queued[mode] -= 1
                 self.n_expired += 1
                 if events is not None:
-                    events.append(self._terminal(req, "expired", now=now))
+                    events.append(self._terminal(
+                        req, RequestStatus.EXPIRED, now=now))
                 continue
             return req
         return None
@@ -351,7 +509,7 @@ class ContinuousScheduler:
                 continue
             req = self._ready_head(mode, now, events)
             if req is not None:
-                out.append((req.key, gi, mode))
+                out.append((self._key(req, now), gi, mode))
         out.sort()
         return out
 
@@ -386,21 +544,79 @@ class ContinuousScheduler:
 
     def _admit_ready(self, now: float, events: list) -> None:
         self._promote(now)
-        admitted = True
-        while admitted:
-            admitted = False
-            for _, _, mode in self._heads_ready(now, events):
-                if (self._admit_ok is not None
-                        and not self._admit_ok(self.state, mode)):
-                    continue   # pool pressure: try the other groups' heads
-                req = self._pop_head(mode)
-                slot = self._free[mode].pop(0)
-                self.state = self._admit(self.state, slot, req.payload)
-                self._resident[slot] = req
-                self._admit_time[slot] = now
-                admitted = True   # state changed: recompute candidates
+        self._reage(now)
+        while True:
+            admitted = True
+            while admitted:
+                admitted = False
+                for _, _, mode in self._heads_ready(now, events):
+                    if (self._admit_ok is not None
+                            and not self._admit_ok(self.state, mode)):
+                        continue   # pool pressure: try other groups' heads
+                    req = self._pop_head(mode)
+                    slot = self._free[mode].pop(0)
+                    self.state = self._admit(self.state, slot, req.payload)
+                    self._resident[slot] = req
+                    self._admit_time[slot] = now
+                    admitted = True   # state changed: recompute candidates
+                    break
+            # free slots exhausted: an urgent head may still evict the
+            # most-slack resident; loop back so it admits into the freed
+            # slot through the normal (admit_ok-gated) path above
+            if not self._preempt_for_urgent(now, events):
                 break
         self.max_resident = max(self.max_resident, len(self._resident))
+
+    def _preempt_for_urgent(self, now: float, events: list) -> bool:
+        """Deadline-aware preemption (``OverloadPolicy``): for each group
+        whose free list is empty but whose queue head is URGENT relative
+        to a resident — strictly higher effective priority, or a deadline
+        tighter than the resident's slack by more than the margin — evict
+        the resident with the MOST deadline slack (ties: youngest, least
+        work lost) through the standard eviction sequence and requeue it
+        WITHOUT the preemption boost: its own lax deadline keys it after
+        the urgent work, so it cannot turn around and preempt its
+        preemptor (no thrash). Replay is deterministic — the victim
+        restarts from scratch later with identical tokens. At most one
+        eviction per call; returns True if one happened."""
+        pol = self.policy
+        if not pol.deadline_preemption:
+            return False
+        for mode in self._future:
+            if self._free[mode]:
+                continue
+            head = self._ready_head(mode, now, events)
+            if head is None:
+                continue
+            hp = head.eff_priority(now, pol.aging_rate)
+            h_slack = (math.inf if head.deadline is None
+                       else head.deadline - now)
+            best = None
+            for slot, res in self._resident.items():
+                if self._slot_key[slot] != mode:
+                    continue
+                vp = res.eff_priority(self._admit_time[slot],
+                                      pol.aging_rate)
+                v_slack = (math.inf if res.deadline is None
+                           else res.deadline - now)
+                urgent = hp > vp or (
+                    hp >= vp and h_slack < v_slack - pol.preempt_slack_margin)
+                # the no-churn invariant: once requeued (boost stripped),
+                # the victim must key strictly AFTER the head, or we would
+                # just re-admit it into the slot we freed
+                vkey = dataclasses.replace(res, boost=0).key_at(
+                    now, pol.aging_rate)
+                if urgent and self._key(head, now) < vkey:
+                    cand = (v_slack, self._admit_time[slot], slot)
+                    if best is None or cand > best:
+                        best = cand
+            if best is not None:
+                req, _ = self._evict(best[2])
+                req.boost = 0
+                self._enqueue(req)
+                self.n_preemptions += 1
+                return True
+        return False
 
     def _expire_residents(self, now: float, events: list) -> None:
         """Evict resident requests whose deadline has passed — their slot
@@ -411,8 +627,8 @@ class ContinuousScheduler:
         for slot in expired:
             req, admitted = self._evict(slot)
             self.n_expired += 1
-            events.append(self._terminal(req, "expired", now=now,
-                                         admitted=admitted))
+            events.append(self._terminal(req, RequestStatus.EXPIRED,
+                                         now=now, admitted=admitted))
 
     def _preempt_youngest(self, prefer: Hashable | None = None) -> None:
         """Kick a most recently admitted request back to its queue head;
@@ -463,6 +679,10 @@ class ContinuousScheduler:
             # looks up the request's per-request params to trim the view
             fields = read_slot(self.state, slot)
             req, admitted = self._evict(slot)
+            service = max(0.0, now - admitted)
+            prev = self._ewma_service.get(req.mode)
+            self._ewma_service[req.mode] = (
+                service if prev is None else 0.8 * prev + 0.2 * service)
             results.append(SlotResult(
                 rid=req.rid, arrival=req.arrival, mode=req.mode,
                 admitted=admitted, completed=now, **fields))
@@ -486,7 +706,7 @@ class ContinuousScheduler:
                     heapq.heappush(self._future[mode],
                                    (req.arrival, req.seq, req))
                 else:
-                    heapq.heappush(q, (req.key, req.seq, req))
+                    heapq.heappush(q, (self._key(req, 0.0), req.seq, req))
 
     # ---------------------------------------------------------------- drive
     def steps(self, read_slot: Callable, *, realtime: bool = False):

@@ -358,7 +358,7 @@ def test_cancel_queued_dequeues(toy):
     assert res[int(doomed)].status == "cancelled"
     with pytest.raises(RequestCancelled):
         doomed.result()
-    assert keep.result().status == "ok"
+    assert keep.result().status == "finished"
 
 
 def test_cancel_resident_never_perturbs_coresidents(toy):
@@ -414,7 +414,7 @@ def test_deadline_expires_queued_request(toy):
     assert late.status == "expired"
     with pytest.raises(RequestCancelled):
         late.result()
-    assert blocker.result().status == "ok"
+    assert blocker.result().status == "finished"
     assert eng.scheduler.n_expired == 1
 
 
@@ -426,7 +426,7 @@ def test_deadline_expires_resident_and_frees_slot(toy):
     after = eng.submit(ds.pair(1)[0])
     res = eng.serve()
     assert res[int(doomed)].status == "expired"
-    assert int(after) in res and res[int(after)].status == "ok"
+    assert int(after) in res and res[int(after)].status == "finished"
     # the expired request held the slot for at most its deadline
     assert res[int(after)].admitted >= 3.0
 
@@ -576,5 +576,5 @@ def test_random_cancellation_allocator_invariants(seed):
     assert alloc.used_pages == 0
     for h, q in zip(hs, queries):
         r = res.get(int(h)) or eng._done[int(h)]
-        if r.status == "ok":
+        if r.status == "finished":
             np.testing.assert_array_equal(r.tokens, res_ref[q].tokens)

@@ -201,3 +201,47 @@ def test_megastep_gates_skip_predating_baselines():
     got = compare(base, _payload(greedy_gap=9.0, greedy_dpt=9.0), 0.30,
                   step_gap_threshold=1.0, dispatch_threshold=0.5)
     assert got == []
+
+
+def _overload_payload(slo_high=0.6, shed=0.33):
+    p = _payload()
+    p["modes"]["overload"] = {"rps": 0.09, "p50": 30.0, "p95": 70.0,
+                              "slo_high": slo_high, "slo_low": 0.5,
+                              "shed_rate": shed}
+    return p
+
+
+def test_slo_attainment_drop_fails():
+    """The overload replay is closed-loop deterministic, so a high-class
+    SLO drop is a real scheduling regression, not runner noise."""
+    got = compare(_overload_payload(), _overload_payload(slo_high=0.4),
+                  0.30, slo_threshold=0.20)
+    assert len(got) == 1
+    assert got[0].startswith("overload") and "slo_high" in got[0]
+
+
+def test_slo_small_drift_passes():
+    got = compare(_overload_payload(), _overload_payload(slo_high=0.55),
+                  0.30, slo_threshold=0.20)
+    assert got == []
+
+
+def test_shed_rate_blowup_fails():
+    """Shedding work the baseline policy served is a capacity regression
+    even when the served requests' throughput holds up."""
+    got = compare(_overload_payload(), _overload_payload(shed=0.55), 0.30,
+                  shed_threshold=0.30)
+    assert len(got) == 1
+    assert got[0].startswith("overload") and "shed_rate" in got[0]
+
+
+def test_shed_rate_within_threshold_passes():
+    got = compare(_overload_payload(), _overload_payload(shed=0.40), 0.30,
+                  shed_threshold=0.30)
+    assert got == []
+
+
+def test_overload_gates_skip_predating_baselines():
+    got = compare(_payload(), _overload_payload(slo_high=0.0, shed=1.0),
+                  0.30, slo_threshold=0.20, shed_threshold=0.30)
+    assert got == []

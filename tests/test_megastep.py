@@ -143,7 +143,7 @@ def test_shared_prefix_traffic_zero_recompile_one_dispatch():
     g = kids[0].submit_child(prompt(12))
     r1 = eng.submit(prompt(41))
     eng.serve()
-    assert g.status == "done" and r1.status == "done"
+    assert g.status == "finished" and r1.status == "finished"
     assert dict(eng.n_traces) == warm, \
         f"shared-prefix traffic retraced: {warm} -> {eng.n_traces}"
     stats = eng.loop_stats()
@@ -204,3 +204,53 @@ def test_paged_kernel_read_path_is_invisible(toy, mode, kw):
         use_paged_kernel(False)
     assert got == want
     paged.allocator.check()
+
+
+# ---------------------------------------------------------------------------
+# 5. overload policy rides the megastep for free
+
+
+def test_overload_policy_keeps_one_dispatch_steady_state(toy):
+    """Aging + shedding + deadline preemption are pure host-side queue
+    math: with the full OverloadPolicy armed, a lone resident still costs
+    exactly one jitted dispatch per steady-state iteration — the policy
+    must never sneak extra device work into the hot loop."""
+    from repro.serving import OverloadPolicy
+    ds, _, _ = toy
+    pol = OverloadPolicy(aging_rate=0.05, shed_depth=8,
+                         deadline_preemption=True, preempt_slack_margin=2.0)
+    eng = _stream(toy, mode="greedy", n_slots=2, paged=True, page_size=8,
+                  overload=pol)
+    eng.submit(ds.pair(0)[0], priority=1, deadline=200.0)
+    eng.serve()
+    stats = eng.loop_stats()
+    assert stats["n_iterations"] >= 2
+    assert (stats["steady_iterations_one_dispatch"]
+            >= stats["n_iterations"] - 1), stats
+    assert stats["dispatches_per_iteration"] <= 2.0, stats
+
+
+def test_overload_policy_dispatch_bound_under_pressure(toy):
+    """A prioritized, deadline-carrying burst that triggers shedding and
+    deadline preemption keeps the loop inside the megastep dispatch
+    budget — admissions/evictions pay bookkeeping dispatches, but no
+    iteration falls back to per-slot dispatching."""
+    from repro.serving import OverloadPolicy
+    ds, _, _ = toy
+    pol = OverloadPolicy(aging_rate=0.05, shed_depth=4,
+                         deadline_preemption=True)
+    eng = _stream(toy, mode="greedy", n_slots=2, paged=True, page_size=8,
+                  overload=pol)
+    rids = []
+    for i in range(8):
+        h = eng.submit(ds.pair(i % 8)[0], arrival=float(i),
+                       priority=i % 2,
+                       deadline=float(i) + 60.0 if i % 2 else None)
+        rids.append(int(h))
+    res = eng.serve()
+    assert sorted(res) == sorted(rids)
+    stats = eng.loop_stats()
+    assert stats["dispatches_per_iteration"] <= 3.0, stats
+    assert stats["steady_iterations_one_dispatch"] >= \
+        stats["n_iterations"] // 2, stats
+    eng.allocator.check()

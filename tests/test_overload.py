@@ -1,0 +1,286 @@
+"""Scheduler overload policy (repro.serving.scheduler.OverloadPolicy):
+priority aging, deadline-aware preemption, load shedding, graceful drain.
+
+The contract that makes the overload policy safe to ship:
+
+  1. priority aging is a deterministic starvation bound: under sustained
+     high-priority pressure a best-effort request with aging on finishes
+     inside its deadline; the identical workload with aging off starves
+     it to expiry (the regression pair);
+  2. deadline-aware preemption evicts the most-slack resident for an
+     urgent arrival even when the page pool is NOT under pressure, the
+     urgent request meets its deadline, and the victim replays
+     token-identically (requeue path = deterministic replay) — with no
+     preempt-back thrash;
+  3. load shedding is synchronous and typed: past ``shed_depth`` a
+     submission lands terminal ``SHED`` immediately, ``result()`` raises
+     ``RequestRejected`` carrying a positive ``retry_after``, and served
+     requests are byte-identical to an unshed engine's;
+  4. graceful drain shuts the front door without corrupting residents:
+     queued requests shed with retry metadata, residents finish
+     token-identically, later submissions shed immediately, and the page
+     allocator drains back to a full free pool.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.mt import tiny_config
+from repro.data import SyntheticReactionDataset
+from repro.models import seq2seq as s2s
+from repro.serving import (EngineConfig, OverloadPolicy, RequestRejected,
+                           RequestStatus, StreamingEngine)
+
+MAX_NEW = 8
+
+
+@pytest.fixture(scope="module")
+def toy():
+    ds = SyntheticReactionDataset(16, seed=0)
+    cfg = tiny_config(ds.tokenizer.vocab_size, depth=2, d_model=64,
+                      max_len=192)
+    params = s2s.init(jax.random.PRNGKey(0), cfg)
+    return ds, cfg, params
+
+
+def _engine(toy, policy=None, *, max_new=MAX_NEW, **kw):
+    ds, cfg, params = toy
+    base = dict(mode="greedy", max_new=max_new, max_src=96, n_slots=1,
+                overload=policy)
+    base.update(kw)
+    return StreamingEngine(params, cfg, ds.tokenizer, EngineConfig(**base))
+
+
+# ---------------------------------------------------------------------------
+# 1. priority aging: the starvation regression pair
+
+
+def _starvation_workload(toy, policy):
+    """One slot, a best-effort request up front, then high-priority
+    arrivals spaced so a fresh high is always queued while the low
+    waits — the classic starvation pattern. The low carries a deadline:
+    whether it FINISHES or EXPIRES is the aging policy's verdict."""
+    ds, _, _ = toy
+    eng = _engine(toy, policy)
+    # service time is ~MAX_NEW steps/request on one slot; arrivals every
+    # 6 steps outpace it, so the high backlog GROWS and some high is
+    # always queued at every admission instant — sustained pressure, not
+    # convenient gaps the low could slip through without aging
+    low = eng.submit(ds.pair(0)[0], priority=0, deadline=90.0)
+    highs = [eng.submit(ds.pair(1 + i % 8)[0], priority=1,
+                        arrival=float(i) * 6.0)
+             for i in range(14)]
+    eng.serve()
+    return eng, low, highs
+
+
+def test_aging_on_bounds_starvation(toy):
+    """aging_rate=0.05: the low's effective priority passes the high
+    class after 20 queued steps, so it overtakes a FRESH high arrival and
+    finishes inside its deadline despite never-ending pressure."""
+    eng, low, highs = _starvation_workload(
+        toy, OverloadPolicy(aging_rate=0.05))
+    r = low.result()
+    assert r.status == RequestStatus.FINISHED
+    assert r.completed <= 90.0
+    # it really did overtake pressure: highs were still arriving
+    assert r.completed < max(h.result().arrival for h in highs)
+
+
+def test_aging_off_starves_to_expiry(toy):
+    """The identical workload with aging off: every fresh high beats the
+    waiting low forever, and its deadline kills it in the queue."""
+    eng, low, highs = _starvation_workload(toy, None)
+    with pytest.raises(RequestRejected) as ei:
+        low.result()
+    assert ei.value.reason == "expired"
+    assert low.status == RequestStatus.EXPIRED
+    for h in highs:   # pressure itself was fine
+        assert h.result().status == RequestStatus.FINISHED
+
+
+# ---------------------------------------------------------------------------
+# 2. deadline-aware preemption
+
+
+def test_urgent_arrival_preempts_most_slack_resident(toy):
+    """A deadline-carrying high arrival evicts the resident best-effort
+    request — no pool pressure involved — runs immediately, and meets its
+    deadline. The victim requeues, replays deterministically, and its
+    tokens match a solo control run exactly. Exactly one preemption: the
+    boost-stripped requeue cannot thrash back."""
+    ds, _, _ = toy
+    pol = OverloadPolicy(deadline_preemption=True, preempt_slack_margin=2.0)
+    eng = _engine(toy, pol)
+    low = eng.submit(ds.pair(0)[0], priority=0)
+    while low.status != RequestStatus.RUNNING:
+        eng._pump_once()
+    t0 = eng.scheduler._now
+    high = eng.submit(ds.pair(1)[0], priority=1, deadline=t0 + MAX_NEW + 4.0)
+    eng._pump_once()
+    assert eng.scheduler.n_preemptions == 1
+    assert high.status == RequestStatus.RUNNING
+    assert low.status == RequestStatus.QUEUED
+    r_high, r_low = high.result(), low.result()
+    assert r_high.status == RequestStatus.FINISHED
+    assert r_high.completed <= t0 + MAX_NEW + 4.0
+    assert r_low.status == RequestStatus.FINISHED
+    assert eng.scheduler.n_preemptions == 1, "preempt-back thrash"
+
+    control = _engine(toy, None)
+    c = control.submit(ds.pair(0)[0]).result()
+    np.testing.assert_array_equal(r_low.tokens, c.tokens)
+    np.testing.assert_array_equal(r_low.lengths, c.lengths)
+
+
+def test_no_preemption_without_urgency(toy):
+    """A same-priority, no-deadline arrival must NOT evict anyone — the
+    policy only moves for urgency, not for newness."""
+    ds, _, _ = toy
+    pol = OverloadPolicy(deadline_preemption=True)
+    eng = _engine(toy, pol)
+    first = eng.submit(ds.pair(0)[0], priority=0)
+    while first.status != RequestStatus.RUNNING:
+        eng._pump_once()
+    second = eng.submit(ds.pair(1)[0], priority=0)
+    eng._pump_once()
+    assert eng.scheduler.n_preemptions == 0
+    assert second.status == RequestStatus.QUEUED
+    assert first.result().status == RequestStatus.FINISHED
+
+
+# ---------------------------------------------------------------------------
+# 3. load shedding
+
+
+def test_shed_past_depth_is_synchronous_and_typed(toy):
+    ds, _, _ = toy
+    pol = OverloadPolicy(shed_depth=2)
+    eng = _engine(toy, pol)
+    hs = [eng.submit(ds.pair(i)[0]) for i in range(5)]
+    kept, shed = hs[:2], hs[2:]   # nothing pumped yet: 2 queue, rest shed
+    for h in shed:
+        assert h.status == RequestStatus.SHED   # before any pumping
+        with pytest.raises(RequestRejected) as ei:
+            h.result()
+        assert ei.value.reason == "shed"
+        assert ei.value.retry_after is not None and ei.value.retry_after > 0
+    assert eng.scheduler.n_shed == len(shed)
+
+    res = {h: h.result() for h in kept}
+    control = _engine(toy, None)
+    for h, r in res.items():
+        assert r.status == RequestStatus.FINISHED
+        c = control.submit(ds.pair(int(h))[0]).result()
+        np.testing.assert_array_equal(r.tokens, c.tokens)
+
+
+def test_retry_after_tracks_queue_depth(toy):
+    """The shed hint scales with the backlog per slot — a deeper queue
+    promises a longer backoff."""
+    ds, _, _ = toy
+    pol = OverloadPolicy(shed_depth=1)
+    eng = _engine(toy, pol)
+    eng.submit(ds.pair(0)[0])
+    eng.submit(ds.pair(1)[0])
+    shallow = eng.scheduler.retry_after_estimate("greedy")
+    deep_pol = OverloadPolicy(shed_depth=6)
+    eng2 = _engine(toy, deep_pol)
+    for i in range(7):
+        eng2.submit(ds.pair(i % 8)[0])
+    deep = eng2.scheduler.retry_after_estimate("greedy")
+    assert deep > shallow > 0.0
+
+
+def test_fixed_retry_after_override(toy):
+    ds, _, _ = toy
+    pol = OverloadPolicy(shed_depth=0, shed_retry_after=42.0)
+    eng = _engine(toy, pol)
+    h = eng.submit(ds.pair(0)[0])
+    with pytest.raises(RequestRejected) as ei:
+        h.result()
+    assert ei.value.retry_after == 42.0
+
+
+# ---------------------------------------------------------------------------
+# 4. graceful drain
+
+
+def test_graceful_drain_finishes_residents_token_identically(toy):
+    """begin_drain(): queued requests shed with retry metadata, residents
+    decode to completion with tokens identical to an undisturbed control
+    engine, later submissions shed immediately, and the paged pool drains
+    back to every page free."""
+    ds, _, _ = toy
+    queries = [ds.pair(i)[0] for i in range(6)]
+    eng = _engine(toy, None, n_slots=2, paged=True, page_size=8)
+    hs = [eng.submit(q) for q in queries]
+    while not any(h.status == RequestStatus.RUNNING for h in hs):
+        eng._pump_once()
+    residents = [h for h in hs if h.status == RequestStatus.RUNNING]
+    queued = [h for h in hs if h.status == RequestStatus.QUEUED]
+    assert residents and queued
+
+    n_shed = eng.begin_drain()
+    assert n_shed == len(queued)
+    for h in queued:
+        assert h.status == RequestStatus.SHED
+        with pytest.raises(RequestRejected) as ei:
+            h.result()
+        assert ei.value.retry_after is not None
+
+    late = eng.submit(ds.pair(7)[0])    # door is closed
+    assert late.status == RequestStatus.SHED
+
+    res = {h: h.result() for h in residents}
+    control = _engine(toy, None, n_slots=2, paged=True, page_size=8)
+    ch = [control.submit(q) for q in queries]
+    cres = control.serve()
+    for h, r in res.items():
+        assert r.status == RequestStatus.FINISHED
+        c = cres[int(ch[hs.index(h)])]
+        np.testing.assert_array_equal(r.tokens, c.tokens)
+        np.testing.assert_array_equal(r.lengths, c.lengths)
+
+    eng.allocator.check()
+    assert eng.allocator.free_pages == eng.allocator.n_pages - 1, \
+        "drained engine must hand every page back to the pool"
+
+
+def test_drain_is_idempotent_and_reset_reopens(toy):
+    ds, _, _ = toy
+    eng = _engine(toy, None)
+    eng.submit(ds.pair(0)[0])
+    eng.drain()
+    assert eng.draining
+    assert eng.begin_drain() == 0           # nothing left to shed
+    eng.reset()
+    assert not eng.draining
+    h = eng.submit(ds.pair(1)[0])           # door reopened
+    assert h.result().status == RequestStatus.FINISHED
+
+
+# ---------------------------------------------------------------------------
+# 5. unified request API: the engine-level shims are one-release deprecations
+
+
+def test_engine_level_stream_and_cancel_warn(toy):
+    import warnings
+
+    ds, _, _ = toy
+    eng = _engine(toy, None)
+    h = eng.submit(ds.pair(0)[0])
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        deltas = list(eng.stream(int(h)))
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    np.testing.assert_array_equal(
+        np.concatenate(deltas), h.result().tokens[0][:h.result().lengths[0]])
+
+    h2 = eng.submit(ds.pair(1)[0])
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert eng.cancel(int(h2))
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert h2.status == RequestStatus.CANCELLED

@@ -218,7 +218,7 @@ def test_radix_reclaim_under_pool_pressure(decoder_model):
         p = rng.integers(4, 500, size=41).astype(np.int32)
         handles.append(eng.submit(p))
     for h in handles:
-        assert h.result().status == "ok"
+        assert h.result().status == "finished"
     assert eng.radix.evicted > 0, "pool was sized to force radix reclaim"
     eng.allocator.check()
     eng.radix.check()
