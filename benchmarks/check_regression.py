@@ -104,6 +104,32 @@ def _gate_increase(
             )
 
 
+def _gate_ceiling(
+    new: dict,
+    metric: str,
+    ceiling: float,
+    unit: str,
+    failures: list[str],
+) -> None:
+    """Absolute ceiling gate on the NEW run only, for metrics that are
+    already normalized ratios with a fixed ideal (e.g. the sharded mode's
+    max/mean balance ratios, ideal 1.0): no baseline needed, and a run
+    whose baseline predates the metric is still gated. Modes that do not
+    carry the metric are skipped."""
+    fresh = _flat_metric(new, metric)
+    for key, now in sorted(fresh.items()):
+        verdict = "FAIL" if now > ceiling else "ok"
+        print(
+            f"  {key:24s} {metric} {now:8.3f} {unit:9s} "
+            f"ceiling {ceiling:6.3f}   {verdict}"
+        )
+        if now > ceiling:
+            failures.append(
+                f"{key}: {metric} {now:.3f}{unit} exceeds the absolute "
+                f"ceiling {ceiling:.3f}"
+            )
+
+
 def compare(
     baseline: dict,
     new: dict,
@@ -115,6 +141,7 @@ def compare(
     hit_rate_threshold: float | None = None,
     slo_threshold: float | None = None,
     shed_threshold: float | None = None,
+    imbalance_threshold: float | None = None,
 ) -> list[str]:
     """Return a list of human-readable gate failures (empty = pass).
 
@@ -149,6 +176,14 @@ def compare(
     not INCREASE more than ``shed_threshold`` — shedding work the
     baseline policy would have served is a capacity regression even when
     the served requests' throughput looks fine.
+
+    ``imbalance_threshold``: ABSOLUTE ceiling (not a ratio vs baseline) on
+    the sharded mode's ``admit_imbalance`` and ``page_balance`` — both are
+    max/mean ratios over the mesh's data shards with ideal 1.0, so the
+    ceiling is machine-independent. A breach means slot placement stopped
+    spreading admissions (least-loaded + prefix affinity broke) or one
+    shard's page-pool segment is carrying the pool: a capacity regression
+    even while aggregate req/s looks fine.
 
     Config drift compares only the keys the BASELINE carries: a new
     benign bench field (added alongside a new mode/metric) must not force
@@ -241,6 +276,13 @@ def compare(
         _gate_increase(
             baseline, new, "shed_rate", shed_threshold, " shed", failures
         )
+    if imbalance_threshold is not None:
+        _gate_ceiling(
+            new, "admit_imbalance", imbalance_threshold, " max/mean", failures
+        )
+        _gate_ceiling(
+            new, "page_balance", imbalance_threshold, " max/mean", failures
+        )
     return failures
 
 
@@ -302,6 +344,14 @@ def main() -> int:
         "lacks the metric are skipped)",
     )
     ap.add_argument(
+        "--imbalance-threshold",
+        type=float,
+        default=1.5,
+        help="ABSOLUTE ceiling on the sharded mode's admit_imbalance and "
+        "page_balance max/mean ratios (ideal 1.0; default 1.5; negative "
+        "disables; modes without the metrics are skipped)",
+    )
+    ap.add_argument(
         "--require",
         nargs="*",
         default=[],
@@ -338,6 +388,9 @@ def main() -> int:
         ),
         shed_threshold=(
             None if args.shed_threshold < 0 else args.shed_threshold
+        ),
+        imbalance_threshold=(
+            None if args.imbalance_threshold < 0 else args.imbalance_threshold
         ),
     )
     if failures:

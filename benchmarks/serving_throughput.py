@@ -54,6 +54,16 @@ load shedding) on the closed-loop step clock, so ``slo_high`` /
 deterministic and CI gates them (``--slo-threshold`` /
 ``--shed-threshold`` in ``check_regression.py``).
 
+``--modes sharded`` (in the default set) serves the speculative paged
+workload on a ``StreamingEngine`` partitioned over a (data=2, model=2)
+device mesh (forced host devices on CPU): slot groups and the page pool
+shard over the data axis, parameters over the model axis, one donated
+jitted dispatch per steady-state iteration. Reports aggregate req/s plus
+per-shard admissions, peak page occupancy, and the admit/page balance
+ratios the bench gate enforces (``--imbalance-threshold`` in
+``check_regression.py`` — a drift above the ceiling means placement
+stopped spreading load).
+
 Results are printed AND written as machine-readable ``BENCH_serving.json``
 (req/s, p50/p95 latency + queue delay, peak/capacity cache bytes, slots
 resident) so the perf trajectory is tracked across PRs;
@@ -72,6 +82,16 @@ import json
 import os
 import sys
 
+# the sharded mode partitions a real (data=2, model=2) host mesh: force 8
+# CPU devices BEFORE the repro imports below pull in jax. Idempotent when
+# the runner already exports its own XLA_FLAGS (same pattern as
+# tests/conftest.py).
+_FORCE_DEVICES = "--xla_force_host_platform_device_count=8"
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FORCE_DEVICES).strip()
+
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -82,7 +102,7 @@ from repro.serving.engine import _mode_shape
 
 MODES = ("greedy", "speculative", "beam", "speculative_beam", "mixed",
          "decoder_greedy", "decoder_speculative", "priority_mix",
-         "planning", "overload")
+         "planning", "overload", "sharded")
 # the mixed workload's slot groups: cheap greedy probes + speculative
 # forward predictions + beam retrosynthesis expansions in ONE session
 # (requests round-robin over the groups)
@@ -251,6 +271,52 @@ def run_mixed(params, cfg, tok, queries, arrivals, args, *, groups=None,
         "per_mode": per_mode,
         "cache": eng.cache_footprint(),
         **_loop_row(eng, results),
+    }
+
+
+def run_sharded(params, cfg, tok, queries, arrivals, args):
+    """Mesh-sharded serving: the speculative paged workload on an engine
+    partitioned over a (data=2, model=2) mesh — each data shard owns a
+    disjoint slot group segment and page-pool segment, parameters shard
+    over the model axis, and the steady state stays at ONE donated jitted
+    dispatch per scheduler iteration (the same megastep contract as the
+    single-device modes, now spanning the mesh). On CPU the mesh runs on
+    forced host devices, so req/s is NOT a speedup claim — the number the
+    gate tracks is the dispatch accounting plus the placement balance:
+    admissions per shard and peak page occupancy per shard must stay
+    spread (least-loaded placement), and the paged pool splits into equal
+    per-shard segments."""
+    from repro.launch.mesh import data_shards, make_serving_mesh
+
+    mesh = make_serving_mesh((2, 2))
+    n_sh = data_shards(mesh)
+    slots = n_sh * (-(-args.slots // n_sh))   # round up to divide shards
+    ecfg = EngineConfig(mode="speculative", draft_len=args.draft_len,
+                        n_drafts=args.n_drafts, max_new=args.max_new,
+                        max_src=96, n_slots=slots, paged=True,
+                        page_size=args.page_size, mesh=mesh)
+    eng = StreamingEngine(params, cfg, tok, ecfg)
+    _warmup(eng, queries[0])
+    traces0 = dict(eng.n_traces)
+
+    for q, t in zip(queries, arrivals):
+        eng.submit(q, arrival=float(t))
+    results = list(eng.serve(realtime=True).values())
+    assert dict(eng.n_traces) == traces0, \
+        f"sharded traffic retraced after warmup: {traces0} -> {eng.n_traces}"
+    eng.allocator.check()
+
+    st = eng.shard_stats()
+    peaks = st["peak_pages_by_shard"]
+    caps = st["shard_capacity"]
+    mean_peak = sum(peaks) / max(1, len(peaks))
+    st["page_balance"] = (max(peaks) / mean_peak) if mean_peak else 1.0
+    st["shard_occupancy"] = [p / c for p, c in zip(peaks, caps)]
+    return {
+        "mode": "sharded",
+        "mesh": {a: int(mesh.shape[a]) for a in mesh.axis_names},
+        **_engine_row(eng, results),
+        **st,
     }
 
 
@@ -516,6 +582,19 @@ def main() -> None:
                   f"shed {r['shed_rate']:4.2f} "
                   f"starve<= {r['starvation_bound']:5.1f} "
                   f"preempt {r['preemptions']:2d}")
+            continue
+        if mode == "sharded":
+            r = run_sharded(params, cfg, tok, queries, arrivals, args)
+            rows[mode] = r
+            print(f"{r['mode']:18s} {r['rps']:7.2f} {r['p50']:8.2f}s "
+                  f"{r['p95']:8.2f}s {r['steps']:6d} {r['acceptance']:7.2f} "
+                  f"{r['dispatches_per_token']:9.2f} "
+                  f"{r['step_gap_p95_s'] * 1e3:7.1f}ms")
+            occ = " ".join(f"{o:.2f}" for o in r["shard_occupancy"])
+            print(f"  mesh {r['mesh']} admits {r['admitted_by_shard']} "
+                  f"(imbalance {r['admit_imbalance']:.2f})  "
+                  f"peak pages {r['peak_pages_by_shard']} "
+                  f"(balance {r['page_balance']:.2f})  occupancy {occ}")
             continue
         if mode.startswith("decoder_"):
             r = run_decoder_mode(mode, args)

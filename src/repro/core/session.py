@@ -276,11 +276,15 @@ class PoolExhausted(RuntimeError):
     by deferring admission or preempting the youngest resident request —
     exhaustion is a scheduling event, never a crash. ``group`` names the
     slot group whose row could not be mapped (None outside grouped
-    sessions) so the scheduler can prefer an in-group preemption victim."""
+    sessions) so the scheduler can prefer an in-group preemption victim;
+    ``shard`` names the data shard whose page-pool segment ran out (None
+    outside sharded sessions) so preemption stays shard-local — evicting a
+    resident of another shard would free the wrong pool segment."""
 
-    def __init__(self, msg: str, group=None):
+    def __init__(self, msg: str, group=None, shard=None):
         super().__init__(msg)
         self.group = group
+        self.shard = shard
 
 
 class PageAllocator:
@@ -626,6 +630,66 @@ class PageAllocator:
             "page leaked"
 
 
+class ShardedPageAllocator(PageAllocator):
+    """Per-shard view over ONE page pool partitioned across a device mesh's
+    data axis: shard ``s`` owns the contiguous page segment
+    ``[s * pages_per_shard, (s + 1) * pages_per_shard)``; the reserved
+    trash page 0 sits inside shard 0's segment and is never allocated.
+
+    Host accounting stays global — since the fused megastep this class
+    (like its parent) does admission sizing and pinning only, never the
+    allocation itself (``device_page_plan`` allocates, segment-locally
+    when given the shard map). What the subclass adds is the shard
+    geometry the engine's placement / admission / preemption logic keys
+    on: which shard owns a page, each shard's usable capacity, per-shard
+    peak tracking, and the validation that EVERY shard's segment covers
+    one slot's worst case — the bound that makes per-shard deferral plus
+    shard-local preemption a complete (deadlock-free) policy, exactly as
+    the global bound does for the single-device pool."""
+
+    def __init__(self, spec, *, n_pages: int, page_size: int, n_shards: int,
+                 row_lens: dict | None = None,
+                 prefill_blocks: dict | None = None):
+        super().__init__(spec, n_pages=n_pages, page_size=page_size,
+                         row_lens=row_lens, prefill_blocks=prefill_blocks)
+        self.n_shards = int(n_shards)
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards={n_shards} must be >= 1")
+        if self.n_pages % self.n_shards:
+            raise ValueError(
+                f"n_pages={n_pages} must divide evenly across "
+                f"{self.n_shards} data shards (contiguous equal page "
+                f"segments are what lets the device plan allocate "
+                f"shard-locally with one reshape)")
+        self.pages_per_shard = self.n_pages // self.n_shards
+        need_one_slot = max(self._slot_worst.values())
+        if self.shard_capacity(0) < need_one_slot:
+            raise ValueError(
+                f"n_pages={n_pages} over {self.n_shards} shards leaves "
+                f"{self.shard_capacity(0)} usable pages in shard 0, below "
+                f"one slot's worst case ({need_one_slot}); shard-local "
+                f"preemption could not make progress")
+        self.peak_pages_by_shard = [0] * self.n_shards
+
+    def shard_of_page(self, page: int) -> int:
+        """Owning shard of a page id (the radix-affinity feed: a committed
+        prefix chain's pages all come from its slot's shard segment)."""
+        return int(page) // self.pages_per_shard
+
+    def shard_capacity(self, shard: int) -> int:
+        """Usable (allocatable) pages in a shard's segment — shard 0
+        donates one page to the trash."""
+        return self.pages_per_shard - (1 if shard == 0 else 0)
+
+    def note_peak(self, free_by_shard) -> None:
+        """Fold one bundle's per-shard free counts into the per-shard
+        page high-water marks (the bench's pool-balance feed)."""
+        for s, free in enumerate(free_by_shard):
+            used = self.shard_capacity(s) - int(free)
+            if used > self.peak_pages_by_shard[s]:
+                self.peak_pages_by_shard[s] = used
+
+
 # ---------------------------------------------------------------------------
 # cross-request prefix page sharing: radix tree over committed pages
 
@@ -717,6 +781,21 @@ class RadixPageCache:
         self.hit_tokens += len(chain) * self.page_size
         return chain
 
+    def peek(self, tokens) -> list[RadixNode]:
+        """``match`` without side effects: the longest matched chain,
+        touching neither the LRU clock nor the hit-rate stats. The
+        engine's shard-placement probe — placement may still route the
+        request elsewhere (or shed it), so a peek must not count as a
+        lookup or refresh recency."""
+        chain, node = [], self.root
+        for key in self._keys(tokens):
+            nxt = node.children.get(key)
+            if nxt is None:
+                break
+            chain.append(nxt)
+            node = nxt
+        return chain
+
     def insert(self, tokens, pages, depth0: int = 0) -> list[RadixNode]:
         """Extend the tree with ``tokens`` (full pages only) mapped to
         ``pages`` (one page id per key chunk, the committed prompt pages of
@@ -768,15 +847,19 @@ class RadixPageCache:
         self.evicted += 1
         return node.cell
 
-    def evict_lru(self, n: int) -> list[tuple[int, int]]:
+    def evict_lru(self, n: int, where=None) -> list[tuple[int, int]]:
         """Evict up to ``n`` least-recently-used inactive LEAF nodes
         (leaf-first keeps the tree prefix-closed). Returns the
         ``(cell, page)`` pairs whose index cells the engine must clear —
-        the pages become unreferenced once no resident row aliases them."""
+        the pages become unreferenced once no resident row aliases them.
+        ``where`` narrows the victim pool (sharded engines reclaim from
+        the exhausted page-pool shard first — evicting another shard's
+        nodes frees pages the short shard cannot use)."""
         out: list[tuple[int, int]] = []
         while len(out) < n:
             victims = [nd for nd in self._nodes_by_cell.values()
-                       if not nd.children and nd.active == 0]
+                       if not nd.children and nd.active == 0
+                       and (where is None or where(nd))]
             if not victims:
                 break
             victims.sort(key=lambda nd: nd.last_used)
@@ -907,7 +990,8 @@ class DevicePagePlan(NamedTuple):
     arrays share one flat length L (decode windows of every group, then
     prefill chunk lanes)."""
 
-    exhausted: jnp.ndarray       # () bool — need_total > n_free
+    exhausted: jnp.ndarray       # () bool — some segment overflows (global:
+                                 # any shard short => whole step replays)
     n_free: jnp.ndarray          # () int32 free pages before allocation
     need_by_group: jnp.ndarray   # (G,) int32 pages each group's lanes need
     rows: jnp.ndarray            # (L,) int32 lane cache row
@@ -916,6 +1000,11 @@ class DevicePagePlan(NamedTuple):
     copy: jnp.ndarray            # (L,) bool draft-boundary copy-on-write
     cur: jnp.ndarray             # (L,) int32 current page (-1 = unmapped)
     new: jnp.ndarray             # (L,) int32 allocated page (if ``need``)
+    # sharded sessions only (None on a single-segment pool): per-data-shard
+    # accounting over the contiguous page segments
+    need_by_shard: jnp.ndarray | None = None     # (n_shards,) int32
+    n_free_by_shard: jnp.ndarray | None = None   # (n_shards,) int32
+    exhausted_by_shard: jnp.ndarray | None = None  # (n_shards,) bool
 
 
 def _page_refs(bt: jnp.ndarray, n_pages: int) -> jnp.ndarray:
@@ -937,8 +1026,21 @@ def device_free_pages(cache, n_pages: int) -> jnp.ndarray:
                     & (jnp.arange(n_pages) != TRASH_PAGE)).astype(jnp.int32))
 
 
+def device_free_pages_by_shard(cache, n_pages: int,
+                               n_shards: int) -> jnp.ndarray:
+    """(n_shards,) int32 — free pages per contiguous shard segment (shard
+    ``s`` owns pages ``[s * pps, (s + 1) * pps)``, trash page inside shard
+    0). The per-shard mirrored-counter feed for sharded admission."""
+    leaves, _, idx = paged_cache_entries(cache)
+    bt = leaves[idx[0]].block_tables[0]
+    refs = _page_refs(bt, n_pages)
+    free = (refs == 0) & (jnp.arange(n_pages) != TRASH_PAGE)
+    return jnp.sum(free.reshape(n_shards, -1).astype(jnp.int32), axis=1)
+
+
 def device_page_plan(specs, blocks, page_size: int, n_pages: int,
-                     gstate: GroupedState, prefill=None) -> DevicePagePlan:
+                     gstate: GroupedState, prefill=None,
+                     shards=None) -> DevicePagePlan:
     """Plan this iteration's page maintenance on device.
 
     ``specs``/``blocks`` are static (the allocator's per-group logical
@@ -954,18 +1056,60 @@ def device_page_plan(specs, blocks, page_size: int, n_pages: int,
     ascending order, so the LAST visitor sees refs == 1 and keeps the
     page). Fresh pages come off an ascending free stack — page identity
     never affects tokens (attention masks on stored positions), only the
-    count matters for accounting."""
+    count matters for accounting.
+
+    ``shards`` is None (one global free stack, the single-device path —
+    bit-identical to before sharding existed) or ``(n_shards, row_shard,
+    gather)`` with ``row_shard`` a host (n_rows_tab,) array mapping each
+    cache row to its owning data shard and ``gather`` a callable that
+    replicates a lane vector across the mesh before the lane concatenate
+    (group leaves shard their slot axis, and concatenating along a
+    sharded axis must happen on gathered copies — see
+    ``StreamingEngine._repl``). Sharded allocation is SEGMENT-LOCAL: shard
+    ``s`` owns the contiguous pages ``[s * pps, (s + 1) * pps)`` and a
+    lane draws from its row's shard stack only, so one shard's burst can
+    never consume another shard's pool. Exhaustion is still all-or-nothing
+    and GLOBAL (any short segment replays the whole step) — the host
+    preempts a victim inside the overflowing shard and replays, keeping
+    the deterministic preempt-and-replay contract per shard."""
     ps, P = int(page_size), int(n_pages)
+    gather = None
+
+    def _cat(parts):
+        """Lane concat; on a mesh, on gathered copies (see docstring)."""
+        return jnp.concatenate(
+            [gather(p) for p in parts] if gather is not None else parts)
+
     leaves, _, idx = paged_cache_entries(gstate.cache)
     bt = leaves[idx[0]].block_tables[0]
     n_rows_tab, n_blocks = bt.shape
     refs = _page_refs(bt, P)
     free = (refs == 0) & (jnp.arange(P) != TRASH_PAGE)
     n_free = jnp.sum(free.astype(jnp.int32))
-    rank = jnp.cumsum(free.astype(jnp.int32)) - 1
-    stack = jnp.full((P,), P, jnp.int32).at[
-        jnp.where(free, rank, P)].set(jnp.arange(P, dtype=jnp.int32),
-                                      mode="drop")
+    if shards is None:
+        rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+        stack = jnp.full((P,), P, jnp.int32).at[
+            jnp.where(free, rank, P)].set(jnp.arange(P, dtype=jnp.int32),
+                                          mode="drop")
+    else:
+        n_shards, row_shard, *rest = shards
+        gather = rest[0] if rest else None
+        n_shards = int(n_shards)
+        if P % n_shards:
+            raise ValueError(f"n_pages={P} must divide across "
+                             f"{n_shards} shards")
+        pps = P // n_shards
+        row_shard = jnp.asarray(np.asarray(row_shard), jnp.int32)
+        free_sh = free.reshape(n_shards, pps)
+        n_free_sh = jnp.sum(free_sh.astype(jnp.int32), axis=1)
+        rank_sh = jnp.cumsum(free_sh.astype(jnp.int32), axis=1) - 1
+        srow = jnp.broadcast_to(
+            jnp.arange(n_shards, dtype=jnp.int32)[:, None], (n_shards, pps))
+        # per-shard ascending free stacks over the shard's own segment
+        stack_sh = jnp.full((n_shards, pps), P, jnp.int32).at[
+            srow, jnp.where(free_sh, rank_sh, pps)].set(
+            jnp.arange(P, dtype=jnp.int32).reshape(n_shards, pps),
+            mode="drop")
 
     offs = group_row_offsets(specs)
     lane_r, lane_j, lane_valid, lane_pos, lane_w0, lane_gi = \
@@ -988,12 +1132,12 @@ def device_page_plan(specs, blocks, page_size: int, n_pages: int,
         lane_pos.append(jnp.broadcast_to(pos_r[:, None], (nR, W)).reshape(-1))
         lane_w0.append(jnp.broadcast_to(w[None, :] == 0, (nR, W)).reshape(-1))
         lane_gi.append(jnp.full((nR * W,), gi, jnp.int32))
-    r = jnp.concatenate(lane_r)
-    jb = jnp.concatenate(lane_j)
-    valid = jnp.concatenate(lane_valid)
-    posl = jnp.concatenate(lane_pos)
-    w0 = jnp.concatenate(lane_w0)
-    gsel = jnp.concatenate(lane_gi)
+    r = _cat(lane_r)
+    jb = _cat(lane_j)
+    valid = _cat(lane_valid)
+    posl = _cat(lane_pos)
+    w0 = _cat(lane_w0)
+    gsel = _cat(lane_gi)
 
     cur = jnp.where(valid, bt[r, jnp.clip(jb, 0, n_blocks - 1)], -1)
     vc = valid & (cur >= 0)
@@ -1027,18 +1171,37 @@ def device_page_plan(specs, blocks, page_size: int, n_pages: int,
             pc.append(jnp.zeros((L,), bool))
             pu.append(jnp.full((L,), -1, jnp.int32))
             pg.append(jnp.full((L,), gi, jnp.int32))
-        r, jb = jnp.concatenate(pr), jnp.concatenate(pj)
-        need, copy = jnp.concatenate(pn), jnp.concatenate(pc)
-        cur, gsel = jnp.concatenate(pu), jnp.concatenate(pg)
+        r, jb = _cat(pr), _cat(pj)
+        need, copy = _cat(pn), _cat(pc)
+        cur, gsel = _cat(pu), _cat(pg)
 
-    ni = jnp.cumsum(need.astype(jnp.int32)) - 1
-    new = stack[jnp.clip(jnp.where(need, ni, 0), 0, P - 1)]
-    need_total = jnp.sum(need.astype(jnp.int32))
     need_by_group = jnp.zeros((len(specs),), jnp.int32).at[gsel].add(
         need.astype(jnp.int32))
-    return DevicePagePlan(exhausted=need_total > n_free, n_free=n_free,
-                          need_by_group=need_by_group, rows=r, blocks=jb,
-                          need=need, copy=copy, cur=cur, new=new)
+    if shards is None:
+        ni = jnp.cumsum(need.astype(jnp.int32)) - 1
+        new = stack[jnp.clip(jnp.where(need, ni, 0), 0, P - 1)]
+        need_total = jnp.sum(need.astype(jnp.int32))
+        return DevicePagePlan(exhausted=need_total > n_free, n_free=n_free,
+                              need_by_group=need_by_group, rows=r, blocks=jb,
+                              need=need, copy=copy, cur=cur, new=new)
+    # segment-local allocation: rank each needing lane WITHIN its row's
+    # shard (cumsum over a lane × shard one-hot — L and n_shards are both
+    # small) and pop from that shard's stack only
+    lane_sh = row_shard[r]
+    onehot = ((lane_sh[:, None]
+               == jnp.arange(n_shards, dtype=jnp.int32)[None, :])
+              & need[:, None]).astype(jnp.int32)          # (L, n_shards)
+    ni = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                             lane_sh[:, None], axis=1)[:, 0]
+    new = stack_sh[lane_sh, jnp.clip(jnp.where(need, ni, 0), 0, pps - 1)]
+    need_by_shard = jnp.sum(onehot, axis=0)
+    exhausted_by_shard = need_by_shard > n_free_sh
+    return DevicePagePlan(exhausted=jnp.any(exhausted_by_shard),
+                          n_free=n_free, need_by_group=need_by_group,
+                          rows=r, blocks=jb, need=need, copy=copy, cur=cur,
+                          new=new, need_by_shard=need_by_shard,
+                          n_free_by_shard=n_free_sh,
+                          exhausted_by_shard=exhausted_by_shard)
 
 
 def apply_page_plan(cache, plan: DevicePagePlan):

@@ -34,3 +34,29 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 def dp_axes(mesh: Mesh) -> tuple:
     """Data-parallel axes: ('pod','data') on multi-pod, ('data',) otherwise."""
     return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def data_shards(mesh: Mesh) -> int:
+    """Number of data shards a serving engine partitions its slot axis
+    (and page pool) into: the product of the non-model axes."""
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)], dtype=int))
+
+
+def make_serving_mesh(shape: tuple[int, int] = (2, 2), *,
+                      devices=None) -> Mesh:
+    """(data, model) mesh for a sharded ``StreamingEngine`` over whatever
+    devices exist — real accelerators in production, forced host-platform
+    devices in tests/CI (set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` BEFORE the
+    first jax import). Unlike the production mesh this takes any shape
+    that fits the device count, so a (2, 2) mesh exercises real
+    cross-shard paths on one host."""
+    n = int(np.prod(shape))
+    devices = list(jax.devices() if devices is None else devices)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"serving mesh {tuple(shape)} needs {n} devices, have "
+            f"{len(devices)} — on a host platform set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} (or more) before "
+            f"importing jax")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), ("data", "model"))

@@ -31,6 +31,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import (greedy_decode, prompt_lookup_drafts,
                         speculative_greedy_decode, transformer_handle)
+from repro.launch.mesh import make_serving_mesh
 from repro.models import transformer as tr
 from repro.serving import (EngineConfig, GenerationParams, RequestCancelled,
                            StreamingEngine)
@@ -44,11 +45,19 @@ def continuous_demo(params, cfg, prompts, args, expected=None) -> None:
     scratch cache), interleaved with the resident slots' decode steps."""
     prompts = np.asarray(prompts)
     B, P = prompts.shape
+    mesh = None
+    n_slots = min(args.slots, B)
+    if args.mesh is not None:
+        data, model = args.mesh
+        mesh = make_serving_mesh((data, model))
+        # every mode group's slot count must split evenly across the data
+        # shards — round up rather than reject the CLI's request count
+        n_slots = -(-n_slots // data) * data
     ecfg = EngineConfig(
         mode="speculative", draft_len=args.draft_len, n_drafts=args.n_drafts,
-        max_new=args.max_new, max_src=P, n_slots=min(args.slots, B),
+        max_new=args.max_new, max_src=P, n_slots=n_slots,
         prefill_chunk=args.prefill_chunk, eos_id=EOS_ID,
-        paged=args.paged, page_size=args.page_size)
+        paged=args.paged, page_size=args.page_size, mesh=mesh)
     eng = StreamingEngine(params, cfg, None, ecfg)
     # stagger arrivals so admissions interleave with running decodes
     handles = [eng.submit(row, arrival=float(3 * i))
@@ -105,6 +114,12 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true",
                     help="serve through a paged KV cache (attention archs)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--mesh", type=int, nargs=2, metavar=("DATA", "MODEL"),
+                    help="serve the continuous pass on a (data, model) "
+                         "device mesh — slots/pages shard over DATA, params "
+                         "over MODEL. Needs DATA*MODEL devices (host "
+                         "platforms: set XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N before launch)")
     ap.add_argument("--no-continuous", action="store_true")
     args = ap.parse_args()
 

@@ -21,7 +21,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.launch.mesh import dp_axes
-from repro.models.attention import KVCache
+from repro.models.attention import KVCache, PagedKVCache
 from repro.sharding import rules
 
 
@@ -49,6 +49,36 @@ def param_shardings(params, mesh: Mesh, *, fsdp: bool = True):
                                  fsdp_axes=dp_axes(mesh) if fsdp else ())
 
 
+def serving_param_shardings(params, cfg, mesh: Mesh):
+    """Execution-safe tensor-parallel shardings for the serving engines.
+
+    The dry-run rules shard attention projection outputs over 'model'
+    whenever the flattened ``heads * head_dim`` axis divides. EXECUTING
+    that layout is only safe when the split lands on whole heads: a chunk
+    that cuts inside ``head_dim`` reshapes the sharding onto RoPE's
+    rotation axis, and that layout splits the rotation pairs across
+    devices (the partitioned concatenate along a sharded axis also
+    miscompiles on host-platform meshes — see ``StreamingEngine._repl``).
+    Q/K/V projections whose head count does not divide the model axis are
+    therefore replicated; everything else follows the rules.
+    """
+    pspecs = rules.param_pspecs(params, mesh, fsdp_axes=())
+    model = int(dict(mesh.shape).get(rules.MODEL, 1))
+    heads = {"wq": int(getattr(cfg, "n_heads", 1) or 1),
+             "wk": int(getattr(cfg, "n_kv_heads", 0)
+                       or getattr(cfg, "n_heads", 1) or 1)}
+    heads["wv"] = heads["wk"]
+
+    def one(path, spec):
+        names = rules._path_names(path)
+        parent = names[-2] if len(names) >= 2 else ""
+        if parent in heads and heads[parent] % model:
+            spec = P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, pspecs)
+
+
 def opt_shardings(opt_state, params, mesh: Mesh):
     pspec = rules.param_pspecs(params, mesh, fsdp_axes=dp_axes(mesh))
     mu = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspec)
@@ -66,6 +96,64 @@ def batch_shardings(batch, mesh: Mesh):
         return NamedSharding(mesh, P(b, *((None,) * (leaf.ndim - 1))))
 
     return jax.tree_util.tree_map(one, batch)
+
+
+def _shard_one_axis(mesh, shape, axis, axes):
+    """NamedSharding partitioning exactly one axis (when divisible)."""
+    spec = [None] * len(shape)
+    spec[axis] = _maybe(mesh, shape[axis], axes)
+    return NamedSharding(mesh, P(*spec))
+
+
+def serving_state_shardings(gstate, mesh: Mesh):
+    """Best-effort NamedShardings for a serving ``GroupedState`` (the
+    sharded ``StreamingEngine``'s committed-input layout).
+
+    Slot-parallel serving: every per-group ``SessionState`` leaf leads
+    with the group's SLOT axis, which shards over the data axes whenever
+    the group's slot count divides them — the engine enforces
+    divisibility, so the per-slot decode state is genuinely partitioned
+    and shard ``s`` owns its slots end to end. The shared cache follows
+    the dry-run shardings' ``_maybe`` divisibility contract: paged pools
+    shard their PAGE axis (the engine sizes ``n_pages`` divisible by the
+    shard count, so the contiguous per-shard page segments of
+    ``device_page_plan`` land one segment per data shard), dense KV rows
+    shard when the row count divides, and the tiny block tables (plus any
+    leaf that does not divide) replicate — replication is always correct
+    under SPMD, it just spends interconnect instead of memory."""
+    dp = dp_axes(mesh)
+    repl = _ns(mesh)
+
+    def group_leaf(leaf):
+        if getattr(leaf, "ndim", 0) == 0:
+            return repl
+        return _shard_one_axis(mesh, leaf.shape, 0, dp)
+
+    def cache_node(node):
+        if isinstance(node, PagedKVCache):
+            # trailing dims are (pages, ps, Kv, hd) / (pages, ps); a
+            # leading scan-repeat dim may or may not be present
+            pool = _shard_one_axis(mesh, node.k_pool.shape,
+                                   node.k_pool.ndim - 4, dp)
+            return PagedKVCache(
+                k_pool=pool, v_pool=pool,
+                pos=_shard_one_axis(mesh, node.pos.shape,
+                                    node.pos.ndim - 2, dp),
+                block_tables=repl)
+        if isinstance(node, KVCache):
+            # trailing dims are (B, S, Kv, hd) / (B, S)
+            kv = _shard_one_axis(mesh, node.k.shape, node.k.ndim - 4, dp)
+            return KVCache(k=kv, v=kv,
+                           pos=_shard_one_axis(mesh, node.pos.shape,
+                                               node.pos.ndim - 2, dp))
+        return jax.tree_util.tree_map(lambda x: repl, node)
+
+    groups = tuple(jax.tree_util.tree_map(group_leaf, gs)
+                   for gs in gstate.groups)
+    cache = jax.tree_util.tree_map(
+        cache_node, gstate.cache,
+        is_leaf=lambda x: isinstance(x, (PagedKVCache, KVCache)))
+    return type(gstate)(groups=groups, cache=cache)
 
 
 def cache_shardings(cache, cfg: ModelConfig, mesh: Mesh):

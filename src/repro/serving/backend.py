@@ -333,6 +333,15 @@ class DecoderOnlyBackend:
             chunks=chunks, gen=params.device_args(spec), params=params,
             prompt=prompt)
 
+    def prompt_body(self, req: Request) -> np.ndarray:
+        """The request's committed prompt body — the prompt minus its
+        final token, which seeds decoding as ``last`` and is never
+        written to the cache. This is the unit prefix sharing keys on:
+        both the radix match at admission and the sharded engine's
+        placement probe must walk the SAME token string, or affinity
+        routing and the aliased chain could disagree."""
+        return np.asarray(req.prompt, np.int32).reshape(-1)[:-1]
+
     def suffix_chunks(self, body: np.ndarray, m0: int = 0) -> list:
         """Fixed-shape prefill chunks for ``body[m0:]`` with positions kept
         ABSOLUTE (chunk c0 starts at token index c0 of the full body).

@@ -82,14 +82,18 @@ from repro.core import (
     speculative_beam_search, speculative_greedy_decode,
 )
 from repro.core.session import (GroupedState, PageAllocator, PoolExhausted,
-                                RadixPageCache, SessionSpec, alias_prefix_pages,
+                                RadixPageCache, SessionSpec,
+                                ShardedPageAllocator, alias_prefix_pages,
                                 apply_page_plan, clear_index_cells,
-                                device_free_pages, device_page_plan,
-                                grouped_init_state, grouped_step,
-                                radix_cell_coords, read_row_pages,
-                                release_slot, reset_slot, unmap_cache_rows,
-                                write_index_cells)
+                                device_free_pages, device_free_pages_by_shard,
+                                device_page_plan, grouped_init_state,
+                                grouped_step, radix_cell_coords,
+                                read_row_pages, release_slot, reset_slot,
+                                unmap_cache_rows, write_index_cells)
 from repro.data.tokenizer import SmilesTokenizer
+from repro.launch.mesh import data_shards
+from repro.launch.shardings import (serving_param_shardings,
+                                    serving_state_shardings)
 from repro.models import seq2seq as s2s
 from repro.serving.api import (MAX_STOP_IDS, GenerationParams,
                                RequestCancelled, RequestHandle,
@@ -149,6 +153,14 @@ class EngineConfig:
     # deadline-aware preemption, load shedding with retry-after. None =
     # everything off (strict priority/EDF/FIFO, unbounded queues).
     overload: OverloadPolicy | None = None
+    # sharded serving (StreamingEngine): a jax.sharding.Mesh with a
+    # ("data", "model") axis pair. Slot axes, the paged page pool, and
+    # the admission/preemption accounting partition across the data axis
+    # (each data shard owns a disjoint slot group and page-pool segment);
+    # params shard across "model" via sharding/rules.py. The megastep
+    # stays ONE donated dispatch spanning all devices, and tokens are
+    # identical to the single-device engine. None = single device.
+    mesh: object | None = None
 
     def __post_init__(self):
         """Fail at construction, not as a deep shape/assert error later."""
@@ -359,6 +371,19 @@ class StreamingEngine:
         self.tok = tokenizer
         self.ecfg = ecfg = engine_cfg or EngineConfig()
         self.backend = backend or make_backend(cfg, ecfg, tokenizer)
+        # sharded serving: n_shards data shards each own a contiguous
+        # local-slot range of every group and a contiguous page-pool
+        # segment; params shard over the mesh's model axis
+        self.mesh = ecfg.mesh
+        self.n_shards = data_shards(self.mesh) if self.mesh is not None else 1
+        if self.mesh is not None:
+            # tensor-parallel only for decode (no FSDP: a per-step
+            # all-gather would put the whole parameter footprint on the
+            # interconnect every iteration), restricted to layouts that
+            # execute exactly — see serving_param_shardings
+            self.params = jax.device_put(
+                self.params,
+                serving_param_shardings(self.params, cfg, self.mesh))
         eos_id = tokenizer.eos_id if tokenizer is not None else ecfg.eos_id
         pad_id = tokenizer.pad_id if tokenizer is not None else ecfg.pad_id
         if eos_id is None:
@@ -420,6 +445,30 @@ class StreamingEngine:
                              if ecfg.prefix_cache_pages is not None
                              else 2 * self.n_slots * self._prefix_pad)
             self._n_index_rows = -(-self._n_cells // self._table_blocks)
+        # shard maps: global slot -> data shard, cache row -> data shard
+        # (index rows stay on shard 0 — their cells only PIN pages, the
+        # page planner never allocates for them). Shard s owns local
+        # slots [s*per, (s+1)*per) of each group, matching the
+        # NamedSharding partition of the slot axis, so a shard's slots,
+        # rows, and page segment live on the same devices.
+        self._shard_of_slot: dict[int, int] = {}
+        self._row_shard: np.ndarray | None = None
+        if self.n_shards > 1:
+            rs = np.zeros((self.n_rows + self._n_index_rows,), np.int32)
+            for mode, spec in self._groups.items():
+                if spec.n_slots % self.n_shards:
+                    raise ValueError(
+                        f"mode group {mode!r}: n_slots={spec.n_slots} must "
+                        f"divide evenly over the mesh's {self.n_shards} "
+                        f"data shards")
+                per = spec.n_slots // self.n_shards
+                base, lo = self._slot_base[mode], self._row_lo[mode]
+                for i in range(spec.n_slots):
+                    sh = i // per
+                    self._shard_of_slot[base + i] = sh
+                    r0 = lo + i * spec.rows_per_slot
+                    rs[r0:r0 + spec.rows_per_slot] = sh
+            self._row_shard = rs
         # trace counters (incremented at TRACE time only): after one warmup
         # request per mode, mixed traffic must not grow any of these — the
         # zero-recompilation acceptance criterion tests assert on it
@@ -572,8 +621,10 @@ class StreamingEngine:
                     (self._chunk_rows0(m), pos0, n_valid, C)
                     for m, (_, pos0, n_valid)
                     in zip(self.mode_names, prefill))
+            shards = ((self.n_shards, self._row_shard, self._repl)
+                      if self.n_shards > 1 else None)
             plan = device_page_plan(specs, blocks, ps, n_pages, gstate,
-                                    prefill=plan_prefill)
+                                    prefill=plan_prefill, shards=shards)
 
             def body(g):
                 g = GroupedState(groups=g.groups,
@@ -587,10 +638,27 @@ class StreamingEngine:
             gstate = grouped_step(specs, handle, gstate)
         return gstate, self._make_bundle(gstate, n_out0, plan)
 
+    def _repl(self, x):
+        """All-gather a per-slot row vector before concatenating groups.
+
+        Group leaves shard their slot axis over 'data', and a concatenate
+        along a sharded axis is the one primitive the forced-host SPMD
+        partitioner gets WRONG (jax 0.4.37 lowers it to a partial-sum
+        gather: every element doubles). An explicit replicate constraint
+        first makes the concat a local op on gathered copies, which
+        executes exactly — and the bundle rows are O(n_slots) scalars, so
+        the gather is noise."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh,
+                                          jax.sharding.PartitionSpec()))
+
     def _slot_counts(self, gstate) -> jnp.ndarray:
         """(n_slots,) committed-token counts on each slot's row 0, global
         slot order (groups are slot-contiguous in declaration order)."""
-        return jnp.concatenate([gs.n_out[:, 0] for gs in gstate.groups])
+        return jnp.concatenate([self._repl(gs.n_out[:, 0])
+                                for gs in gstate.groups])
 
     def _make_bundle(self, gstate, n_out0, plan) -> dict:
         """The megastep's host-sync bundle: small fixed-shape arrays (the
@@ -598,7 +666,7 @@ class StreamingEngine:
         specs = list(self._groups.values())
         maxW = max([s.draft_len + 1 for s in specs if s.kind == "greedy"],
                    default=1)
-        finished = jnp.concatenate([gs.finished.all(axis=1)
+        finished = jnp.concatenate([self._repl(gs.finished.all(axis=1))
                                     for gs in gstate.groups])
         n_out1 = self._slot_counts(gstate)
         n_new = n_out1 - n_out0
@@ -615,7 +683,7 @@ class StreamingEngine:
             else:
                 # beams reorder mid-flight: only terminal reads are truthful
                 d = jnp.zeros((S, maxW), jnp.int32)
-            deltas.append(d)
+            deltas.append(self._repl(d))
             lo += S
         bundle = dict(finished=finished, n_out=n_out1, n_new=n_new,
                       delta=jnp.concatenate(deltas, axis=0))
@@ -632,6 +700,18 @@ class StreamingEngine:
                 # pages inside the step, and the mirror must see them free
                 n_free_final=device_free_pages(gstate.cache, n_pages),
                 need=plan.need_by_group)
+            if plan.need_by_shard is not None:
+                # per-shard mirrors of the three counters above: the host
+                # keeps shard-local admission accounting and attributes
+                # exhaustion to the shard that is actually short
+                bundle.update(
+                    need_sh=plan.need_by_shard,
+                    n_free_alloc_sh=jnp.where(
+                        plan.exhausted, plan.n_free_by_shard,
+                        plan.n_free_by_shard - plan.need_by_shard),
+                    n_free_final_sh=device_free_pages_by_shard(
+                        gstate.cache, n_pages, self.n_shards),
+                    exhausted_sh=plan.exhausted_by_shard)
             if self._prefix_sharing:
                 # post-step row0 block tables for every slot: the host
                 # reads a finishing slot's committed prompt pages from here
@@ -790,8 +870,18 @@ class StreamingEngine:
                     for s in self._groups.values())
         # prefix sharing retains up to n_cells pages beyond the rows' worst
         # case, so the no-oversubscription default grows by that many
-        n_pages = (ecfg.n_pages if ecfg.n_pages is not None
-                   else worst + self._n_cells + 1)
+        if ecfg.n_pages is not None:
+            n_pages = ecfg.n_pages
+            if n_pages % self.n_shards:
+                raise ValueError(
+                    f"EngineConfig.n_pages={n_pages} must divide into "
+                    f"{self.n_shards} equal per-shard pool segments")
+        else:
+            # sharded: round up to equal segments so every shard's pool
+            # covers its slots' worst case (+ the shared trash page,
+            # which sits inside shard 0's segment)
+            n_pages = worst + self._n_cells + 1
+            n_pages = self.n_shards * (-(-n_pages // self.n_shards))
         return n_pages, ps
 
     def _finished_mask(self, gstate) -> np.ndarray:
@@ -885,14 +975,20 @@ class StreamingEngine:
         if bool(out["exhausted"]):
             # all-or-nothing: the dispatched step applied NOTHING. Hint
             # the scheduler at the first group whose cumulative need
-            # overflows the pool (the host walk's in-group-victim analog).
+            # overflows the pool (the host walk's in-group-victim analog)
+            # and — sharded — at the first shard that is actually short,
+            # so preemption/replay stays shard-local.
             n_free, run, prefer = int(out["n_free_alloc"]), 0, None
             for gi, m in enumerate(self.mode_names):
                 run += int(out["need"][gi])
                 if run > n_free:
                     prefer = m
                     break
-            return {"exhausted": True, "group": prefer}
+            shard = None
+            if "exhausted_sh" in out:
+                ex = np.asarray(out["exhausted_sh"], bool)
+                shard = int(np.argmax(ex)) if ex.any() else None
+            return {"exhausted": True, "group": prefer, "shard": shard}
         self._dispatch_samples.append(self.n_dispatches - self._disp_mark)
         if len(self._dispatch_samples) > 4096:
             del self._dispatch_samples[:2048]
@@ -931,10 +1027,14 @@ class StreamingEngine:
                 (self.allocator.n_pages - 1) - int(out["n_free_alloc"]))
             self.pages_allocated += int(out["need"].sum())
             self._mirror_free = int(out["n_free_final"])
+            if "n_free_final_sh" in out:
+                self._mirror_free_sh = [int(x)
+                                        for x in out["n_free_final_sh"]]
+                self.allocator.note_peak(out["n_free_alloc_sh"])
             # bookings made before this bundle's dispatch are now visible
             # in the device counter; keep only the ones it cannot see yet
-            self._booked = [(g, p) for g, p in self._booked
-                            if g >= self._n_dispatched]
+            self._booked = [b for b in self._booked
+                            if b[0] >= self._n_dispatched]
         self._stream_bundle = dict(
             n_out=out["n_out"], n_new=out["n_new"], delta=out["delta"],
             # mid-prefill slots' session rows still hold the previous
@@ -959,8 +1059,12 @@ class StreamingEngine:
         n_pages, _ = self._paged_geometry()
         self._mirror_free = int(device_free_pages(
             self.scheduler.state.cache, n_pages))
-        self._booked = [(g, p) for g, p in self._booked
-                        if g >= self._n_dispatched]
+        if self.n_shards > 1:
+            self._mirror_free_sh = [
+                int(x) for x in device_free_pages_by_shard(
+                    self.scheduler.state.cache, n_pages, self.n_shards)]
+        self._booked = [b for b in self._booked
+                        if b[0] >= self._n_dispatched]
 
     def _mirror_admit_ok(self, state, mode) -> bool:
         """Paged admission gate on the MIRRORED free counter (last synced
@@ -973,18 +1077,89 @@ class StreamingEngine:
         bundle arrives while nothing is resident), and refusing on the
         stale counter would wedge admission permanently."""
         need = self.allocator.admit_pages_for(mode)
-        booked = sum(p for _, p in self._booked)
+        booked = sum(b[-1] for b in self._booked)
         if self._mirror_free - booked >= need:
             return True
         self._mirror_recount()
-        booked = sum(p for _, p in self._booked)
+        booked = sum(b[-1] for b in self._booked)
         # still short: retained prefix pages are reclaimable capacity —
         # evict LRU radix nodes (monotone progress, the tree only shrinks)
         # before refusing the admission
         while (self._mirror_free - booked < need and self._radix_reclaim()):
             self._mirror_recount()
-            booked = sum(p for _, p in self._booked)
+            booked = sum(b[-1] for b in self._booked)
         return self._mirror_free - booked >= need
+
+    # -- sharded placement ---------------------------------------------------
+    def _shard_headroom(self, shard: int) -> int:
+        """How much room shard ``shard`` has for new work: mirrored free
+        pages net of unseen bookings (paged), or minus its resident count
+        (dense — fewer residents == more room)."""
+        if self.allocator is not None:
+            booked = sum(b[-1] for b in self._booked if b[1] == shard)
+            return self._mirror_free_sh[shard] - booked
+        return -sum(1 for s in self.scheduler._resident
+                    if self._shard_of_slot.get(s) == shard)
+
+    def _shard_admit_ok(self, mode: str, shard: int) -> bool:
+        """Per-shard analog of ``_mirror_admit_ok``: can ``shard``'s pool
+        segment cover one ``mode`` admission's worst-case first step?
+        Refusals recount from the device, then reclaim cached prefix
+        pages FROM THIS SHARD before giving up."""
+        need = self.allocator.admit_pages_for(mode)
+        if self._shard_headroom(shard) >= need:
+            return True
+        self._mirror_recount()
+        while (self._shard_headroom(shard) < need
+               and self._radix_reclaim(shard)):
+            self._mirror_recount()
+        return self._shard_headroom(shard) >= need
+
+    def _shard_order(self, mode: str, payload, avail: set) -> list[int]:
+        """Shard preference for one admission: the shard holding the
+        request's cached prefix pages first (aliasing stays local — the
+        child decodes next to its parent's pages), then the rest by
+        descending headroom (least-loaded), ties to the lowest shard id."""
+        pref: list[int] = []
+        req = payload[1]
+        if self.radix is not None and req.prompt is not None:
+            # non-mutating probe: placement must not skew LRU/hit stats,
+            # _admit_match_prefix does the real (counted) match later
+            chain = self.radix.peek(self.backend.prompt_body(req))
+            depth = (len(chain) // self._align_pages) * self._align_pages
+            if depth > 0:
+                sh = self.allocator.shard_of_page(chain[depth - 1].page)
+                if sh in avail:
+                    pref.append(sh)
+        rest = sorted((s for s in avail if s not in pref),
+                      key=lambda s: (-self._shard_headroom(s), s))
+        return pref + rest
+
+    def _place_slot(self, mode: str, free: list[int], payload):
+        """Scheduler ``place`` hook (sharded engines): pick the slot —
+        and thereby the data shard — for the group head's admission, or
+        None to defer when no shard can cover it this iteration."""
+        by_shard: dict[int, list[int]] = {}
+        for s in free:
+            by_shard.setdefault(self._shard_of_slot[s], []).append(s)
+        for sh in self._shard_order(mode, payload, set(by_shard)):
+            if self.allocator is None or self._shard_admit_ok(mode, sh):
+                return min(by_shard[sh])
+        return None
+
+    def shard_stats(self) -> dict:
+        """Per-shard balance counters for the sharded benchmark mode."""
+        out = {"n_shards": self.n_shards,
+               "admitted_by_shard": list(self._admits_by_shard)}
+        admits = self._admits_by_shard
+        mean = sum(admits) / max(1, len(admits))
+        out["admit_imbalance"] = (max(admits) / mean) if mean else 1.0
+        if isinstance(self.allocator, ShardedPageAllocator):
+            alloc = self.allocator
+            out["peak_pages_by_shard"] = list(alloc.peak_pages_by_shard)
+            out["shard_capacity"] = [alloc.shard_capacity(s)
+                                     for s in range(self.n_shards)]
+        return out
 
     def _new_scheduler(self) -> ContinuousScheduler:
         ecfg = self.ecfg
@@ -1014,19 +1189,25 @@ class StreamingEngine:
         self._staged_slots = []
         self._dispatch_rids = {}
         self._dispatch_prefilling = set()
-        self._booked = []          # (dispatch-generation stamp, pages)
+        self._booked = []   # (dispatch-generation stamp, shard, pages)
         self._n_dispatched = 0
         self._last_sync_t = None
+        self._mirror_free_sh: list[int] = []
+        self._admits_by_shard = [0] * self.n_shards
 
         def admit(state, slot, payload):
             mode, req = payload
             local = slot - self._slot_base[mode]
+            shard = self._shard_of_slot.get(slot)
             if self.allocator is not None:
                 # book the admission's worst-case first-step pages against
-                # the mirror until a later bundle's free count reflects it
+                # the mirror (and its shard's) until a later bundle's free
+                # count reflects it
                 self._booked.append(
-                    (self._n_dispatched,
+                    (self._n_dispatched, shard,
                      self.allocator.admit_pages_for(mode)))
+            if shard is not None:
+                self._admits_by_shard[shard] += 1
             self.requests_admitted += 1
             with jax.profiler.TraceAnnotation("serve/admit"):
                 if not self.backend.chunked:
@@ -1081,7 +1262,8 @@ class StreamingEngine:
             out = self._sync_step()
             if out.get("exhausted"):
                 raise PoolExhausted("page pool exhausted",
-                                    group=out.get("group"))
+                                    group=out.get("group"),
+                                    shard=out.get("shard"))
             return state
 
         groups = {mode: list(range(base, base + self._groups[mode].n_slots))
@@ -1090,14 +1272,29 @@ class StreamingEngine:
                        "finished": self._finished_mask,
                        "dispatch": self._dispatch_step,
                        "sync": self._sync_step}
+        if self.n_shards > 1:
+            # sharded: the engine picks the SLOT (and thereby the shard)
+            # for every admission — prefix affinity first, least-loaded
+            # shard otherwise — and pool-pressure preemption stays inside
+            # the exhausted shard
+            hooks.update(place=self._place_slot,
+                         shards=dict(self._shard_of_slot))
         if ecfg.paged:
             be = self.backend
-            self.allocator = PageAllocator(
-                self._groups, n_pages=paged[0], page_size=paged[1],
+            alloc_kw = dict(
+                n_pages=paged[0], page_size=paged[1],
                 row_lens={m: be.row_len(s)
                           for m, s in self._groups.items()},
                 prefill_blocks={m: be.prefill_blocks(paged[1])
                                 for m in self._groups})
+            if self.n_shards > 1:
+                self.allocator = ShardedPageAllocator(
+                    self._groups, n_shards=self.n_shards, **alloc_kw)
+                self._mirror_free_sh = [
+                    self.allocator.shard_capacity(s)
+                    for s in range(self.n_shards)]
+            else:
+                self.allocator = PageAllocator(self._groups, **alloc_kw)
             self._mirror_free = self.allocator.n_pages - 1
             hooks.update(admit_ok=self._mirror_admit_ok)
             if self._n_index_rows:
@@ -1107,6 +1304,12 @@ class StreamingEngine:
             if self._prefix_sharing:
                 hooks.update(reclaim=self._radix_reclaim)
         state = grouped_init_state(tuple(self._groups.values()), cache)
+        if self.mesh is not None:
+            # commit the session state to its NamedShardings so the
+            # donated megastep compiles as one SPMD program spanning the
+            # mesh — still ONE dispatch per steady-state iteration
+            state = jax.device_put(
+                state, serving_state_shardings(state, self.mesh))
         return ContinuousScheduler(self.spec, state, admit=admit, step=step,
                                    policy=ecfg.overload, **hooks)
 
@@ -1119,7 +1322,7 @@ class StreamingEngine:
         replays the cold run's exact chunk partition (token identity)."""
         req = rec["req"]
         ps = self.ecfg.page_size
-        body = np.asarray(req.prompt, np.int32).reshape(-1)[:-1]
+        body = self.backend.prompt_body(req)
         rec["body"] = body
         chain = self.radix.match(body)
         depth = (len(chain) // self._align_pages) * self._align_pages
@@ -1223,14 +1426,18 @@ class StreamingEngine:
                 jnp.int32(n))
             self.n_dispatches += 1
 
-    def _radix_reclaim(self) -> bool:
+    def _radix_reclaim(self, shard: int | None = None) -> bool:
         """Pool-pressure hook (scheduler ``reclaim``): evict LRU inactive
         radix nodes and clear their index cells, returning their pages to
         the device pool. Tried before preempting a resident request —
-        cached prefixes are strictly cheaper to lose than live work."""
+        cached prefixes are strictly cheaper to lose than live work.
+        ``shard`` targets the eviction at one page-pool segment (the
+        per-shard admission gate's relief valve)."""
         if self.radix is None or len(self.radix) == 0:
             return False
-        pairs = self.radix.evict_lru(self._prefix_pad)
+        where = (None if shard is None else
+                 (lambda nd: self.allocator.shard_of_page(nd.page) == shard))
+        pairs = self.radix.evict_lru(self._prefix_pad, where=where)
         if not pairs:
             return False
         self._clear_cells(pairs)

@@ -236,6 +236,18 @@ class ContinuousScheduler:
                                      — e.g. cached prefix pages — tried
                                      BEFORE preempting a resident request
                                      under pool pressure; True = progress
+
+    Optional sharded placement (mesh engines):
+    place(mode, free, payload) -> slot|None
+                                     pick THE slot for the group's head
+                                     request from its free list (prefix
+                                     affinity / least-loaded shard), or
+                                     None to hold the whole group this
+                                     iteration (every shard full). When
+                                     supplied it subsumes ``admit_ok``.
+    shards: {global slot: shard id}  lets pool-pressure preemption pick
+                                     its victim from the exhausted shard
+                                     (replay stays shard-local)
     """
 
     def __init__(self, spec: SessionSpec, state, *,
@@ -248,6 +260,8 @@ class ContinuousScheduler:
                  dispatch: Callable | None = None,
                  sync: Callable | None = None,
                  reclaim: Callable | None = None,
+                 place: Callable | None = None,
+                 shards: dict[int, int] | None = None,
                  policy: OverloadPolicy | None = None):
         self.spec = spec
         self.state = state
@@ -260,6 +274,8 @@ class ContinuousScheduler:
         self._dispatch = dispatch
         self._sync = sync
         self._reclaim = reclaim
+        self._place = place
+        self._slot_shard = shards or {}
         self._finished = finished or _default_finished
         if groups is None:
             groups = {None: list(range(spec.n_slots))}
@@ -550,11 +566,21 @@ class ContinuousScheduler:
             while admitted:
                 admitted = False
                 for _, _, mode in self._heads_ready(now, events):
-                    if (self._admit_ok is not None
-                            and not self._admit_ok(self.state, mode)):
-                        continue   # pool pressure: try other groups' heads
+                    if self._place is not None:
+                        # sharded engines pick THE slot (prefix-affine /
+                        # least-loaded shard, per-shard page gate folded in)
+                        head = self._ready_head(mode, now, events)
+                        slot = (None if head is None else self._place(
+                            mode, list(self._free[mode]), head.payload))
+                        if slot is None:
+                            continue   # every shard full: try other groups
+                        self._free[mode].remove(slot)
+                    else:
+                        if (self._admit_ok is not None
+                                and not self._admit_ok(self.state, mode)):
+                            continue   # pool pressure: try other groups
+                        slot = self._free[mode].pop(0)
                     req = self._pop_head(mode)
-                    slot = self._free[mode].pop(0)
                     self.state = self._admit(self.state, slot, req.payload)
                     self._resident[slot] = req
                     self._admit_time[slot] = now
@@ -630,20 +656,37 @@ class ContinuousScheduler:
             events.append(self._terminal(req, RequestStatus.EXPIRED,
                                          now=now, admitted=admitted))
 
-    def _preempt_youngest(self, prefer: Hashable | None = None) -> None:
+    def _preempt_youngest(self, prefer: Hashable | None = None,
+                          shard: int | None = None) -> None:
         """Kick a most recently admitted request back to its queue head;
         its pages are reclaimed and it restarts from scratch later (decoding
         is deterministic, so its tokens are unchanged — only latency pays).
         ``prefer`` names the slot group that exhausted the pool: a victim is
         taken from that group first so one mode's burst cannot evict another
-        mode's residents while it still has residents of its own."""
-        pool = [s for s in self._resident if self._slot_key[s] == prefer]
-        if not pool:
-            pool = list(self._resident)
+        mode's residents while it still has residents of its own. ``shard``
+        narrows the hunt further to the exhausted page-pool shard — evicting
+        elsewhere frees pages the short shard cannot use, so the replay
+        would exhaust again and the loop would thrash through innocents."""
+        pool = list(self._resident)
+        if shard is not None:
+            local = [s for s in pool if self._slot_shard.get(s) == shard]
+            if local:
+                pool = local
+        group = [s for s in pool if self._slot_key[s] == prefer]
+        if group:
+            pool = group
         slot = max(pool, key=lambda s: (self._admit_time[s], s))
         req, _ = self._evict(slot)
         self._requeue_front(req)
         self.n_preemptions += 1
+
+    def _resident_in_shard(self, shard: int | None) -> int:
+        """Residents whose eviction could relieve pressure on ``shard``
+        (all of them when the exhaustion is not shard-attributed)."""
+        if shard is None or not self._slot_shard:
+            return len(self._resident)
+        return sum(1 for s in self._resident
+                   if self._slot_shard.get(s) == shard)
 
     def _return_slot(self, slot: int) -> None:
         free = self._free[self._slot_key[slot]]
@@ -660,13 +703,14 @@ class ContinuousScheduler:
             except PoolExhausted as e:
                 if self._reclaim is not None and self._reclaim():
                     continue   # cached pages freed: replay with no victim
-                if len(self._resident) <= 1:
+                shard = getattr(e, "shard", None)
+                if self._resident_in_shard(shard) <= 1:
                     raise  # pool below one request's worst case (validated
                            # at allocator construction; unreachable there
                            # unless retained pages were held — reclaimed
                            # above)
                 prefer = e.group if e.group in self._future else None
-                self._preempt_youngest(prefer)
+                self._preempt_youngest(prefer, shard=shard)
 
     def _evict_finished(self, now: float, read_slot,
                         mask=None) -> list[SlotResult]:
@@ -811,17 +855,20 @@ class ContinuousScheduler:
                     # retained (prefix-cache) pages are the cheapest thing
                     # to give back — reclaim before preempting live work,
                     # and before concluding a single resident cannot fit
+                    shard = out.get("shard")
                     if self._reclaim is not None and self._reclaim():
                         pass
-                    elif len(self._resident) <= 1:
+                    elif self._resident_in_shard(shard) <= 1:
                         raise PoolExhausted(
                             "page pool exhausted with a single resident "
                             "request (pool below one slot's worst case is "
-                            "rejected at allocator construction)")
+                            "rejected at allocator construction)",
+                            shard=shard)
                     else:
                         prefer = out.get("group")
                         self._preempt_youngest(
-                            prefer if prefer in self._future else None)
+                            prefer if prefer in self._future else None,
+                            shard=shard)
                     self.state = self._dispatch(self.state)
                     out = self._sync()
                 inflight = False

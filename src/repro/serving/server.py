@@ -62,6 +62,7 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import json
+import math
 import queue
 import threading
 from typing import Any
@@ -85,8 +86,12 @@ class ServerConfig:
     int applies to every tenant, a dict sets per-tenant caps (missing
     tenants unlimited); None disables quotas. ``quota_retry_after``: the
     retry hint attached to quota rejections. ``drain_retry_after``: the
-    hint attached to 503s while draining. ``writer_delay_s``: test-only
-    artificial consumer slowness injected before each event write."""
+    hint attached to 503s while draining. ``default_timeout_s``: deadline
+    applied to requests whose client set no ``timeout`` (serving-clock
+    seconds, stamped absolute at submission exactly like a client
+    timeout); None keeps untimed requests unbounded. ``writer_delay_s``:
+    test-only artificial consumer slowness injected before each event
+    write."""
 
     host: str = "127.0.0.1"
     port: int = 0
@@ -95,6 +100,7 @@ class ServerConfig:
     tenant_quota: dict[str, int] | int | None = None
     quota_retry_after: float = 1.0
     drain_retry_after: float = 5.0
+    default_timeout_s: float | None = None
     writer_delay_s: float = 0.0
 
 
@@ -360,10 +366,18 @@ class FrontDoorServer:
         body = json.dumps(payload).encode()
         reason = {200: "OK", 404: "Not Found",
                   503: "Service Unavailable"}.get(status, "OK")
+        extra = ""
+        if status == 503 and payload.get("retry_after") is not None:
+            # standard Retry-After delta-seconds (RFC 9110 §10.2.3),
+            # rounded UP so a compliant client never retries before the
+            # JSON body's float hint
+            extra = (f"Retry-After: "
+                     f"{math.ceil(float(payload['retry_after']))}\r\n")
         writer.write(
             f"HTTP/1.1 {status} {reason}\r\n"
             f"Content-Type: application/json\r\n"
             f"Content-Length: {len(body)}\r\n"
+            f"{extra}"
             f"Connection: close\r\n\r\n".encode() + body)
 
     # --------------------------------------------- drive thread (the engine)
@@ -402,6 +416,8 @@ class FrontDoorServer:
                                   "retry_after": self.cfg.quota_retry_after})
                 self._post(conn, None)
                 return
+            if timeout is None:
+                timeout = self.cfg.default_timeout_s
             if timeout is not None:
                 spec = dataclasses.replace(
                     spec, deadline=eng.scheduler._now + float(timeout))

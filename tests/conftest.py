@@ -3,6 +3,15 @@ the serving/acceptance tests (training it once keeps the suite fast)."""
 
 import os
 
+# the sharded-serving tests (test_sharded.py) partition a real host mesh:
+# force 8 CPU devices BEFORE jax initializes its backend. Idempotent when
+# the runner already exports its own XLA_FLAGS.
+_FORCE_DEVICES = "--xla_force_host_platform_device_count=8"
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FORCE_DEVICES).strip()
+
 import jax
 import pytest
 

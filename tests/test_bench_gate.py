@@ -245,3 +245,39 @@ def test_overload_gates_skip_predating_baselines():
     got = compare(_payload(), _overload_payload(slo_high=0.0, shed=1.0),
                   0.30, slo_threshold=0.20, shed_threshold=0.30)
     assert got == []
+
+
+def _sharded_payload(admit_imbalance=1.2, page_balance=1.1):
+    p = _payload()
+    p["modes"]["sharded"] = {"rps": 2.0, "p50": 3.0, "p95": 3.5,
+                             "admit_imbalance": admit_imbalance,
+                             "page_balance": page_balance}
+    return p
+
+
+def test_shard_imbalance_ceiling_fails():
+    """The imbalance gate is ABSOLUTE (max/mean over shards, ideal 1.0)
+    and checks the NEW run only — a baseline that predates the sharded
+    mode still gates a lopsided fresh run."""
+    got = compare(_payload(), _sharded_payload(admit_imbalance=1.9), 0.30,
+                  imbalance_threshold=1.5)
+    assert len(got) == 1
+    assert got[0].startswith("sharded") and "admit_imbalance" in got[0]
+
+
+def test_shard_page_balance_ceiling_fails():
+    got = compare(_payload(), _sharded_payload(page_balance=1.8), 0.30,
+                  imbalance_threshold=1.5)
+    assert len(got) == 1
+    assert got[0].startswith("sharded") and "page_balance" in got[0]
+
+
+def test_shard_balance_under_ceiling_passes():
+    got = compare(_sharded_payload(), _sharded_payload(), 0.30,
+                  imbalance_threshold=1.5)
+    assert got == []
+
+
+def test_imbalance_gate_skips_runs_without_shard_metrics():
+    got = compare(_payload(), _payload(), 0.30, imbalance_threshold=1.5)
+    assert got == []

@@ -300,3 +300,60 @@ def test_graceful_drain_over_the_wire(toy):
                                     for row, n in zip(r.tokens, r.lengths)]
     finally:
         srv.shutdown(drain=False)
+
+
+# ---------------------------------------------------------------------------
+# 6. HTTP metadata: Retry-After header + server-side default deadline
+
+
+def test_draining_503_sets_retry_after_header(toy):
+    """The draining 503 must carry the retry hint as a standard
+    ``Retry-After`` header (delta-seconds, rounded up from the JSON
+    body's float) so plain HTTP clients can back off without parsing
+    the body."""
+    eng = _engine(toy)
+    srv = FrontDoorServer(eng, ServerConfig(realtime=False,
+                                            drain_retry_after=2.5)).start()
+    try:
+        srv._accepting = False      # what shutdown(drain=True) flips first
+        body = json.dumps({"query": toy[0].pair(0)[0]}).encode()
+        with socket.create_connection(("127.0.0.1", srv.port),
+                                      timeout=10) as s:
+            s.sendall(
+                f"POST /v1/generate HTTP/1.1\r\nHost: x\r\n"
+                f"Content-Type: application/json\r\n"
+                f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+            buf = b""
+            while b"\r\n\r\n" not in buf:
+                buf += s.recv(65536)
+        head = buf.partition(b"\r\n\r\n")[0].decode()
+        assert int(head.split(" ", 2)[1]) == 503
+        headers = {k.strip().lower(): v.strip() for k, v in
+                   (ln.split(":", 1) for ln in head.split("\r\n")[1:]
+                    if ":" in ln)}
+        assert headers["retry-after"] == "3"
+    finally:
+        srv.shutdown(drain=False)
+
+
+def test_default_timeout_stamps_deadline_when_client_sets_none(toy):
+    """``ServerConfig.default_timeout_s`` becomes the request deadline
+    when the wire request carries no ``timeout``: with a 0-second default
+    an untimed request expires at its first scheduling opportunity, while
+    an explicit client timeout still overrides the default."""
+    ds, _, _ = toy
+    eng = _engine(toy)
+    srv = FrontDoorServer(eng, ServerConfig(realtime=False,
+                                            default_timeout_s=0.0)).start()
+    q = ds.pair(3)[0]
+    try:
+        untimed = SSEClient("127.0.0.1", srv.port, {"query": q}).drain()
+        assert untimed[0]["event"] == "accepted"
+        assert untimed[-1]["event"] == "done"
+        assert untimed[-1]["status"] == "expired"
+
+        timed = SSEClient("127.0.0.1", srv.port,
+                          {"query": q, "timeout": 1e9}).drain()
+        assert timed[-1]["status"] == "finished"
+    finally:
+        srv.shutdown(drain=False)

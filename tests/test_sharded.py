@@ -1,0 +1,286 @@
+"""Sharded serving: the fused megastep spanning a (data, model) device mesh.
+
+The contract that makes mesh serving safe to ship:
+
+  1. token identity: a request served on a (2, 2) host mesh — slot axes
+     and page pool sharded over 'data', params over 'model' — is
+     token-identical to the same-config single-device engine, for all
+     four modes (greedy / speculative / beam / speculative_beam), dense
+     AND paged caches, on both backends (seq2seq MT + decoder-only);
+  2. the megastep contract survives the mesh: steady state stays ONE
+     jitted donated dispatch per scheduler iteration, and ragged traffic
+     recompiles nothing after warmup;
+  3. shard-local exhaustion: a pool segment running dry preempts a victim
+     INSIDE the overflowing shard and replays the iteration — tokens
+     still identical to the ample single-device run;
+  4. placement: admission routes to the least-loaded shard (most pool
+     headroom), except a radix prefix hit routes the child to its
+     parent's shard first (aliasing stays shard-local);
+  5. mis-sized sessions (slots or pages not divisible across the data
+     shards) are rejected at construction, not discovered mid-serve.
+
+Runs on forced host devices (conftest exports
+``--xla_force_host_platform_device_count=8`` before jax initializes).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.mt import tiny_config
+from repro.data import SyntheticReactionDataset
+from repro.launch.mesh import make_serving_mesh
+from repro.models import seq2seq as s2s
+from repro.models import transformer as tr
+from repro.serving import EngineConfig, StreamingEngine
+
+MAX_NEW = 12
+MODES = ("greedy", "speculative", "beam", "speculative_beam")
+# two slots per mode group: the minimum that splits across data=2
+GROUPS = {m: 2 for m in MODES}
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_serving_mesh((2, 2))
+
+
+@pytest.fixture(scope="module")
+def mt_toy():
+    ds = SyntheticReactionDataset(16, seed=0)
+    cfg = tiny_config(ds.tokenizer.vocab_size, depth=2, d_model=64,
+                      max_len=192)
+    params = s2s.init(jax.random.PRNGKey(0), cfg)
+    return ds, cfg, params
+
+
+@pytest.fixture(scope="module")
+def decoder_toy():
+    cfg = get_config("smollm-135m", reduced=True)
+    params = tr.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(4, 500, size=L).astype(np.int32)
+               for L in (9, 17, 24, 5, 21, 13, 7, 11)]
+    return cfg, params, prompts
+
+
+def _mt_engine(mt_toy, **kw):
+    ds, cfg, params = mt_toy
+    base = dict(max_new=MAX_NEW, max_src=96, draft_len=3, n_drafts=4,
+                n_beams=2, mode_groups=dict(GROUPS))
+    base.update(kw)
+    return StreamingEngine(params, cfg, ds.tokenizer, EngineConfig(**base))
+
+
+def _decoder_engine(decoder_toy, **kw):
+    cfg, params, _ = decoder_toy
+    base = dict(max_new=MAX_NEW, max_src=28, draft_len=3, n_drafts=4,
+                n_beams=2, prefill_chunk=8, eos_id=2,
+                mode_groups=dict(GROUPS))
+    base.update(kw)
+    return StreamingEngine(params, cfg, None, EngineConfig(**base))
+
+
+def _jobs(queries):
+    return [(q, MODES[i % len(MODES)]) for i, q in enumerate(queries)]
+
+
+def _serve_jobs(eng, jobs):
+    rids = {eng.submit(q, mode=m, arrival=float(i)): (q, m)
+            for i, (q, m) in enumerate(jobs)}
+    return rids, eng.serve()
+
+
+def _assert_identical(ref_rids, ref_res, got_rids, got_res):
+    by_job_ref = {}
+    for rid, (q, m) in ref_rids.items():
+        by_job_ref[id(q), m] = ref_res[rid]
+    for rid, (q, m) in got_rids.items():
+        want = by_job_ref[id(q), m]
+        np.testing.assert_array_equal(np.asarray(got_res[rid].tokens),
+                                      np.asarray(want.tokens))
+        np.testing.assert_allclose(got_res[rid].logprobs, want.logprobs,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def _spans_devices(tree) -> bool:
+    return any(len(leaf.sharding.device_set) > 1
+               for leaf in jax.tree_util.tree_leaves(tree)
+               if hasattr(leaf, "sharding"))
+
+
+# ---------------------------------------------------------------------------
+# 1. token identity: every mode x dense/paged x both backends
+
+
+@pytest.mark.parametrize("paged_kw", [
+    pytest.param({}, id="dense"),
+    pytest.param(dict(paged=True, page_size=8), id="paged"),
+])
+def test_sharded_seq2seq_token_identity(mt_toy, mesh, paged_kw):
+    ds, _, _ = mt_toy
+    jobs = _jobs([ds.pair(i % 8)[0] for i in range(8)])
+    ref_rids, ref_res = _serve_jobs(_mt_engine(mt_toy, **paged_kw), jobs)
+    eng = _mt_engine(mt_toy, mesh=mesh, **paged_kw)
+    got_rids, got_res = _serve_jobs(eng, jobs)
+    _assert_identical(ref_rids, ref_res, got_rids, got_res)
+    stats = eng.shard_stats()
+    assert stats["n_shards"] == 2
+    assert all(n > 0 for n in stats["admitted_by_shard"]), stats
+
+
+@pytest.mark.parametrize("paged_kw", [
+    pytest.param({}, id="dense"),
+    pytest.param(dict(paged=True, page_size=8), id="paged"),
+])
+def test_sharded_decoder_token_identity(decoder_toy, mesh, paged_kw):
+    _, _, prompts = decoder_toy
+    jobs = _jobs(prompts)
+    ref_rids, ref_res = _serve_jobs(_decoder_engine(decoder_toy, **paged_kw),
+                                    jobs)
+    eng = _decoder_engine(decoder_toy, mesh=mesh, **paged_kw)
+    got_rids, got_res = _serve_jobs(eng, jobs)
+    _assert_identical(ref_rids, ref_res, got_rids, got_res)
+    # the identity is meaningful only if the session genuinely spans the
+    # mesh: session state sharded over 'data', params over 'model'
+    assert _spans_devices(eng.scheduler.state), \
+        "session state is not actually distributed"
+    assert _spans_devices(eng.params), \
+        "no parameter is actually model-sharded"
+
+
+# ---------------------------------------------------------------------------
+# 2. megastep contract on the mesh: one dispatch, zero recompiles
+
+
+def test_sharded_steady_state_one_dispatch_zero_recompile(decoder_toy, mesh):
+    cfg, params, prompts = decoder_toy
+    eng = StreamingEngine(params, cfg, None, EngineConfig(
+        mode="speculative", draft_len=3, n_drafts=4, max_new=MAX_NEW,
+        max_src=28, n_slots=4, prefill_chunk=8, eos_id=2,
+        paged=True, page_size=8, mesh=mesh))
+    eng.submit(prompts[0])
+    eng.serve()
+    stats = eng.loop_stats()
+    assert stats["n_iterations"] >= 3
+    # the admission iteration pays an admit dispatch and the terminal one
+    # a finish dispatch (chunked backend); every other iteration of the
+    # lone resident is the single fused (and now sharded) megastep
+    assert (stats["steady_iterations_one_dispatch"]
+            >= stats["n_iterations"] - 2), stats
+    assert stats["dispatches_per_iteration"] <= 2.0, stats
+    warm = dict(eng.n_traces)
+    assert warm["step"] == 1
+    rids = [eng.submit(p, arrival=float(i % 3))
+            for i, p in enumerate(prompts[1:6])]
+    res = eng.serve()
+    assert sorted(res) == sorted(rids)
+    assert dict(eng.n_traces) == warm, \
+        f"sharded ragged traffic retraced after warmup: " \
+        f"{warm} -> {eng.n_traces}"
+
+
+# ---------------------------------------------------------------------------
+# 3. shard-local exhaustion: preempt inside the shard, replay, identical
+
+
+def test_sharded_exhaustion_preempts_shard_local_and_replays(mt_toy, mesh):
+    ds, _, _ = mt_toy
+    queries = [ds.pair(i % 8)[0] for i in range(8)]
+    kw = dict(mode="speculative", draft_len=4, n_drafts=6, max_new=24,
+              max_src=96, n_slots=4)
+    _, cfg, params = mt_toy
+    dense = StreamingEngine(params, cfg, ds.tokenizer, EngineConfig(**kw))
+    # 26 usable pages per shard: above one slot's worst case (so both of
+    # a shard's slots admit), below two slots' combined growth — each
+    # shard's segment runs dry mid-decode and must preempt locally
+    eng = StreamingEngine(params, cfg, ds.tokenizer, EngineConfig(
+        paged=True, page_size=8, n_pages=52, mesh=mesh, **kw))
+    seen_shards = []
+    orig = eng.scheduler._preempt_youngest
+
+    def spy(prefer=None, shard=None):
+        seen_shards.append(shard)
+        return orig(prefer=prefer, shard=shard)
+
+    eng.scheduler._preempt_youngest = spy
+    a = dense.predict(queries)
+    b = eng.predict(queries)
+    assert [p.smiles[0] for p in a] == [p.smiles[0] for p in b]
+    assert eng.scheduler.n_preemptions > 0, \
+        "per-shard segments sized to force preempt-and-replay"
+    # every exhaustion names its overflowing shard: the victim search is
+    # shard-local, never a cross-shard eviction for a local shortage
+    assert seen_shards and all(s is not None for s in seen_shards), \
+        seen_shards
+    eng.allocator.check()
+
+
+# ---------------------------------------------------------------------------
+# 4. placement: least-loaded + prefix affinity
+
+
+def test_placement_prefers_least_loaded_shard(decoder_toy, mesh):
+    cfg, params, prompts = decoder_toy
+    eng = StreamingEngine(params, cfg, None, EngineConfig(
+        mode="speculative", draft_len=3, n_drafts=4, max_new=MAX_NEW,
+        max_src=28, n_slots=4, prefill_chunk=8, eos_id=2,
+        paged=True, page_size=8, mesh=mesh))
+    payload = eng._payload(prompts[0], "speculative")
+    free = list(range(4))          # slots 0-1 = shard 0, slots 2-3 = shard 1
+    eng._booked = []
+    eng._mirror_free_sh = [2, 500]
+    assert eng._place_slot("speculative", free, payload) == 2
+    eng._mirror_free_sh = [500, 2]
+    assert eng._place_slot("speculative", free, payload) == 0
+    # dense engines rank by resident count instead of pool headroom
+    dense = StreamingEngine(params, cfg, None, EngineConfig(
+        mode="greedy", max_new=MAX_NEW, max_src=28, n_slots=4,
+        prefill_chunk=8, eos_id=2, mesh=mesh))
+    assert dense._place_slot("greedy", [0, 1, 2, 3],
+                             dense._payload(prompts[0], "greedy")) == 0
+    assert dense._shard_order("greedy", payload, {0, 1}) == [0, 1]
+
+
+def test_placement_prefix_affinity_routes_to_parent_shard(decoder_toy, mesh):
+    cfg, params, _ = decoder_toy
+    eng = StreamingEngine(params, cfg, None, EngineConfig(
+        mode="speculative", draft_len=3, n_drafts=4, max_new=8,
+        max_src=40, n_slots=4, prefill_chunk=8, eos_id=2,
+        paged=True, page_size=8, prefix_cache=True, mesh=mesh))
+    rng = np.random.default_rng(7)
+    parent = rng.integers(4, 500, size=33).astype(np.int32)  # body = 4 pages
+    eng.submit(parent)
+    eng.serve()                     # parent's committed pages enter the radix
+    chain = eng.radix.peek(eng.backend.prompt_body(
+        eng._payload(parent, "speculative")[1]))
+    assert chain, "parent prefix never reached the radix cache"
+    parent_shard = eng.allocator.shard_of_page(chain[-1].page)
+    other = 1 - parent_shard
+    # bias the mirrors so least-loaded alone would pick the OTHER shard:
+    # the cached prefix must still win
+    mirrors = [0, 0]
+    mirrors[parent_shard], mirrors[other] = 5, 40
+    eng._booked = []
+    eng._mirror_free_sh = mirrors
+    order = eng._shard_order("speculative",
+                             eng._payload(parent, "speculative"), {0, 1})
+    assert order[0] == parent_shard, (order, parent_shard)
+
+
+# ---------------------------------------------------------------------------
+# 5. construction-time validation
+
+
+def test_mesh_rejects_indivisible_slots_and_pages(decoder_toy, mesh):
+    cfg, params, _ = decoder_toy
+    base = dict(mode="greedy", max_new=8, max_src=28, prefill_chunk=8,
+                eos_id=2)
+    with pytest.raises(ValueError, match="divid|shard"):
+        StreamingEngine(params, cfg, None, EngineConfig(
+            n_slots=3, mesh=mesh, **base))
+    with pytest.raises(ValueError, match="divid|shard"):
+        StreamingEngine(params, cfg, None, EngineConfig(
+            n_slots=4, paged=True, page_size=8, n_pages=31, mesh=mesh,
+            **base))
