@@ -130,6 +130,33 @@ def _gate_ceiling(
             )
 
 
+def _gate_floor(
+    new: dict,
+    metric: str,
+    floor: float,
+    unit: str,
+    failures: list[str],
+) -> None:
+    """Absolute floor gate on the NEW run only, for metrics with a fixed
+    ideal the run must reach regardless of baseline history (e.g. the
+    fleet kill drill's ``reroute_success_rate``, ideal 1.0): a failover
+    path that starts dropping queued requests must fail CI even on the
+    very first run that carries the metric. Modes without the metric are
+    skipped."""
+    fresh = _flat_metric(new, metric)
+    for key, now in sorted(fresh.items()):
+        verdict = "FAIL" if now < floor else "ok"
+        print(
+            f"  {key:24s} {metric} {now:8.3f} {unit:9s} "
+            f"floor   {floor:6.3f}   {verdict}"
+        )
+        if now < floor:
+            failures.append(
+                f"{key}: {metric} {now:.3f}{unit} is below the absolute "
+                f"floor {floor:.3f}"
+            )
+
+
 def compare(
     baseline: dict,
     new: dict,
@@ -142,6 +169,7 @@ def compare(
     slo_threshold: float | None = None,
     shed_threshold: float | None = None,
     imbalance_threshold: float | None = None,
+    reroute_threshold: float | None = None,
 ) -> list[str]:
     """Return a list of human-readable gate failures (empty = pass).
 
@@ -184,6 +212,13 @@ def compare(
     spreading admissions (least-loaded + prefix affinity broke) or one
     shard's page-pool segment is carrying the pool: a capacity regression
     even while aggregate req/s looks fine.
+
+    ``reroute_threshold``: ABSOLUTE floor on the fleet mode's
+    ``reroute_success_rate`` (the kill drill: reroutes that finished on a
+    surviving replica / reroutes attempted, ideal 1.0). Failover that
+    silently drops queued work is a correctness regression, so the floor
+    is absolute — it gates the first run that carries the metric, not
+    just drifts against a baseline.
 
     Config drift compares only the keys the BASELINE carries: a new
     benign bench field (added alongside a new mode/metric) must not force
@@ -283,6 +318,10 @@ def compare(
         _gate_ceiling(
             new, "page_balance", imbalance_threshold, " max/mean", failures
         )
+    if reroute_threshold is not None:
+        _gate_floor(
+            new, "reroute_success_rate", reroute_threshold, " ok/rr", failures
+        )
     return failures
 
 
@@ -352,6 +391,15 @@ def main() -> int:
         "disables; modes without the metrics are skipped)",
     )
     ap.add_argument(
+        "--reroute-threshold",
+        type=float,
+        default=1.0,
+        help="ABSOLUTE floor on the fleet kill drill's reroute_success_rate "
+        "(ideal 1.0; default 1.0 — every queued request killed mid-backlog "
+        "must finish on a surviving replica; negative disables; modes "
+        "without the metric are skipped)",
+    )
+    ap.add_argument(
         "--require",
         nargs="*",
         default=[],
@@ -391,6 +439,9 @@ def main() -> int:
         ),
         imbalance_threshold=(
             None if args.imbalance_threshold < 0 else args.imbalance_threshold
+        ),
+        reroute_threshold=(
+            None if args.reroute_threshold < 0 else args.reroute_threshold
         ),
     )
     if failures:

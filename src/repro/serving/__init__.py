@@ -1,7 +1,9 @@
 """Public serving surface. ``__all__`` is the stable API: request objects
 (``RequestSpec`` is THE request; ``submit()`` is sugar that builds one),
 lifecycle (``RequestStatus``, ``RequestRejected``), engines, the overload
-policy, and the network front door (``FrontDoorServer``)."""
+policy, the network front door (``FrontDoorServer``), and the fleet
+layer (``FleetRouter``: N replica front doors behind one wire-compatible
+router with health-aware failover and prefix-affine placement)."""
 
 from repro.serving.api import (MAX_STOP_IDS, GenerationParams,
                                RequestCancelled, RequestHandle,
@@ -12,6 +14,7 @@ from repro.serving.engine import (EngineConfig, Prediction, ReactionEngine,
                                   StreamingEngine)
 from repro.serving.scheduler import (ContinuousScheduler, OverloadPolicy,
                                      ScheduledRequest, SlotResult)
+from repro.serving.fleet import FleetConfig, FleetRouter
 from repro.serving.server import FrontDoorServer, ServerConfig
 
 __all__ = [
@@ -27,4 +30,6 @@ __all__ = [
     "RequestCancelled", "RequestRejected", "MAX_STOP_IDS",
     # network front door
     "FrontDoorServer", "ServerConfig",
+    # fleet layer
+    "FleetRouter", "FleetConfig",
 ]

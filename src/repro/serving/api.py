@@ -77,10 +77,13 @@ class RequestStatus(str, enum.Enum):
     format. A ``str`` subclass, so JSON serialization and equality against
     the literal value (``status == "finished"``) both work.
 
-    Terminal states: FINISHED | CANCELLED | EXPIRED | SHED.
+    Terminal states: FINISHED | CANCELLED | EXPIRED | SHED | LOST.
     Live states: QUEUED | RUNNING. UNKNOWN means "not in this session"
     (the engine was ``reset()`` or the terminal record aged out of the
-    bounded done-buffer)."""
+    bounded done-buffer). LOST is the fleet router's retryable terminal:
+    the replica serving the request died after tokens had already been
+    delivered, so a transparent reroute would duplicate the stream — the
+    client owns the retry (``retry_after`` rides on the wire event)."""
 
     QUEUED = "queued"
     RUNNING = "running"
@@ -88,6 +91,7 @@ class RequestStatus(str, enum.Enum):
     CANCELLED = "cancelled"
     EXPIRED = "expired"
     SHED = "shed"
+    LOST = "lost"
     UNKNOWN = "unknown"
 
     @property

@@ -27,6 +27,16 @@ single-threaded serving loop:
     tenant's in-flight requests at the server boundary; excess
     submissions get a ``rejected`` event with ``retry_after`` and never
     reach the engine.
+  - **Per-tenant rate limits**: ``ServerConfig.tenant_rate`` is a
+    token-bucket on submissions/second (burst size
+    ``ServerConfig.tenant_burst``), complementing the in-flight quota —
+    a quota caps concurrency, the bucket caps arrival *rate*, and a
+    planner that hammers the door between its own requests' completions
+    is throttled even though it never holds more than one slot. A
+    rate-limited submission gets a ``rejected`` event whose
+    ``retry_after`` is the bucket's actual refill time (when one whole
+    token will next be available), so a compliant client retries exactly
+    when it can succeed.
   - **Graceful drain** (``shutdown(drain=True)``): stop accepting (new
     connections get 503 + retry hint), shed the queued backlog through
     the scheduler's SHED path (each waiter receives a terminal ``done``
@@ -41,6 +51,7 @@ Wire events (one JSON object per SSE ``data:`` frame / NDJSON line):
                        "lengths":[...], "logprobs":[...], "text":"..."}
   {"event":"done",     "rid":8, "status":"shed", "retry_after":24.0}
   {"event":"rejected", "error":"quota", "tenant":"t1", "retry_after":1.0}
+  {"event":"rejected", "error":"rate",  "tenant":"t1", "retry_after":0.4}
 
 Request fields (``POST /v1/generate`` JSON body, or the NDJSON object
 with ``"op":"generate"``): ``query`` (string, or a list of token ids for
@@ -65,6 +76,7 @@ import json
 import math
 import queue
 import threading
+import time
 from typing import Any
 
 import numpy as np
@@ -85,7 +97,13 @@ class ServerConfig:
     cancelled). ``tenant_quota``: max in-flight requests per tenant — an
     int applies to every tenant, a dict sets per-tenant caps (missing
     tenants unlimited); None disables quotas. ``quota_retry_after``: the
-    retry hint attached to quota rejections. ``drain_retry_after``: the
+    retry hint attached to quota rejections. ``tenant_rate``: token-bucket
+    rate limit in submissions/second — an int/float applies to every
+    tenant, a dict sets per-tenant rates (missing tenants unlimited);
+    None disables rate limiting. ``tenant_burst``: bucket capacity in
+    whole submissions (same scalar-or-dict shape; default: one second's
+    worth of tokens, at least 1) — a burst this size passes at line rate
+    before the limiter bites. ``drain_retry_after``: the
     hint attached to 503s while draining. ``default_timeout_s``: deadline
     applied to requests whose client set no ``timeout`` (serving-clock
     seconds, stamped absolute at submission exactly like a client
@@ -99,12 +117,61 @@ class ServerConfig:
     max_buffered_events: int = 256
     tenant_quota: dict[str, int] | int | None = None
     quota_retry_after: float = 1.0
+    tenant_rate: dict[str, float] | float | None = None
+    tenant_burst: dict[str, float] | float | None = None
     drain_retry_after: float = 5.0
     default_timeout_s: float | None = None
     writer_delay_s: float = 0.0
 
 
 _PARAM_KEYS = ("max_new", "draft_len", "n_drafts", "n_beams")
+
+# shared transport helpers — the fleet router (repro.serving.fleet.router)
+# speaks the identical wire protocol on its front side, so the HTTP/SSE
+# plumbing lives at module level rather than on the server class
+
+SSE_PREAMBLE = (b"HTTP/1.1 200 OK\r\n"
+                b"Content-Type: text/event-stream\r\n"
+                b"Cache-Control: no-cache\r\n"
+                b"Connection: close\r\n\r\n")
+
+
+async def read_http(first: bytes, reader) -> tuple[str, str, dict, bytes]:
+    """Parse one HTTP/1.1 request (whose first byte was already read):
+    ``(method, path, lower-cased headers, body)``."""
+    head = first + await reader.readuntil(b"\r\n\r\n")
+    req_line, *header_lines = head.decode("latin-1").split("\r\n")
+    method, path, _ = (req_line.split(" ") + ["", ""])[:3]
+    headers = {}
+    for h in header_lines:
+        if ":" in h:
+            k, v = h.split(":", 1)
+            headers[k.strip().lower()] = v.strip()
+    body = b""
+    n = int(headers.get("content-length", 0) or 0)
+    if n:
+        body = await reader.readexactly(n)
+    return method, path, headers, body
+
+
+def respond_json(writer, payload: dict, status: int = 200) -> None:
+    """One-shot JSON response. 503s with a ``retry_after`` additionally
+    carry it as a standard ``Retry-After`` header (RFC 9110 §10.2.3
+    delta-seconds, rounded UP so a compliant client never retries before
+    the JSON body's float hint)."""
+    body = json.dumps(payload).encode()
+    reason = {200: "OK", 404: "Not Found",
+              503: "Service Unavailable"}.get(status, "OK")
+    extra = ""
+    if status == 503 and payload.get("retry_after") is not None:
+        extra = (f"Retry-After: "
+                 f"{math.ceil(float(payload['retry_after']))}\r\n")
+    writer.write(
+        f"HTTP/1.1 {status} {reason}\r\n"
+        f"Content-Type: application/json\r\n"
+        f"Content-Length: {len(body)}\r\n"
+        f"{extra}"
+        f"Connection: close\r\n\r\n".encode() + body)
 
 
 def parse_spec(req: dict) -> RequestSpec:
@@ -119,6 +186,30 @@ def parse_spec(req: dict) -> RequestSpec:
     return RequestSpec(query=query, params=params, mode=req.get("mode"),
                        priority=int(req.get("priority", 0)),
                        deadline=None, tenant=req.get("tenant"))
+
+
+class _TokenBucket:
+    """Per-tenant submission rate limiter (drive thread only). Classic
+    token bucket: ``rate`` tokens/second refill up to ``burst``; one whole
+    token buys one submission. ``take()`` returns 0.0 on success or the
+    exact time until a whole token will exist — the ``retry_after`` a
+    rejected client should honor."""
+
+    def __init__(self, rate: float, burst: float):
+        self.rate = float(rate)
+        self.burst = max(1.0, float(burst))
+        self.level = self.burst
+        self.t: float | None = None
+
+    def take(self, now: float) -> float:
+        if self.t is None:
+            self.t = now
+        self.level = min(self.burst, self.level + (now - self.t) * self.rate)
+        self.t = now
+        if self.level >= 1.0:
+            self.level -= 1.0
+            return 0.0
+        return (1.0 - self.level) / self.rate
 
 
 class _Conn:
@@ -174,10 +265,13 @@ class FrontDoorServer:
         # informational)
         self.n_accepted = 0
         self.n_quota_rejected = 0
+        self.n_rate_limited = 0
         self.n_slow_disconnects = 0
         self._cmds: queue.Queue = queue.Queue()
         self._subs: dict[int, dict] = {}     # drive thread: rid -> sub
         self._inflight: dict[str, int] = {}  # drive thread: tenant -> n
+        self._buckets: dict[str, _TokenBucket] = {}  # drive thread
+        self._bucket_clock = time.monotonic  # tests may inject a fake clock
         self._accepting = True
         self._draining = False
         self._closed = False
@@ -244,12 +338,25 @@ class FrontDoorServer:
         if self._loop is not None:
             loop = self._loop
 
-            def _close():
+            async def _close():
                 if self._server is not None:
                     self._server.close()
+                # cancel live connection handlers so their transports
+                # actually close: a peer (client or fleet router) must
+                # see EOF on a hard stop, the same signal a process kill
+                # produces, not a socket that hangs open forever
+                tasks = [t for t in asyncio.all_tasks()
+                         if t is not asyncio.current_task()]
+                for t in tasks:
+                    t.cancel()
+                await asyncio.gather(*tasks, return_exceptions=True)
+                await asyncio.sleep(0)   # let transport-close callbacks run
                 loop.stop()
 
-            loop.call_soon_threadsafe(_close)
+            try:
+                asyncio.run_coroutine_threadsafe(_close(), loop)
+            except RuntimeError:
+                pass   # loop already torn down
         if self._loop_thread is not None:
             self._loop_thread.join(timeout=10.0)
 
@@ -278,18 +385,7 @@ class FrontDoorServer:
                 pass
 
     async def _serve_http(self, first: bytes, reader, writer) -> None:
-        head = first + await reader.readuntil(b"\r\n\r\n")
-        req_line, *header_lines = head.decode("latin-1").split("\r\n")
-        method, path, _ = (req_line.split(" ") + ["", ""])[:3]
-        headers = {}
-        for h in header_lines:
-            if ":" in h:
-                k, v = h.split(":", 1)
-                headers[k.strip().lower()] = v.strip()
-        body = b""
-        n = int(headers.get("content-length", 0) or 0)
-        if n:
-            body = await reader.readexactly(n)
+        method, path, _, body = await read_http(first, reader)
         if method == "POST" and path == "/v1/generate":
             await self._stream_request(json.loads(body or b"{}"), writer,
                                        sse=True)
@@ -324,10 +420,7 @@ class FrontDoorServer:
                      "retry_after": self.cfg.drain_retry_after},
                     status=503)
                 return
-            writer.write(b"HTTP/1.1 200 OK\r\n"
-                         b"Content-Type: text/event-stream\r\n"
-                         b"Cache-Control: no-cache\r\n"
-                         b"Connection: close\r\n\r\n")
+            writer.write(SSE_PREAMBLE)
         conn = _Conn(self, sse=sse)
         if not self._accepting:   # NDJSON drain refusal, as an event
             conn.deliver({"event": "rejected", "error": "draining",
@@ -363,22 +456,7 @@ class FrontDoorServer:
 
     def _respond_json(self, writer, payload: dict,
                       status: int = 200) -> None:
-        body = json.dumps(payload).encode()
-        reason = {200: "OK", 404: "Not Found",
-                  503: "Service Unavailable"}.get(status, "OK")
-        extra = ""
-        if status == 503 and payload.get("retry_after") is not None:
-            # standard Retry-After delta-seconds (RFC 9110 §10.2.3),
-            # rounded UP so a compliant client never retries before the
-            # JSON body's float hint
-            extra = (f"Retry-After: "
-                     f"{math.ceil(float(payload['retry_after']))}\r\n")
-        writer.write(
-            f"HTTP/1.1 {status} {reason}\r\n"
-            f"Content-Type: application/json\r\n"
-            f"Content-Length: {len(body)}\r\n"
-            f"{extra}"
-            f"Connection: close\r\n\r\n".encode() + body)
+        respond_json(writer, payload, status)
 
     # --------------------------------------------- drive thread (the engine)
     def _drive(self) -> None:
@@ -416,6 +494,13 @@ class FrontDoorServer:
                                   "retry_after": self.cfg.quota_retry_after})
                 self._post(conn, None)
                 return
+            wait = self._rate_take(tenant)
+            if wait > 0.0:
+                self.n_rate_limited += 1
+                self._post(conn, {"event": "rejected", "error": "rate",
+                                  "tenant": tenant, "retry_after": wait})
+                self._post(conn, None)
+                return
             if timeout is None:
                 timeout = self.cfg.default_timeout_s
             if timeout is not None:
@@ -442,6 +527,26 @@ class FrontDoorServer:
             return True
         cap = q if isinstance(q, int) else q.get(tenant)
         return cap is None or self._inflight.get(tenant, 0) < cap
+
+    def _rate_take(self, tenant: str | None) -> float:
+        """Charge the tenant's token bucket for one submission. Returns
+        0.0 (granted) or the refill-derived ``retry_after``."""
+        rates = self.cfg.tenant_rate
+        if rates is None or tenant is None:
+            return 0.0
+        rate = rates if isinstance(rates, (int, float)) else \
+            rates.get(tenant)
+        if rate is None or rate <= 0.0:
+            return 0.0
+        bucket = self._buckets.get(tenant)
+        if bucket is None:
+            bursts = self.cfg.tenant_burst
+            burst = (bursts if isinstance(bursts, (int, float))
+                     else (bursts or {}).get(tenant))
+            bucket = _TokenBucket(rate, float(rate) if burst is None
+                                  else burst)
+            self._buckets[tenant] = bucket
+        return bucket.take(self._bucket_clock())
 
     def _emit(self) -> None:
         """Drain every subscription's stream sink into its connection,
@@ -490,21 +595,48 @@ class FrontDoorServer:
 
     # ----------------------------------------------------------------- info
     def stats(self) -> dict:
-        sch = self.engine.scheduler
+        """Server + engine observability, served on ``GET /v1/stats`` /
+        ``{"op":"stats"}``. Beyond the door's own counters this surfaces
+        the engine's load shape — ``occupancy`` ((resident + queued) /
+        n_slots), ``shed_rate`` (shed / offered) — plus the full
+        ``shard_stats()`` / ``prefix_stats()`` / overload counters, which
+        is exactly what the fleet router's placement policy consumes
+        (``repro.serving.fleet``); it is equally useful standalone (one
+        curl shows whether a replica is shedding, thrashing preemptions,
+        or missing its prefix cache)."""
+        eng = self.engine
+        sch = eng.scheduler
+        resident = len(sch._resident)
+        offered = self.n_accepted + sch.n_shed
         return {
             "accepted": self.n_accepted,
             "quota_rejected": self.n_quota_rejected,
+            "rate_limited": self.n_rate_limited,
             "slow_disconnects": self.n_slow_disconnects,
             "inflight": dict(self._inflight),
             "accepting": self._accepting,
-            "draining": self._draining,
+            "draining": self._draining or sch.draining,
             "queued": sch.queued,
-            "resident": len(sch._resident),
+            "resident": resident,
+            "n_slots": eng.n_slots,
+            "occupancy": (resident + sch.queued) / max(1, eng.n_slots),
+            "shed_rate": sch.n_shed / max(1, offered),
             "n_steps": sch.n_steps,
             "n_shed": sch.n_shed,
             "n_cancelled": sch.n_cancelled,
             "n_expired": sch.n_expired,
             "n_preemptions": sch.n_preemptions,
+            "shard_stats": eng.shard_stats(),
+            "prefix_stats": eng.prefix_stats(),
+            "overload": {
+                "n_preemptions": sch.n_preemptions,
+                "n_expired": sch.n_expired,
+                "n_shed": sch.n_shed,
+                "max_resident": sch.max_resident,
+                "aging_rate": sch.policy.aging_rate,
+                "shed_depth": sch.policy.shed_depth,
+                "deadline_preemption": sch.policy.deadline_preemption,
+            },
         }
 
 

@@ -256,6 +256,111 @@ def test_tenant_quota_rejects_at_the_door(toy):
 
 
 # ---------------------------------------------------------------------------
+# 4b. per-tenant token-bucket rate limits
+
+
+def test_tenant_rate_limit_rejects_with_refill_retry_after(toy):
+    """The token bucket caps arrival RATE (the quota caps concurrency):
+    with rate=0.5/s and burst=1, the first submission passes, the second
+    is rejected with ``retry_after`` equal to the bucket's actual refill
+    time, and advancing the (injected) clock past the refill admits
+    again. A tenant without a configured rate is untouched."""
+    ds, _, _ = toy
+    eng = _engine(toy)
+    srv = FrontDoorServer(eng, ServerConfig(
+        realtime=False, tenant_rate={"acme": 0.5},
+        tenant_burst={"acme": 1})).start()
+    clk = {"t": 0.0}
+    srv._bucket_clock = lambda: clk["t"]
+    q = ds.pair(1)[0]
+    try:
+        first = sse_events("127.0.0.1", srv.port,
+                           {"query": q, "tenant": "acme"})
+        assert first[-1]["status"] == "finished"
+
+        rej = sse_events("127.0.0.1", srv.port,
+                         {"query": q, "tenant": "acme"})
+        assert rej == [{"event": "rejected", "error": "rate",
+                        "tenant": "acme", "retry_after": 2.0}]
+        assert srv.n_rate_limited == 1
+
+        # an unconfigured tenant is not throttled by acme's bucket
+        zen = sse_events("127.0.0.1", srv.port,
+                         {"query": q, "tenant": "zen"})
+        assert zen[-1]["status"] == "finished"
+
+        clk["t"] = 2.0          # exactly the advertised refill
+        again = sse_events("127.0.0.1", srv.port,
+                           {"query": q, "tenant": "acme"})
+        assert again[-1]["status"] == "finished"
+    finally:
+        srv.shutdown(drain=False)
+
+
+def test_rate_limit_burst_passes_at_line_rate(toy):
+    """A burst-sized volley is admitted before the limiter bites, and the
+    rejection's retry_after reflects the partially-refilled bucket."""
+    ds, _, _ = toy
+    eng = _engine(toy)
+    srv = FrontDoorServer(eng, ServerConfig(
+        realtime=False, tenant_rate=2.0, tenant_burst=3.0)).start()
+    clk = {"t": 0.0}
+    srv._bucket_clock = lambda: clk["t"]
+    q = ds.pair(2)[0]
+    try:
+        for _ in range(3):
+            evs = sse_events("127.0.0.1", srv.port,
+                             {"query": q, "tenant": "burst"})
+            assert evs[-1]["status"] == "finished"
+        rej = sse_events("127.0.0.1", srv.port,
+                         {"query": q, "tenant": "burst"})
+        assert rej[0]["error"] == "rate"
+        assert rej[0]["retry_after"] == 0.5      # (1 - 0) / rate
+    finally:
+        srv.shutdown(drain=False)
+
+
+# ---------------------------------------------------------------------------
+# 4c. /v1/stats: the replica surface the fleet router consumes
+
+
+def test_stats_expose_engine_load_shape_and_shard_prefix_counters(toy):
+    """``/v1/stats`` must carry the placement signals (occupancy,
+    shed_rate, n_slots, accepting/draining) plus the engine's
+    ``shard_stats()`` / ``prefix_stats()`` / overload counters — the
+    exact surface ``repro.serving.fleet`` probes."""
+    ds, _, _ = toy
+    eng = _engine(toy)
+    srv = FrontDoorServer(eng, ServerConfig(realtime=False)).start()
+    try:
+        done = sse_events("127.0.0.1", srv.port, {"query": ds.pair(4)[0]})
+        assert done[-1]["status"] == "finished"
+        with socket.create_connection(("127.0.0.1", srv.port),
+                                      timeout=10) as s:
+            s.sendall(json.dumps({"op": "stats"}).encode() + b"\n")
+            buf = b""
+            while not buf.endswith(b"\n"):
+                chunk = s.recv(65536)
+                if not chunk:
+                    break
+                buf += chunk
+        stats = json.loads(buf)
+        assert stats["accepted"] == 1 and stats["accepting"] is True
+        assert stats["n_slots"] == 1 and stats["resident"] == 0
+        assert stats["occupancy"] == 0.0 and stats["shed_rate"] == 0.0
+        assert stats["rate_limited"] == 0
+        assert isinstance(stats["shard_stats"], (list, dict))
+        assert isinstance(stats["prefix_stats"], dict)
+        ov = stats["overload"]
+        for key in ("n_preemptions", "n_expired", "n_shed",
+                    "max_resident", "aging_rate", "shed_depth",
+                    "deadline_preemption"):
+            assert key in ov
+    finally:
+        srv.shutdown(drain=False)
+
+
+# ---------------------------------------------------------------------------
 # 5. graceful drain over the wire
 
 
